@@ -1,0 +1,94 @@
+"""Pallas-kernel micro-benches: allclose error vs ref + µs/call.
+
+interpret=True on CPU — numbers validate correctness and harness overhead,
+NOT TPU performance (the kernels lower to Mosaic on real TPUs; their VMEM
+working sets are chosen in the kernel files)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list[dict]:
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    b, s, h, kv, d = 1, 512, 4, 2, 64
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    out = ops.flash_attention(q, k, v, interpret=True)
+    want = ref.attention_ref(q, k, v)
+    rows.append({
+        "kernel": "flash_attention", "shape": f"{b}x{s}x{h}x{d} gqa{h//kv}",
+        "max_err": float(jnp.abs(out - want).max()),
+        "us_per_call_interpret": _time(
+            lambda *a: ops.flash_attention(*a, interpret=True), q, k, v),
+    })
+
+    r = jax.random.normal(ks[3], (1, 256, 2, 64)) * 0.5
+    kk = jax.random.normal(ks[4], (1, 256, 2, 64)) * 0.5
+    vv = jax.random.normal(ks[5], (1, 256, 2, 64)) * 0.5
+    logw = -jnp.exp(jax.random.uniform(ks[6], (1, 256, 2, 64),
+                                       minval=-7.0, maxval=-0.7))
+    u = jax.random.normal(ks[7], (2, 64)) * 0.3
+    out = ops.wkv6(r, kk, vv, logw, u, interpret=True)
+    want = ref.wkv6_ref(r, kk, vv, logw, u)
+    rows.append({
+        "kernel": "wkv6", "shape": "1x256x2x64",
+        "max_err": float(jnp.abs(out - want).max()),
+        "us_per_call_interpret": _time(
+            lambda *a: ops.wkv6(*a, interpret=True), r, kk, vv, logw, u),
+    })
+
+    x = jax.random.normal(ks[0], (1, 256, 4, 64)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 256, 4)) - 1.0)
+    A = -jnp.exp(jax.random.normal(ks[2], (4,)) * 0.3)
+    B = jax.random.normal(ks[3], (1, 256, 1, 32)) * 0.5
+    C = jax.random.normal(ks[4], (1, 256, 1, 32)) * 0.5
+    D = jnp.ones((4,))
+    out = ops.mamba2_ssd(x, dt, A, B, C, D, interpret=True)
+    want = ref.ssd_ref(x, dt, A, B, C, D)
+    rows.append({
+        "kernel": "mamba2_ssd", "shape": "1x256x4x64 n32",
+        "max_err": float(jnp.abs(out - want).max()),
+        "us_per_call_interpret": _time(
+            lambda *a: ops.mamba2_ssd(*a, interpret=True),
+            x, dt, A, B, C, D),
+    })
+
+    q1 = jax.random.normal(ks[5], (2, 1, 4, 64))
+    kc = jax.random.normal(ks[6], (2, 1024, 2, 64))
+    vc = jax.random.normal(ks[7], (2, 1024, 2, 64))
+    clen = jnp.array([700, 300], jnp.int32)
+    out = ops.decode_attention(q1, kc, vc, clen, interpret=True)
+    want = ref.decode_attention_ref(jnp.swapaxes(q1, 1, 2)[:, :, 0],
+                                    jnp.swapaxes(kc, 1, 2),
+                                    jnp.swapaxes(vc, 1, 2), clen)
+    rows.append({
+        "kernel": "decode_attention", "shape": "2x1024x4x64",
+        "max_err": float(jnp.abs(out[:, 0] - want).max()),
+        "us_per_call_interpret": _time(
+            lambda *a: ops.decode_attention(*a, interpret=True),
+            q1, kc, vc, clen),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

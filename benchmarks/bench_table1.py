@@ -1,0 +1,85 @@
+"""Paper Table 1 — runtime-prediction error of the log-linear profiler.
+
+Faithful methodology reproduction with REAL measured runtimes: a real JAX
+MLP training job (the paper's MNIST task, synthetic data) is profiled over
+a grid of (epochs x hidden x batch); the log-linear model is fit on the
+grid and evaluated on an EXTRAPOLATED grid (the paper trains on epochs
+{1,2,3} and evaluates on {5,10,20}), against the paper's averaging
+baseline. Paper reports: L1 224.82 s vs 2105.71 s baseline, 98 % variance
+explained. We report the same three numbers on our task.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.provision.profiler import CommandTemplate, LogLinearModel
+
+
+def _mlp_job(epochs: int, hidden: int, batch: int, *, steps_per_epoch=30,
+             dim=784, classes=10, seed=0) -> float:
+    """One real training run; returns wall seconds."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    w1 = jax.random.normal(k1, (dim, hidden)) * 0.05
+    w2 = jax.random.normal(k2, (hidden, classes)) * 0.05
+    x = jax.random.normal(k3, (batch * steps_per_epoch, dim))
+    y = jax.random.randint(k4, (batch * steps_per_epoch,), 0, classes)
+
+    @jax.jit
+    def step(w1, w2, xb, yb):
+        def loss(w1, w2):
+            logits = jnp.tanh(xb @ w1) @ w2
+            return -jnp.mean(jax.nn.log_softmax(logits)[
+                jnp.arange(xb.shape[0]), yb])
+        g1, g2 = jax.grad(loss, argnums=(0, 1))(w1, w2)
+        return w1 - 0.1 * g1, w2 - 0.1 * g2
+
+    # warmup/compile outside the measured window
+    w1, w2 = step(w1, w2, x[:batch], y[:batch])
+    jax.block_until_ready(w1)
+    t0 = time.perf_counter()
+    for e in range(epochs):
+        for s in range(steps_per_epoch):
+            lo = s * batch
+            w1, w2 = step(w1, w2, x[lo:lo + batch], y[lo:lo + batch])
+    jax.block_until_ready(w1)
+    return time.perf_counter() - t0
+
+
+TEMPLATE = CommandTemplate(
+    name="mlp-train",
+    hints={"epochs": [1, 2, 3]},
+    resource_hints={"hidden": [64, 128, 256], "batch": [32, 64, 128]})
+
+EVAL_GRID = [{"epochs": e, "hidden": h, "batch": b}
+             for e in (5, 8) for h in (96, 192, 384) for b in (48, 96, 192)]
+
+
+def run() -> dict:
+    grid = TEMPLATE.grid()
+    runtimes = [_mlp_job(int(c["epochs"]), int(c["hidden"]),
+                         int(c["batch"])) for c in grid]
+    model = LogLinearModel(TEMPLATE.feature_names).fit(grid, runtimes)
+    true = np.array([_mlp_job(int(c["epochs"]), int(c["hidden"]),
+                              int(c["batch"])) for c in EVAL_GRID])
+    pred = model.predict_many(EVAL_GRID)
+    ours = LogLinearModel.errors(pred, true)
+    base = LogLinearModel.errors(np.full_like(true, true.mean()), true)
+    return {
+        "table": "1 (runtime prediction)",
+        "train_trials": len(grid), "eval_trials": len(EVAL_GRID),
+        "mean_eval_runtime_s": float(true.mean()),
+        "loglinear_l1_s": ours["l1"], "loglinear_l2_s2": ours["l2"],
+        "averaging_l1_s": base["l1"], "averaging_l2_s2": base["l2"],
+        "variance_explained": ours["variance_explained"],
+        "paper_variance_explained": 0.98,
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

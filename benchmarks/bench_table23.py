@@ -1,0 +1,145 @@
+"""Paper Tables 2 & 3 — auto-provisioned resource configs vs baseline.
+
+TPU adaptation of the paper's MNIST experiment: the job is "train qwen3-8b
+for N steps at train_4k"; resources are (chips, per-chip HBM GB) under the
+linear-unit-price TPU pricing. The profiling fleet runs through the REAL
+execution engine (virtual clock, 95 % quorum) against the roofline oracle;
+the log-linear model is fit on the explored grid exactly as §4.2.2; the
+auto-provisioner then
+  Table 2: fixes max cost = baseline cost, optimizes runtime (paper: 1.7x)
+  Table 3: fixes max runtime = baseline runtime, optimizes cost (paper:
+           35–39 % saving)
+Baseline config = 32 chips / 16 GB (the "n1-standard-2 of pods").
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.oracle import job_time
+from repro.configs.base import get_arch
+from repro.configs.shapes import get_shape
+from repro.core.acai import AcaiPlatform
+from repro.core.engine.registry import JobSpec
+from repro.core.provision.autoprovision import AutoProvisioner
+from repro.core.provision.pricing import TPU_PRICING
+from repro.core.provision.profiler import CommandTemplate
+
+ARCH = "qwen3-8b"
+SHAPE = "train_4k"
+
+TEMPLATE = CommandTemplate(
+    name="qwen3-8b-train",
+    hints={"steps": [50, 100, 200]},
+    resource_hints={"chips": [8, 32, 128], "hbm_gb": [4, 8, 16]})
+
+# the "n1-standard-2 of pods": a balanced default that over-reserves HBM —
+# mirroring the paper's baseline (2 vCPU + 7.5 GB) whose memory the MNIST
+# job never used. The provisioner should trade HBM down for chips up.
+BASELINE = {"chips": 32, "hbm_gb": 16}
+EVAL_STEPS = [200, 500]
+
+
+def _true_runtime(cfg_dict, rng=None, noise=0.0):
+    cfg = get_arch(ARCH)
+    shape = get_shape(SHAPE)
+    return job_time(cfg, shape, cfg_dict["steps"], cfg_dict["chips"],
+                    cfg_dict["hbm_gb"], rng, noise)
+
+
+def run(seed: int = 0, noise: float = 0.05) -> dict:
+    rng = np.random.default_rng(seed)
+    plat = AcaiPlatform("/tmp/acai-bench23", virtual=True, quota_k=10_000,
+                        pricing=TPU_PRICING,
+                        oracle=lambda job: _true_runtime(job.spec.args,
+                                                         rng, noise))
+    admin = plat.create_project(plat.admin_token, f"bench23-{seed}")
+    profiler = plat.make_profiler(admin)
+
+    class _Eng:
+        registry = plat.engine(admin).registry
+        scheduler = plat.engine(admin).scheduler
+
+        @staticmethod
+        def submit(spec):
+            return plat.submit_job(admin, spec)
+
+    profiler.engine = _Eng()
+    profiler.profile(TEMPLATE, lambda cfg: JobSpec(
+        name="prof", project="", user="", args=cfg,
+        resources={k: cfg[k] for k in ("chips", "hbm_gb")}))
+    ap = AutoProvisioner(profiler, TPU_PRICING)
+
+    rows = []
+    measure = lambda cfg: _true_runtime(cfg, rng, noise)
+    for steps in EVAL_STEPS:
+        values = {"steps": steps}
+        t_base = _true_runtime({**values, **BASELINE})
+        c_base = TPU_PRICING.job_cost(BASELINE, t_base)
+        # Table 2: fix cost, optimize runtime — with active refinement
+        # (the plain paper search extrapolates past the collective wall
+        # and overshoots the budget; refinement measures + refits)
+        d2, hist2 = ap.refined_search(TEMPLATE.name, values,
+                                      measure_fn=measure,
+                                      objective="runtime",
+                                      max_cost=c_base)
+        t2_true = _true_runtime({**values, **d2.resources}) \
+            if d2.feasible else float("nan")
+        c2_true = TPU_PRICING.job_cost(d2.resources, t2_true) \
+            if d2.feasible else float("nan")
+        # Table 3: fix runtime, optimize cost
+        d3, hist3 = ap.refined_search(TEMPLATE.name, values,
+                                      measure_fn=measure,
+                                      objective="cost",
+                                      max_runtime=t_base)
+        t3_true = _true_runtime({**values, **d3.resources}) \
+            if d3.feasible else float("nan")
+        c3_true = TPU_PRICING.job_cost(d3.resources, t3_true) \
+            if d3.feasible else float("nan")
+        rows.append({
+            "steps": steps,
+            "baseline": dict(BASELINE), "baseline_runtime_s": t_base,
+            "baseline_cost": c_base,
+            "t2_resources": d2.resources, "t2_runtime_s": t2_true,
+            "t2_cost": c2_true,
+            "t2_speedup": t_base / t2_true if d2.feasible else None,
+            "t3_resources": d3.resources, "t3_runtime_s": t3_true,
+            "t3_cost": c3_true,
+            "t3_cost_saving": 1 - c3_true / c_base if d3.feasible else None,
+            "t2_within_budget": bool(d2.feasible and c2_true
+                                     <= c_base * 1.02),
+            "t2_refinement_rounds": len(hist2),
+            "t3_refinement_rounds": len(hist3),
+        })
+    return {"table": "2+3 (auto-provisioning)", "arch": ARCH,
+            "paper_speedup": 1.74, "paper_cost_saving": 0.388,
+            "rows": rows}
+
+
+def run_multi(n_seeds: int = 3, noise: float = 0.05) -> dict:
+    """Noise makes single-seed refinement decisions jumpy (the paper also
+    averages 3 runs per cell) — aggregate across seeds."""
+    import numpy as _np
+    runs = [run(seed=s, noise=noise) for s in range(n_seeds)]
+    rows = []
+    for i, steps in enumerate(EVAL_STEPS):
+        sp = [r["rows"][i]["t2_speedup"] for r in runs
+              if r["rows"][i]["t2_speedup"]]
+        sv = [r["rows"][i]["t3_cost_saving"] for r in runs
+              if r["rows"][i]["t3_cost_saving"] is not None]
+        ib = [r["rows"][i]["t2_within_budget"] for r in runs]
+        rows.append({"steps": steps,
+                     "t2_speedup": float(_np.mean(sp)) if sp else None,
+                     "t2_runtime_s": runs[0]["rows"][i]["t2_runtime_s"],
+                     "t3_runtime_s": runs[0]["rows"][i]["t3_runtime_s"],
+                     "t3_cost_saving": float(_np.mean(sv)) if sv else None,
+                     "t2_within_budget": all(ib),
+                     "per_seed_speedups": sp, "per_seed_savings": sv})
+    return {"table": "2+3 (auto-provisioning, mean of %d seeds)" % n_seeds,
+            "arch": ARCH, "paper_speedup": 1.74,
+            "paper_cost_saving": 0.388, "rows": rows,
+            "per_seed": [r["rows"] for r in runs]}
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

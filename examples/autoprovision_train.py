@@ -1,0 +1,84 @@
+"""The paper's flagship feature on the TPU grid: profile a training job
+template with a (virtual) fleet through the execution engine, fit the
+log-linear runtime model, then auto-provision under a cost cap and under a
+deadline — including the beyond-paper active-refinement loop.
+
+    PYTHONPATH=src python examples/autoprovision_train.py
+"""
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+
+from benchmarks.oracle import job_time
+from repro.configs.base import get_arch
+from repro.configs.shapes import get_shape
+from repro.core.acai import AcaiPlatform
+from repro.core.engine.registry import JobSpec
+from repro.core.provision.autoprovision import AutoProvisioner
+from repro.core.provision.pricing import TPU_PRICING
+from repro.core.provision.profiler import CommandTemplate
+
+ARCH, SHAPE = "qwen3-8b", "train_4k"
+
+
+def main():
+    rng = np.random.default_rng(0)
+    cfg, shape = get_arch(ARCH), get_shape(SHAPE)
+
+    def true_runtime(c):
+        return job_time(cfg, shape, c["steps"], c["chips"], c["hbm_gb"],
+                        rng, noise=0.05)
+
+    plat = AcaiPlatform(tempfile.mkdtemp(), virtual=True, quota_k=1000,
+                        pricing=TPU_PRICING,
+                        oracle=lambda job: true_runtime(job.spec.args))
+    admin = plat.create_project(plat.admin_token, "provision-demo")
+    profiler = plat.make_profiler(admin)
+
+    class Eng:
+        registry = plat.engine(admin).registry
+        scheduler = plat.engine(admin).scheduler
+        submit = staticmethod(lambda spec: plat.submit_job(admin, spec))
+
+    profiler.engine = Eng()
+
+    template = CommandTemplate(
+        name=f"{ARCH}-train",
+        hints={"steps": [50, 100, 200]},
+        resource_hints={"chips": [8, 32, 128], "hbm_gb": [4, 8, 16]})
+    print(f"profiling fleet: {len(template.grid())} jobs (95% quorum)...")
+    profiler.profile(template, lambda c: JobSpec(
+        name="prof", project="", user="", args=c,
+        resources={k: c[k] for k in ("chips", "hbm_gb")}))
+    print(f"virtual fleet time: "
+          f"{plat.engine(admin).launcher.now:.0f}s")
+
+    ap = AutoProvisioner(profiler, TPU_PRICING)
+    values = {"steps": 500}
+    baseline = {"chips": 32, "hbm_gb": 16}
+    t_base = true_runtime({**values, **baseline})
+    c_base = TPU_PRICING.job_cost(baseline, t_base)
+    print(f"baseline {baseline}: {t_base:.0f}s ${c_base:.2f}")
+
+    dec, hist = ap.refined_search(template.name, values,
+                                  measure_fn=true_runtime,
+                                  objective="runtime", max_cost=c_base)
+    t = true_runtime({**values, **dec.resources})
+    print(f"[fix cost, optimize runtime] -> {dec.resources}: {t:.0f}s "
+          f"(speedup {t_base/t:.2f}x, {len(hist)} refinement rounds)")
+
+    dec, hist = ap.refined_search(template.name, values,
+                                  measure_fn=true_runtime,
+                                  objective="cost", max_runtime=t_base)
+    t = true_runtime({**values, **dec.resources})
+    c = TPU_PRICING.job_cost(dec.resources, t)
+    print(f"[fix runtime, optimize cost] -> {dec.resources}: ${c:.2f} "
+          f"(saving {100*(1-c/c_base):.1f}%, {len(hist)} rounds)")
+
+
+if __name__ == "__main__":
+    main()

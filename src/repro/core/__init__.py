@@ -1,0 +1,1 @@
+from repro.core.acai import AcaiEngine, AcaiPlatform, AcaiProject

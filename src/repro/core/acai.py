@@ -1,0 +1,171 @@
+"""ACAI facade: credential server + project workspaces + SDK surface.
+
+Mirrors the paper's public surface (§3.1, §3.4, §4.1): a global admin
+creates projects; each project has an admin user who creates member users;
+every request carries a user token which the credential server resolves to
+(user, project) before dispatch. Per-project state (storage, filesets,
+metadata, provenance) is isolated; the execution engine is shared.
+"""
+from __future__ import annotations
+
+import dataclasses
+import secrets
+from pathlib import Path
+from typing import Any, Callable, Optional
+
+from repro.core.datalake.fileset import FileSetManager
+from repro.core.datalake.metadata import MetadataStore
+from repro.core.datalake.provenance import ProvenanceGraph
+from repro.core.datalake.storage import Storage
+from repro.core.engine.events import EventBus
+from repro.core.engine.launcher import LocalRunner, VirtualRunner
+from repro.core.engine.monitor import JobMonitor
+from repro.core.engine.registry import JobRegistry, JobSpec
+from repro.core.engine.scheduler import Scheduler
+from repro.core.provision.autoprovision import AutoProvisioner
+from repro.core.provision.pricing import CPU_PRICING, Pricing
+from repro.core.provision.profiler import CommandTemplate, Profiler
+
+
+class AuthError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class User:
+    name: str
+    project: str
+    token: str
+    is_admin: bool = False
+
+
+class AcaiProject:
+    """Isolated workspace: data lake + metadata + provenance."""
+
+    def __init__(self, name: str, root):
+        self.name = name
+        root = Path(root)
+        root.mkdir(parents=True, exist_ok=True)
+        self.storage = Storage(root)
+        self.metadata = MetadataStore(root)
+        self.provenance = ProvenanceGraph(root)
+        self.filesets = FileSetManager(self.storage, self.provenance)
+
+    # SDK conveniences -------------------------------------------------
+    def upload(self, path: str, data: bytes, creator: str = "") -> str:
+        fv = self.storage.upload(path, data, creator)
+        self.metadata.register(f"{path}@{fv.version}", kind="file",
+                               creator=creator)
+        return f"{path}@{fv.version}"
+
+    def create_file_set(self, name: str, specs: list[str],
+                        creator: str = "") -> str:
+        fsv = self.filesets.create(name, specs, creator)
+        self.metadata.register(fsv.ref, kind="fileset", creator=creator)
+        return fsv.ref
+
+
+class AcaiEngine:
+    """Execution engine assembly: registry + scheduler + launcher + monitor."""
+
+    def __init__(self, *, datalake: Optional[AcaiProject] = None,
+                 pricing: Pricing = CPU_PRICING, quota_k: int = 2,
+                 virtual: bool = False,
+                 oracle: Optional[Callable] = None,
+                 workroot: str = "/tmp/acai-jobs"):
+        self.bus = EventBus()
+        self.registry = JobRegistry(
+            metadata=datalake.metadata if datalake else None)
+        if virtual:
+            self.launcher = VirtualRunner(self.registry, self.bus,
+                                          oracle=oracle, pricing=pricing)
+        else:
+            self.launcher = LocalRunner(self.registry, self.bus,
+                                        datalake=datalake, pricing=pricing,
+                                        workroot=workroot)
+        self.scheduler = Scheduler(self.registry, self.launcher, self.bus,
+                                   quota_k=quota_k)
+        self.monitor = JobMonitor(self.bus)
+        self.pricing = pricing
+
+    def submit(self, spec: JobSpec):
+        job = self.registry.submit(spec)
+        self.scheduler.submit(job)
+        return job
+
+    def run_all(self) -> None:
+        if hasattr(self.launcher, "pending"):
+            self.scheduler.run_to_completion()
+
+
+class AcaiPlatform:
+    """Credential server + project/user management (§3.1, §4.1)."""
+
+    def __init__(self, root: str | Path, *, pricing: Pricing = CPU_PRICING,
+                 virtual: bool = False, oracle=None, quota_k: int = 2):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self._users: dict[str, User] = {}      # token -> user
+        self._projects: dict[str, AcaiProject] = {}
+        self._engines: dict[str, AcaiEngine] = {}
+        self._admin_token = secrets.token_hex(8)
+        self._pricing = pricing
+        self._virtual = virtual
+        self._oracle = oracle
+        self._quota_k = quota_k
+
+    # -- credential server ----------------------------------------------
+    @property
+    def admin_token(self) -> str:
+        return self._admin_token
+
+    def authenticate(self, token: str) -> User:
+        user = self._users.get(token)
+        if user is None:
+            raise AuthError("invalid token")
+        return user
+
+    def create_project(self, admin_token: str, name: str) -> str:
+        """Global admin creates a project + its admin user; returns the
+        project-admin token."""
+        if admin_token != self._admin_token:
+            raise AuthError("only the global administrator creates projects")
+        if name in self._projects:
+            raise ValueError(f"project {name} exists")
+        self._projects[name] = AcaiProject(name, self.root / name)
+        self._engines[name] = AcaiEngine(
+            datalake=self._projects[name], pricing=self._pricing,
+            virtual=self._virtual, oracle=self._oracle,
+            quota_k=self._quota_k,
+            workroot=str(self.root / name / "jobs"))
+        return self.create_user(None, name, f"{name}-admin", _admin=True)
+
+    def create_user(self, admin_token: Optional[str], project: str,
+                    username: str, _admin: bool = False) -> str:
+        if not _admin:
+            admin = self.authenticate(admin_token)
+            if not (admin.is_admin and admin.project == project):
+                raise AuthError("only the project administrator creates users")
+        token = secrets.token_hex(8)
+        self._users[token] = User(username, project, token, is_admin=_admin)
+        return token
+
+    # -- authenticated SDK dispatch ---------------------------------------
+    def project(self, token: str) -> AcaiProject:
+        return self._projects[self.authenticate(token).project]
+
+    def engine(self, token: str) -> AcaiEngine:
+        return self._engines[self.authenticate(token).project]
+
+    def submit_job(self, token: str, spec: JobSpec):
+        user = self.authenticate(token)
+        spec.project = user.project
+        spec.user = user.name
+        return self._engines[user.project].submit(spec)
+
+    def make_profiler(self, token: str, quorum: float = 0.95) -> Profiler:
+        return Profiler(self.engine(token), quorum=quorum)
+
+    def make_autoprovisioner(self, token: str,
+                             profiler: Profiler) -> AutoProvisioner:
+        return AutoProvisioner(profiler, self._pricing)

@@ -1,0 +1,148 @@
+"""ACAI CLI (§3.4): every SDK service gets a command.
+
+    python -m repro.core.cli --root /tmp/acai --token <tok> <command> ...
+
+Commands: upload, download, ls, create-file-set, jobs, find, trace,
+profile, autoprovision. State persists under --root (tokens in
+tokens.json for this local deployment)."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.core.acai import AcaiPlatform
+
+
+def _load_platform(root: Path) -> AcaiPlatform:
+    plat = AcaiPlatform(root)
+    tok_file = root / "tokens.json"
+    if tok_file.exists():
+        saved = json.loads(tok_file.read_text())
+        plat._admin_token = saved["admin"]
+        from repro.core.acai import User
+        for tok, u in saved["users"].items():
+            plat._users[tok] = User(**u)
+        for name in saved["projects"]:
+            if name not in plat._projects:
+                from repro.core.acai import AcaiEngine, AcaiProject
+                plat._projects[name] = AcaiProject(name, root / name)
+                plat._engines[name] = AcaiEngine(
+                    datalake=plat._projects[name],
+                    workroot=str(root / name / "jobs"))
+    return plat
+
+
+def _save_platform(plat: AcaiPlatform, root: Path) -> None:
+    import dataclasses
+    (root / "tokens.json").write_text(json.dumps({
+        "admin": plat._admin_token,
+        "users": {t: dataclasses.asdict(u)
+                  for t, u in plat._users.items()},
+        "projects": sorted(plat._projects),
+    }))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="acai")
+    ap.add_argument("--root", default="/tmp/acai-cli")
+    ap.add_argument("--token", default=None)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sp = sub.add_parser("init", help="create a project; prints admin token")
+    sp.add_argument("project")
+
+    sp = sub.add_parser("upload")
+    sp.add_argument("path")
+    sp.add_argument("file")
+
+    sp = sub.add_parser("download")
+    sp.add_argument("ref")
+
+    sub.add_parser("ls")
+
+    sp = sub.add_parser("create-file-set")
+    sp.add_argument("name")
+    sp.add_argument("specs", nargs="+")
+
+    sp = sub.add_parser("jobs")
+    sp.add_argument("--status", default=None)
+    sp.add_argument("--sort-by", default="job_id")
+
+    sp = sub.add_parser("find")
+    sp.add_argument("conditions", nargs="+",
+                    help="key=value or key>value / key<value")
+
+    sp = sub.add_parser("trace")
+    sp.add_argument("fileset_ref", nargs="?")
+    sp.add_argument("--forward", action="store_true")
+
+    args = ap.parse_args(argv)
+    root = Path(args.root)
+    root.mkdir(parents=True, exist_ok=True)
+    plat = _load_platform(root)
+
+    if args.cmd == "init":
+        tok = plat.create_project(plat.admin_token, args.project)
+        _save_platform(plat, root)
+        print(tok)
+        return 0
+
+    if not args.token:
+        print("--token required", file=sys.stderr)
+        return 2
+    proj = plat.project(args.token)
+    user = plat.authenticate(args.token)
+
+    if args.cmd == "upload":
+        ref = proj.upload(args.path, Path(args.file).read_bytes(),
+                          creator=user.name)
+        print(ref)
+    elif args.cmd == "download":
+        sys.stdout.buffer.write(proj.storage.download(args.ref))
+    elif args.cmd == "ls":
+        for p in proj.storage.list_files():
+            print(f"{p}  versions={proj.storage.versions(p)}")
+        for s in proj.filesets.list_sets():
+            print(f"@{s}  versions="
+                  f"{[v.version for v in proj.filesets._sets[s]]}")
+    elif args.cmd == "create-file-set":
+        print(proj.create_file_set(args.name, args.specs,
+                                   creator=user.name))
+    elif args.cmd == "jobs":
+        from repro.core.engine.dashboard import job_history
+        eng = plat.engine(args.token)
+        print(job_history(eng.registry, proj.metadata,
+                          status=args.status, sort_by=args.sort_by))
+    elif args.cmd == "find":
+        conds = {}
+        for c in args.conditions:
+            if ">" in c:
+                k, v = c.split(">", 1)
+                conds[k] = (">", float(v))
+            elif "<" in c:
+                k, v = c.split("<", 1)
+                conds[k] = ("<", float(v))
+            else:
+                k, v = c.split("=", 1)
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+                conds[k] = v
+        for aid in proj.metadata.find(**conds):
+            print(aid, json.dumps({k: v for k, v in
+                                   proj.metadata.get(aid).items()
+                                   if v is not None}))
+    elif args.cmd == "trace":
+        from repro.core.engine.dashboard import provenance_page
+        print(provenance_page(
+            proj.provenance, args.fileset_ref,
+            direction="forward" if args.forward else "backward"))
+    _save_platform(plat, root)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

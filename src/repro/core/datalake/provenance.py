@@ -1,0 +1,98 @@
+"""Provenance graph (ACAI §3.2.4, §4.5.2).
+
+A DAG where nodes are file-set versions and edges are actions — job
+executions or file-set creations. The paper hosts this on Neo4j storing only
+ids (metadata lives in the metadata server); we mirror that split with a
+``networkx.MultiDiGraph`` and the same three query APIs: whole graph,
+trace-forward one edge, trace-backward one edge (plus transitive closures
+used by the dashboard's interactive tracing and workflow replay).
+
+Edge direction follows dataflow: input fileset --(job)--> output fileset,
+source fileset --(creation)--> derived fileset.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Optional
+
+import networkx as nx
+
+
+class ProvenanceGraph:
+    def __init__(self, root: str | Path):
+        self._path = Path(root) / "provenance.json"
+        self.g = nx.MultiDiGraph()
+        if self._path.exists():
+            raw = json.loads(self._path.read_text())
+            self.g.add_nodes_from(raw["nodes"])
+            for u, v, data in raw["edges"]:
+                self.g.add_edge(u, v, **data)
+
+    def _save(self) -> None:
+        raw = {"nodes": list(self.g.nodes),
+               "edges": [(u, v, d) for u, v, d in self.g.edges(data=True)]}
+        self._path.write_text(json.dumps(raw))
+
+    # ------------------------------------------------------------------
+    def add_fileset(self, fileset_ref: str) -> None:
+        self.g.add_node(fileset_ref)
+        self._save()
+
+    def add_job_edge(self, *, src: Optional[str], dst: str, job_id: str,
+                     creator: str = "") -> None:
+        """input fileset --(job execution)--> output fileset."""
+        self.g.add_node(dst)
+        if src is not None:
+            self.g.add_node(src)
+            self.g.add_edge(src, dst, action="job", job_id=job_id,
+                            creator=creator)
+        self._save()
+
+    def add_creation_edge(self, *, src: str, dst: str,
+                          creator: str = "") -> None:
+        self.g.add_node(src)
+        self.g.add_node(dst)
+        self.g.add_edge(src, dst, action="fileset_creation", creator=creator)
+        self._save()
+
+    # -- the three paper APIs -------------------------------------------
+    def whole_graph(self) -> dict:
+        return {"nodes": list(self.g.nodes),
+                "edges": [(u, v, d) for u, v, d in self.g.edges(data=True)]}
+
+    def forward(self, fileset_ref: str) -> list[tuple[str, dict]]:
+        """One edge forward: filesets derived from this one."""
+        return [(v, d) for _, v, d in self.g.out_edges(fileset_ref,
+                                                       data=True)]
+
+    def backward(self, fileset_ref: str) -> list[tuple[str, dict]]:
+        """One edge backward: filesets this one was derived from."""
+        return [(u, d) for u, _, d in self.g.in_edges(fileset_ref,
+                                                      data=True)]
+
+    # -- transitive helpers (dashboard tracing, workflow replay §7.1.3) --
+    def ancestors(self, fileset_ref: str) -> list[str]:
+        return sorted(nx.ancestors(self.g, fileset_ref))
+
+    def descendants(self, fileset_ref: str) -> list[str]:
+        return sorted(nx.descendants(self.g, fileset_ref))
+
+    def lineage_jobs(self, fileset_ref: str) -> list[str]:
+        """Every job id on any path into this fileset (reproduction
+        recipe, oldest first)."""
+        anc = set(self.ancestors(fileset_ref)) | {fileset_ref}
+        sub = self.g.subgraph(anc)
+        jobs = []
+        for u, v, d in sub.edges(data=True):
+            if d.get("action") == "job":
+                jobs.append(d["job_id"])
+        return jobs
+
+    def replay_order(self, fileset_ref: str) -> list[str]:
+        """Topological order of ancestor filesets (workflow replay)."""
+        anc = set(self.ancestors(fileset_ref)) | {fileset_ref}
+        return list(nx.topological_sort(self.g.subgraph(anc)))
+
+    def is_dag(self) -> bool:
+        return nx.is_directed_acyclic_graph(self.g)

@@ -1,0 +1,82 @@
+"""Dashboard (ACAI §3.4, Figs. 4–5) — terminal/markdown rendition.
+
+The paper's web dashboard has two pages: a job-history page (status,
+metadata, runtime logs; filtering, sorting, pagination) and a provenance
+page (whole graph + interactive fore/back tracing). Both renderers work
+off the same registry/metadata/provenance state the web UI would."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.engine.registry import JobRegistry
+
+
+def job_history(registry: JobRegistry, metadata=None, *,
+                status: Optional[str] = None, user: Optional[str] = None,
+                sort_by: str = "job_id", descending: bool = False,
+                page: int = 0, page_size: int = 20) -> str:
+    """The job-history page: filter -> sort -> paginate -> render."""
+    jobs = registry.all_jobs()
+    if status:
+        jobs = [j for j in jobs if j.state.value == status]
+    if user:
+        jobs = [j for j in jobs if j.spec.user == user]
+
+    def key(j):
+        if sort_by == "runtime":
+            return j.runtime or 0.0
+        if sort_by == "cost":
+            return j.cost or 0.0
+        if sort_by == "submitted":
+            return j.submitted_at
+        return j.job_id
+    jobs = sorted(jobs, key=key, reverse=descending)
+    total = len(jobs)
+    jobs = jobs[page * page_size:(page + 1) * page_size]
+
+    lines = [f"| job | name | user | state | runtime_s | cost | tags |",
+             f"|---|---|---|---|---|---|---|"]
+    for j in jobs:
+        md = metadata.get(j.job_id) if metadata else {}
+        tags = ",".join(f"{k}={v}" for k, v in sorted(md.items())
+                        if v is not None and k not in
+                        ("create_time", "kind", "state", "runtime",
+                         "cost", "creator", "project", "model")) or "-"
+        rt = f"{j.runtime:.2f}" if j.runtime is not None else "-"
+        cost = f"${j.cost:.5f}" if j.cost is not None else "-"
+        lines.append(f"| {j.job_id} | {j.spec.name} | {j.spec.user} "
+                     f"| {j.state.value} | {rt} | {cost} | {tags} |")
+    lines.append(f"\npage {page + 1} of "
+                 f"{max(1, (total + page_size - 1) // page_size)} "
+                 f"({total} jobs)")
+    return "\n".join(lines)
+
+
+def provenance_page(provenance, root: Optional[str] = None,
+                    direction: str = "backward", max_depth: int = 10) -> str:
+    """The provenance page: whole graph, or interactive trace from a node."""
+    if root is None:
+        g = provenance.whole_graph()
+        lines = [f"{len(g['nodes'])} filesets, {len(g['edges'])} actions"]
+        for u, v, d in g["edges"]:
+            tag = d.get("job_id", d.get("action", "?"))
+            lines.append(f"  {u} --[{tag}]--> {v}")
+        return "\n".join(lines)
+
+    step = provenance.backward if direction == "backward" \
+        else provenance.forward
+    arrow = "<--" if direction == "backward" else "-->"
+    lines = [root]
+    frontier = [(root, 0)]
+    seen = {root}
+    while frontier:
+        node, depth = frontier.pop()
+        if depth >= max_depth:
+            continue
+        for other, d in step(node):
+            tag = d.get("job_id", d.get("action", "?"))
+            lines.append("  " * (depth + 1) + f"{arrow}[{tag}] {other}")
+            if other not in seen:
+                seen.add(other)
+                frontier.append((other, depth + 1))
+    return "\n".join(lines)

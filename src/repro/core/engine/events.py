@@ -1,0 +1,29 @@
+"""In-process pub/sub event bus (the paper's Redis stand-in, §4.2).
+
+Two primary topics, exactly as the paper: ``container_status`` (published by
+the launcher watching the cluster) and ``job_progress`` (published by the
+in-container agent: downloading, running, uploading...). Synchronous
+delivery keeps the engine deterministic for tests; a real deployment swaps
+this for Redis without changing publishers/subscribers.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Any, Callable
+
+TOPIC_CONTAINER_STATUS = "container_status"
+TOPIC_JOB_PROGRESS = "job_progress"
+
+
+class EventBus:
+    def __init__(self):
+        self._subs: dict[str, list[Callable[[dict], None]]] = defaultdict(list)
+        self.history: list[tuple[str, dict]] = []
+
+    def subscribe(self, topic: str, fn: Callable[[dict], None]) -> None:
+        self._subs[topic].append(fn)
+
+    def publish(self, topic: str, msg: dict) -> None:
+        self.history.append((topic, dict(msg)))
+        for fn in list(self._subs[topic]):
+            fn(dict(msg))

@@ -1,0 +1,169 @@
+"""Job launcher + in-container agent (ACAI §4.2, §4.2.1).
+
+The paper provisions a Kubernetes container whose pre-installed agent
+downloads code + input file set, runs the user command, uploads the output
+file set, and broadcasts progress on the event bus. The ``Runner`` interface
+reproduces that protocol; two implementations ship:
+
+  LocalRunner   — executes the job's python callable synchronously in a
+                  scratch "container" directory (real measured runtime).
+  VirtualRunner — completes jobs on a virtual clock using a runtime oracle
+                  (duration = spec.duration or oracle(job)); this is what the
+                  auto-provisioning experiments schedule thousands of
+                  profiling jobs on, and what exercises quota/straggler
+                  logic deterministically.
+"""
+from __future__ import annotations
+
+import heapq
+import io
+import time
+import traceback
+from contextlib import redirect_stdout
+from pathlib import Path
+from typing import Callable, Optional
+
+from repro.core.engine.events import (EventBus, TOPIC_CONTAINER_STATUS,
+                                      TOPIC_JOB_PROGRESS)
+from repro.core.engine.lifecycle import JobState
+from repro.core.engine.logparse import parse_log
+from repro.core.engine.registry import Job, JobRegistry
+
+
+class Runner:
+    def launch(self, job: Job) -> None:
+        raise NotImplementedError
+
+
+class LocalRunner(Runner):
+    """Synchronous agent: download -> run -> upload -> publish."""
+
+    def __init__(self, registry: JobRegistry, bus: EventBus, *,
+                 datalake=None, workroot: str = "/tmp/acai-jobs",
+                 pricing=None):
+        self.registry = registry
+        self.bus = bus
+        self.datalake = datalake            # AcaiProject-like facade or None
+        self.workroot = Path(workroot)
+        self.pricing = pricing
+
+    def launch(self, job: Job) -> None:
+        bus, reg = self.bus, self.registry
+        reg.set_state(job.job_id, JobState.RUNNING)
+        bus.publish(TOPIC_CONTAINER_STATUS,
+                    {"job_id": job.job_id, "status": "provisioned"})
+        workdir = self.workroot / job.job_id
+        (workdir / "out").mkdir(parents=True, exist_ok=True)
+        log_buf = io.StringIO()
+        t0 = time.perf_counter()
+        try:
+            if job.spec.input_fileset and self.datalake is not None:
+                bus.publish(TOPIC_JOB_PROGRESS,
+                            {"job_id": job.job_id, "stage": "downloading"})
+                self.datalake.filesets.materialize(job.spec.input_fileset,
+                                                   workdir)
+            bus.publish(TOPIC_JOB_PROGRESS,
+                        {"job_id": job.job_id, "stage": "running"})
+            with redirect_stdout(log_buf):
+                result = job.spec.fn(workdir, job) if job.spec.fn else None
+            if isinstance(result, dict):
+                job.outputs.update(result)
+            runtime = time.perf_counter() - t0
+            job.runtime = job.spec.duration if job.spec.duration is not None \
+                else runtime
+            self._upload_outputs(job, workdir, bus)
+            self._finalize(job, log_buf.getvalue(), JobState.FINISHED)
+        except Exception:  # noqa: BLE001 — user code failure => FAILED
+            job.runtime = time.perf_counter() - t0
+            self._finalize(job, log_buf.getvalue()
+                           + "\n" + traceback.format_exc(), JobState.FAILED,
+                           error=traceback.format_exc())
+
+    def _upload_outputs(self, job: Job, workdir: Path, bus: EventBus) -> None:
+        if not (job.spec.output_fileset and self.datalake is not None):
+            return
+        bus.publish(TOPIC_JOB_PROGRESS,
+                    {"job_id": job.job_id, "stage": "uploading"})
+        lake = self.datalake
+        outdir = workdir / "out"
+        files = [p for p in sorted(outdir.rglob("*")) if p.is_file()]
+        specs = []
+        if files:
+            paths = [f"/{job.spec.output_fileset}/{p.relative_to(outdir)}"
+                     for p in files]
+            sid = lake.storage.begin_session(paths, creator=job.spec.user)
+            for p, path in zip(files, paths):
+                lake.storage.session_put(sid, path, p.read_bytes())
+            for fv in lake.storage.commit_session(sid):
+                specs.append(f"{fv.path}@{fv.version}")
+                lake.metadata.register(f"{fv.path}@{fv.version}",
+                                       kind="file", creator=job.spec.user)
+        fsv = lake.filesets.create(job.spec.output_fileset, specs,
+                                   creator=job.spec.user)
+        lake.metadata.register(fsv.ref, kind="fileset",
+                               creator=job.spec.user)
+        src_ref = None
+        if job.spec.input_fileset:
+            src_ref = lake.filesets.resolve(job.spec.input_fileset).ref
+        lake.provenance.add_job_edge(src=src_ref, dst=fsv.ref,
+                                     job_id=job.job_id,
+                                     creator=job.spec.user)
+        job.outputs["fileset"] = fsv.ref
+
+    def _finalize(self, job: Job, log_text: str, state: JobState,
+                  error: Optional[str] = None) -> None:
+        if self.pricing is not None and job.runtime is not None:
+            job.cost = self.pricing.job_cost(job.spec.resources, job.runtime)
+        if self.datalake is not None:
+            meta = parse_log(log_text)      # intelligent log parser
+            if meta:
+                self.datalake.metadata.put(job.job_id, **meta)
+            self.datalake.metadata.put(job.job_id, runtime=job.runtime,
+                                       cost=job.cost, state=state.value)
+        job.outputs["log"] = log_text
+        self.registry.set_state(job.job_id, state, error=error)
+        self.bus.publish(TOPIC_CONTAINER_STATUS,
+                         {"job_id": job.job_id, "status": state.value})
+
+
+class VirtualRunner(Runner):
+    """Virtual-clock agent for simulated fleets (profiling experiments)."""
+
+    def __init__(self, registry: JobRegistry, bus: EventBus, *,
+                 oracle: Optional[Callable[[Job], float]] = None,
+                 pricing=None):
+        self.registry = registry
+        self.bus = bus
+        self.oracle = oracle
+        self.pricing = pricing
+        self.now = 0.0
+        self._heap: list[tuple[float, int, str]] = []
+        self._seq = 0
+
+    def launch(self, job: Job) -> None:
+        self.registry.set_state(job.job_id, JobState.RUNNING)
+        dur = job.spec.duration if job.spec.duration is not None \
+            else self.oracle(job)
+        self._seq += 1
+        heapq.heappush(self._heap, (self.now + dur, self._seq, job.job_id))
+
+    def step(self) -> Optional[str]:
+        """Advance to the next completion; returns the finished job id."""
+        if not self._heap:
+            return None
+        t, _, job_id = heapq.heappop(self._heap)
+        self.now = max(self.now, t)
+        job = self.registry.get(job_id)
+        if job.state == JobState.KILLED:
+            return job_id
+        job.runtime = (job.spec.duration if job.spec.duration is not None
+                       else self.oracle(job))
+        if self.pricing is not None:
+            job.cost = self.pricing.job_cost(job.spec.resources, job.runtime)
+        self.registry.set_state(job_id, JobState.FINISHED)
+        self.bus.publish(TOPIC_CONTAINER_STATUS,
+                         {"job_id": job_id, "status": "FINISHED"})
+        return job_id
+
+    def pending(self) -> int:
+        return len(self._heap)

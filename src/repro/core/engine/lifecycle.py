@@ -1,0 +1,42 @@
+"""Job life-cycle state machine (ACAI Fig. 3).
+
+SUBMITTED -> QUEUED -> LAUNCHING -> RUNNING -> {FINISHED, FAILED}
+KILLED is reachable from any non-terminal state. The (input fileset, job,
+output fileset) triplet is immutable: a job can be submitted/scheduled once.
+"""
+from __future__ import annotations
+
+import enum
+
+
+class JobState(str, enum.Enum):
+    SUBMITTED = "SUBMITTED"
+    QUEUED = "QUEUED"
+    LAUNCHING = "LAUNCHING"
+    RUNNING = "RUNNING"
+    FINISHED = "FINISHED"
+    FAILED = "FAILED"
+    KILLED = "KILLED"
+
+
+_TRANSITIONS = {
+    JobState.SUBMITTED: {JobState.QUEUED, JobState.KILLED},
+    JobState.QUEUED: {JobState.LAUNCHING, JobState.KILLED},
+    JobState.LAUNCHING: {JobState.RUNNING, JobState.FAILED, JobState.KILLED},
+    JobState.RUNNING: {JobState.FINISHED, JobState.FAILED, JobState.KILLED},
+    JobState.FINISHED: set(),
+    JobState.FAILED: set(),
+    JobState.KILLED: set(),
+}
+
+ACTIVE_STATES = {JobState.LAUNCHING, JobState.RUNNING}
+TERMINAL_STATES = {JobState.FINISHED, JobState.FAILED, JobState.KILLED}
+
+
+class IllegalTransition(RuntimeError):
+    pass
+
+
+def check_transition(old: JobState, new: JobState) -> None:
+    if new not in _TRANSITIONS[old]:
+        raise IllegalTransition(f"{old.value} -> {new.value}")

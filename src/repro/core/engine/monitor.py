@@ -1,0 +1,29 @@
+"""Job monitor + log server (ACAI §4.2): subscribes to both bus topics,
+keeps per-job latest status, progress stage and log tail; the dashboard's
+WebSocket feed becomes the ``watch`` API."""
+from __future__ import annotations
+
+from collections import defaultdict
+
+from repro.core.engine.events import (EventBus, TOPIC_CONTAINER_STATUS,
+                                      TOPIC_JOB_PROGRESS)
+
+
+class JobMonitor:
+    def __init__(self, bus: EventBus):
+        self.status: dict[str, str] = {}
+        self.stage: dict[str, str] = {}
+        self.events: dict[str, list[dict]] = defaultdict(list)
+        bus.subscribe(TOPIC_CONTAINER_STATUS, self._on_status)
+        bus.subscribe(TOPIC_JOB_PROGRESS, self._on_progress)
+
+    def _on_status(self, msg: dict) -> None:
+        self.status[msg["job_id"]] = msg.get("status", "")
+        self.events[msg["job_id"]].append(msg)
+
+    def _on_progress(self, msg: dict) -> None:
+        self.stage[msg["job_id"]] = msg.get("stage", "")
+        self.events[msg["job_id"]].append(msg)
+
+    def watch(self, job_id: str) -> list[dict]:
+        return list(self.events[job_id])

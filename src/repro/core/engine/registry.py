@@ -1,0 +1,79 @@
+"""Job registry (ACAI §4.2): repository of submitted jobs + metadata."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+from repro.core.engine.lifecycle import JobState, check_transition
+
+
+@dataclasses.dataclass
+class JobSpec:
+    """Encapsulation of an ML program (ACAI §3: the Job abstraction)."""
+    name: str
+    project: str
+    user: str
+    # the program: a python callable fn(workdir: Path, job: Job) -> dict
+    # (the paper runs argv in a container; the runner interface is pluggable)
+    fn: Optional[Callable] = None
+    argv: Optional[list[str]] = None
+    input_fileset: Optional[str] = None
+    output_fileset: Optional[str] = None     # name for the output file set
+    resources: dict[str, Any] = dataclasses.field(default_factory=dict)
+    args: dict[str, Any] = dataclasses.field(default_factory=dict)
+    # virtual-duration hook for simulated runs (profiling experiments)
+    duration: Optional[float] = None
+
+
+@dataclasses.dataclass
+class Job:
+    job_id: str
+    spec: JobSpec
+    state: JobState = JobState.SUBMITTED
+    submitted_at: float = dataclasses.field(default_factory=time.time)
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    runtime: Optional[float] = None          # measured (or virtual) seconds
+    cost: Optional[float] = None
+    error: Optional[str] = None
+    outputs: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def queue_key(self) -> tuple[str, str]:
+        return (self.spec.project, self.spec.user)
+
+
+class JobRegistry:
+    def __init__(self, metadata=None):
+        self._jobs: dict[str, Job] = {}
+        self._ctr = 0
+        self.metadata = metadata
+
+    def submit(self, spec: JobSpec) -> Job:
+        self._ctr += 1
+        job = Job(job_id=f"job-{self._ctr}", spec=spec)
+        self._jobs[job.job_id] = job
+        if self.metadata is not None:
+            self.metadata.register(job.job_id, kind="job",
+                                   creator=spec.user, model=spec.name,
+                                   project=spec.project)
+        return job
+
+    def get(self, job_id: str) -> Job:
+        return self._jobs[job_id]
+
+    def all_jobs(self) -> list[Job]:
+        return list(self._jobs.values())
+
+    def set_state(self, job_id: str, new: JobState,
+                  error: Optional[str] = None) -> Job:
+        job = self._jobs[job_id]
+        check_transition(job.state, new)
+        job.state = new
+        if new == JobState.RUNNING:
+            job.started_at = time.time()
+        if new in (JobState.FINISHED, JobState.FAILED, JobState.KILLED):
+            job.finished_at = time.time()
+            job.error = error
+        return job

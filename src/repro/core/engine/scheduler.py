@@ -1,0 +1,94 @@
+"""Job scheduler (ACAI §3.3.1): per-(project, user) FIFO queues with a quota
+of at most k jobs in LAUNCHING|RUNNING per tuple, plus the paper's 95 %
+profiling quorum as a first-class straggler-mitigation policy (§4.2.2).
+"""
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from typing import Optional
+
+from repro.core.engine.events import EventBus, TOPIC_CONTAINER_STATUS
+from repro.core.engine.lifecycle import (ACTIVE_STATES, TERMINAL_STATES,
+                                         JobState)
+from repro.core.engine.registry import Job, JobRegistry
+
+
+class Scheduler:
+    def __init__(self, registry: JobRegistry, launcher, bus: EventBus,
+                 quota_k: int = 2):
+        self.registry = registry
+        self.launcher = launcher
+        self.bus = bus
+        self.quota_k = quota_k
+        self._queues: dict[tuple, deque[str]] = defaultdict(deque)
+        self._active: dict[tuple, set[str]] = defaultdict(set)
+        bus.subscribe(TOPIC_CONTAINER_STATUS, self._on_container_status)
+
+    # ------------------------------------------------------------------
+    def submit(self, job: Job) -> None:
+        self.registry.set_state(job.job_id, JobState.QUEUED)
+        self._queues[job.queue_key].append(job.job_id)
+        self._maybe_launch(job.queue_key)
+
+    def kill(self, job_id: str) -> None:
+        job = self.registry.get(job_id)
+        if job.state in TERMINAL_STATES:
+            return
+        key = job.queue_key
+        if job_id in self._queues[key]:
+            self._queues[key].remove(job_id)
+        self._active[key].discard(job_id)
+        self.registry.set_state(job_id, JobState.KILLED)
+        self._maybe_launch(key)
+
+    # ------------------------------------------------------------------
+    def _maybe_launch(self, key: tuple) -> None:
+        q = self._queues[key]
+        while q and len(self._active[key]) < self.quota_k:
+            job_id = q.popleft()
+            job = self.registry.get(job_id)
+            self._active[key].add(job_id)
+            self.registry.set_state(job_id, JobState.LAUNCHING)
+            self.launcher.launch(job)
+
+    def _on_container_status(self, msg: dict) -> None:
+        status = msg.get("status", "")
+        if status in {s.value for s in TERMINAL_STATES}:
+            job = self.registry.get(msg["job_id"])
+            key = job.queue_key
+            if msg["job_id"] in self._active[key]:
+                self._active[key].discard(msg["job_id"])
+                self._maybe_launch(key)
+
+    # ------------------------------------------------------------------
+    def queue_depth(self, project: str, user: str) -> int:
+        return len(self._queues[(project, user)])
+
+    def active_count(self, project: str, user: str) -> int:
+        return len(self._active[(project, user)])
+
+    # -- quorum / straggler mitigation ----------------------------------
+    def run_until_quorum(self, job_ids: list[str], frac: float = 0.95,
+                         kill_stragglers: bool = True) -> dict:
+        """Advance the virtual runner until ``frac`` of jobs are terminal
+        (the paper waits for 95 % of profiling jobs to cope with
+        stragglers). Remaining stragglers are optionally killed.
+        Only meaningful with a VirtualRunner launcher."""
+        need = int(frac * len(job_ids) + 0.999999)
+        done = lambda: [j for j in job_ids
+                        if self.registry.get(j).state in TERMINAL_STATES]
+        while len(done()) < need and self.launcher.pending() > 0:
+            self.launcher.step()
+        finished = done()
+        stragglers = [j for j in job_ids
+                      if self.registry.get(j).state not in TERMINAL_STATES]
+        if kill_stragglers:
+            for j in stragglers:
+                self.kill(j)
+        return {"finished": finished, "stragglers": stragglers,
+                "virtual_time": getattr(self.launcher, "now", None)}
+
+    def run_to_completion(self) -> None:
+        """Drain the virtual runner completely."""
+        while self.launcher.pending() > 0:
+            self.launcher.step()

@@ -1,0 +1,131 @@
+"""Profiler: learning to predict runtime (ACAI §4.2.2–§4.2.3).
+
+The user supplies a command template with hints (sets of values per
+argument); the profiler launches |cpus||mems|∏|opts_i| profiling jobs
+through the execution engine, waits for a 95 % quorum (straggler policy),
+and fits the paper's log-linear model
+
+    log y = log alpha + sum_i beta_i log x_i
+
+by least squares over the explored grid. ``predict`` is the serving
+endpoint the auto-provisioner queries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CommandTemplate:
+    """'python train.py --epoch {1,2,5} ...' + resource exploration sets."""
+    name: str
+    hints: dict[str, list[float]]             # arg -> candidate values
+    resource_hints: dict[str, list[float]]    # resource dim -> explored set
+
+    def grid(self) -> list[dict[str, float]]:
+        names = list(self.hints) + list(self.resource_hints)
+        spaces = [self.hints[n] for n in self.hints] + \
+                 [self.resource_hints[n] for n in self.resource_hints]
+        return [dict(zip(names, combo))
+                for combo in itertools.product(*spaces)]
+
+    @property
+    def feature_names(self) -> list[str]:
+        return list(self.hints) + list(self.resource_hints)
+
+
+class LogLinearModel:
+    """y = alpha * prod_i x_i^beta_i, fit in log space (paper §4.2.3)."""
+
+    def __init__(self, feature_names: list[str]):
+        self.feature_names = feature_names
+        self.coef: Optional[np.ndarray] = None    # [log alpha, betas...]
+
+    def _design(self, configs: list[dict[str, float]]) -> np.ndarray:
+        X = np.ones((len(configs), 1 + len(self.feature_names)))
+        for i, c in enumerate(configs):
+            for j, n in enumerate(self.feature_names):
+                X[i, 1 + j] = math.log(max(float(c[n]), 1e-12))
+        return X
+
+    def fit(self, configs: list[dict[str, float]],
+            runtimes: list[float]) -> "LogLinearModel":
+        X = self._design(configs)
+        y = np.log(np.maximum(np.asarray(runtimes, float), 1e-12))
+        self.coef, *_ = np.linalg.lstsq(X, y, rcond=None)
+        return self
+
+    def predict(self, config: dict[str, float]) -> float:
+        X = self._design([config])
+        return float(np.exp(X @ self.coef)[0])
+
+    def predict_many(self, configs: list[dict[str, float]]) -> np.ndarray:
+        return np.exp(self._design(configs) @ self.coef)
+
+    # -- evaluation metrics (paper Table 1) -----------------------------
+    @staticmethod
+    def errors(pred: np.ndarray, true: np.ndarray) -> dict[str, float]:
+        pred, true = np.asarray(pred, float), np.asarray(true, float)
+        l1 = float(np.abs(pred - true).mean())
+        l2 = float(((pred - true) ** 2).mean())
+        var = float(((true - true.mean()) ** 2).mean())
+        return {"l1": l1, "l2": l2,
+                "variance_explained": 1.0 - l2 / max(var, 1e-12)}
+
+
+class Profiler:
+    """Drives profiling fleets through the engine and serves predictions."""
+
+    def __init__(self, engine, quorum: float = 0.95):
+        # engine: repro.core.acai.AcaiEngine (registry+scheduler facade)
+        self.engine = engine
+        self.quorum = quorum
+        self.models: dict[str, LogLinearModel] = {}
+        self.training_sets: dict[str, tuple[list[dict], list[float]]] = {}
+
+    def profile(self, template: CommandTemplate,
+                job_factory: Callable[[dict[str, float]], "Any"],
+                ) -> LogLinearModel:
+        """job_factory(config) -> JobSpec for one profiling run."""
+        grid = template.grid()
+        jobs = [self.engine.submit(job_factory(cfg)) for cfg in grid]
+        res = self.engine.scheduler.run_until_quorum(
+            [j.job_id for j in jobs], frac=self.quorum)
+        configs, runtimes = [], []
+        for cfg, job in zip(grid, jobs):
+            j = self.engine.registry.get(job.job_id)
+            if j.state.value == "FINISHED" and j.runtime is not None:
+                configs.append(cfg)
+                runtimes.append(j.runtime)
+        model = LogLinearModel(template.feature_names).fit(configs, runtimes)
+        self.models[template.name] = model
+        self.training_sets[template.name] = (configs, runtimes)
+        return model
+
+    def fit_offline(self, template: CommandTemplate,
+                    configs: list[dict[str, float]],
+                    runtimes: list[float]) -> LogLinearModel:
+        """Fit directly from measured (config, runtime) pairs — used by the
+        CPU-measured reproduction bench and by compile-based oracles."""
+        model = LogLinearModel(template.feature_names).fit(configs, runtimes)
+        self.models[template.name] = model
+        self.training_sets[template.name] = (configs, runtimes)
+        return model
+
+    def add_observation(self, template_name: str, config: dict[str, float],
+                        runtime: float) -> None:
+        """Active refinement: fold one new measured run into the model."""
+        configs, runtimes = self.training_sets[template_name]
+        configs.append(dict(config))
+        runtimes.append(float(runtime))
+        self.models[template_name] = LogLinearModel(
+            self.models[template_name].feature_names).fit(configs, runtimes)
+
+    # the "endpoint for querying the runtime of a command template"
+    def predict(self, template_name: str, config: dict[str, float]) -> float:
+        return self.models[template_name].predict(config)

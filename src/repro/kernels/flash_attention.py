@@ -1,0 +1,125 @@
+"""Blocked online-softmax (flash) attention — TPU Pallas kernel.
+
+TPU-native adaptation of the FlashAttention-2 schedule: the grid's innermost
+dimension walks KV blocks sequentially per (batch, q-head, q-block) with the
+running (m, l, acc) state living in VMEM scratch (persists across the
+innermost grid dim on TPU). Causal blocks above the diagonal are skipped via
+``pl.when`` — no wasted MXU work, unlike the XLA fallback's masked schedule.
+
+GQA is handled by the k/v BlockSpec index map (query head h reads kv head
+h // group) — grouped KV is never materialized.
+
+Layout: q (B, H, S, D), k/v (B, KV, S, D). Block sizes default to 128 to
+align with the MXU 128x128 systolic array; D is expected to be a multiple
+of 128 on TPU (it is for all assigned archs except head_dim 64/80/112 ones,
+which pad — see ops.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, causal: bool, sm_scale: float,
+                  n_kv_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: q block [q_start, q_start+bq) needs kv blocks with
+    # k_start <= q_end
+    q_end = q_start + block_q - 1
+    needed = (k_start <= q_end) if causal else True
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale     # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            q_pos = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            k_pos = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_scr[:, 0]                               # (bq,)
+        m_cur = jnp.maximum(m_prev, s.max(axis=1))
+        corr = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])                    # (bq, bk)
+        l_scr[:, 0] = l_scr[:, 0] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[:, 0] = m_cur
+
+    last_ki = (jnp.minimum(q_end, (n_kv_blocks * block_k) - 1) // block_k) \
+        if causal else (n_kv_blocks - 1)
+
+    @pl.when(ki == last_ki)
+    def _finalize():
+        l = jnp.maximum(l_scr[:, 0], 1e-37)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True,
+                         block_q: int = 128, block_k: int = 128,
+                         sm_scale=None, interpret: bool = False):
+    """q: (B, H, S, D); k, v: (B, KV, S, D) with H % KV == 0."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    assert h % kv == 0, (h, kv)
+    group = h // kv
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    nq, nk = s // block_q, s // block_k
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+
+    grid = (b, h, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, causal=causal,
+        sm_scale=sm_scale, n_kv_blocks=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, qi, ki: (b_, h_ // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, qi, ki: (b_, h_ // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            _scratch((block_q, 128)),     # running max  (col 0 used)
+            _scratch((block_q, 128)),     # running sum  (col 0 used)
+            _scratch((block_q, d)),       # fp32 accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,94 @@
+"""Mamba-2 SSD chunked scan — TPU Pallas kernel.
+
+Hardware adaptation (DESIGN.md §3): the Triton SSD kernel uses warp-level
+semiring scans; the TPU version uses the block matrix form — per chunk the
+intra-chunk term is (C_t · B_j decay-weighted) masked-matmul on the MXU and
+the (N x P) state carries across the innermost grid dim in VMEM scratch.
+Scalar-per-head decay makes the exponent algebra 1-D (cheaper than WKV6's
+per-channel decay).
+
+Layouts: x (B,H,S,P) blocked (1,1,C,P); dt (B,H,S) blocked (1,1,C);
+Bmat/Cmat (B,G,S,N) blocked (1,1,C,N) with head->group index mapping;
+A,D (H,). Grid (B, H, NC).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, o_ref,
+                state_scr, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    f32 = jnp.float32
+    x = x_ref[0, 0].astype(f32)           # (C, P)
+    dt = dt_ref[0, 0].astype(f32)         # (C,)
+    a = a_ref[0].astype(f32)              # scalar <0
+    bm = b_ref[0, 0].astype(f32)          # (C, N)
+    cm = c_ref[0, 0].astype(f32)          # (C, N)
+    dcoef = d_ref[0].astype(f32)
+
+    la = dt * a                           # (C,) log decay per token
+    cum = jnp.cumsum(la)                  # inclusive
+    tot = cum[-1]
+    xd = x * dt[:, None]                  # dt-weighted input
+
+    state = state_scr[...]                # (N, P)
+    # inter-chunk: y_t += C_t exp(cum_t) . state
+    cdec = cm * jnp.exp(cum)[:, None]
+    y = jax.lax.dot_general(cdec, state, (((1,), (0,)), ((), ())),
+                            preferred_element_type=f32)
+    # intra-chunk pairs j <= t (half-shifted exponents)
+    cs = cm * jnp.exp(cum - 0.5 * tot)[:, None]
+    bs = bm * jnp.exp(0.5 * tot - cum)[:, None]
+    att = jax.lax.dot_general(cs, bs, (((1,), (1,)), ((), ())),
+                              preferred_element_type=f32)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(ii >= jj, att, 0.0)
+    y = y + jax.lax.dot_general(att, xd, (((1,), (0,)), ((), ())),
+                                preferred_element_type=f32)
+    # state update: h' = exp(tot) h + sum_j exp(tot - cum_j) B_j xd_j^T
+    bdec = bm * jnp.exp(tot - cum)[:, None]
+    state_scr[...] = jnp.exp(tot) * state + jax.lax.dot_general(
+        bdec, xd, (((0,), (0,)), ((), ())),
+        preferred_element_type=f32)
+    # skip connection
+    y = y + x * dcoef
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+
+def ssd_bhsp(x, dt, A, Bm, Cm, D, *, chunk: int = 128,
+             interpret: bool = False):
+    """x: (B,H,S,P); dt: (B,H,S); A,D: (H,); Bm,Cm: (B,G,S,N)."""
+    b, h, s, p_ = x.shape
+    g, n = Bm.shape[1], Bm.shape[3]
+    reps = h // g
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    grid = (b, h, nc)
+    xspec = pl.BlockSpec((1, 1, chunk, p_),
+                         lambda b_, h_, ci: (b_, h_, ci, 0))
+    dtspec = pl.BlockSpec((1, 1, chunk), lambda b_, h_, ci: (b_, h_, ci))
+    hspec = pl.BlockSpec((1,), lambda b_, h_, ci: (h_,))
+    bcspec = pl.BlockSpec((1, 1, chunk, n),
+                          lambda b_, h_, ci: (b_, h_ // reps, ci, 0))
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[xspec, dtspec, hspec, bcspec, bcspec, hspec],
+        out_specs=xspec,
+        out_shape=jax.ShapeDtypeStruct((b, h, s, p_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p_), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm, D)

@@ -1,0 +1,62 @@
+"""Jit'd public wrappers for the Pallas kernels (layout adapters + the
+interpret switch used by CPU validation)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mamba2_ssd as _ssd
+from repro.kernels import rwkv6 as _wkv
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (B, S, H, D); k, v: (B, S, KV, D) -> (B, S, H, D)."""
+    qt = jnp.swapaxes(q, 1, 2)          # (B, H, S, D)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    o = _fa.flash_attention_bhsd(qt, kt, vt, causal=causal,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=interpret)
+    return jnp.swapaxes(o, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, logw, u, *, chunk: int = 128, interpret: bool = False):
+    """r,k,v,logw: (B, S, H, K); u: (H, K) -> (B, S, H, K)."""
+    tr = lambda a: jnp.swapaxes(a, 1, 2)
+    o = _wkv.wkv6_bhsk(tr(r), tr(k), tr(v), tr(logw), u, chunk=chunk,
+                       interpret=interpret)
+    return jnp.swapaxes(o, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba2_ssd(x, dt, A, B, C, D, *, chunk: int = 128,
+               interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); B,C: (B,S,G,N); A,D: (H,) -> (B,S,H,P)."""
+    xt = jnp.swapaxes(x, 1, 2)                  # (B,H,S,P)
+    dtt = jnp.swapaxes(dt, 1, 2)                # (B,H,S)
+    Bt = jnp.swapaxes(B, 1, 2)                  # (B,G,S,N)
+    Ct = jnp.swapaxes(C, 1, 2)
+    o = _ssd.ssd_bhsp(xt, dtt, A, Bt, Ct, D, chunk=chunk,
+                      interpret=interpret)
+    return jnp.swapaxes(o, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, cache_len, *, block_k: int = 512,
+                     interpret: bool = False):
+    """q: (B, 1, H, D); caches (B, S, KV, D); cache_len (B,) ->
+    (B, 1, H, D)."""
+    q3 = q[:, 0]                                 # (B, H, D)
+    kc = jnp.swapaxes(k_cache, 1, 2)             # (B, KV, S, D)
+    vc = jnp.swapaxes(v_cache, 1, 2)
+    o = _dec.decode_attention_bhd(q3, kc, vc, cache_len, block_k=block_k,
+                                  interpret=interpret)
+    return o[:, None]

@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+These are deliberately the most literal O(S^2)/sequential implementations —
+no chunking tricks — so kernel bugs can't hide in shared structure.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, sm_scale=None):
+    """q: (B, S, H, D); k, v: (B, S, KV, D). fp32 math."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    kq = jnp.repeat(k, group, axis=2).astype(jnp.float32)
+    vq = jnp.repeat(v, group, axis=2).astype(jnp.float32)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kq) * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        sc = jnp.where(mask[None, None], sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vq).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len, *, sm_scale=None):
+    """q: (B, H, D); caches: (B, KV, S, D); cache_len: (B,)."""
+    b, h, d = q.shape
+    kv, s = k_cache.shape[1], k_cache.shape[2]
+    group = h // kv
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    kq = jnp.repeat(k_cache, group, axis=1).astype(jnp.float32)
+    vq = jnp.repeat(v_cache, group, axis=1).astype(jnp.float32)
+    sc = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kq) * sm_scale
+    valid = jnp.arange(s)[None, None, :] < cache_len[:, None, None]
+    sc = jnp.where(valid, sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p, vq).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, logw, u):
+    """Sequential WKV6. r,k,v,logw: (B, S, H, K); u: (H, K).
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t;  y_t = r_t (S_{t-1} + diag(u) k v)."""
+    f32 = jnp.float32
+    b, s, h, dk = r.shape
+    r_, k_, v_, w_ = (a.astype(f32).transpose(1, 0, 2, 3)
+                      for a in (r, k, v, logw))   # (S, B, H, K)
+
+    def step(state, xs):
+        rt, kt, vt, lwt = xs
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt,
+                       state + u.astype(f32)[None, :, :, None] * kv)
+        state = jnp.exp(lwt)[..., None] * state + kv
+        return state, y
+
+    state0 = jnp.zeros((b, h, dk, dk), f32)
+    _, ys = jax.lax.scan(step, state0, (r_, k_, v_, w_))
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype)
+
+
+def ssd_ref(x, dt, A, B, C, D):
+    """Sequential Mamba-2 SSD. x: (B,S,H,P); dt: (B,S,H); A: (H,);
+    B,C: (B,S,G,N); D: (H,)."""
+    f32 = jnp.float32
+    b, s, h, p_ = x.shape
+    g, n = B.shape[2], B.shape[3]
+    reps = h // g
+    Bh = jnp.repeat(B.astype(f32), reps, axis=2)
+    Ch = jnp.repeat(C.astype(f32), reps, axis=2)
+    xt = x.astype(f32).transpose(1, 0, 2, 3)
+    dtt = dt.astype(f32).transpose(1, 0, 2)
+    Bt = Bh.transpose(1, 0, 2, 3)
+    Ct = Ch.transpose(1, 0, 2, 3)
+
+    def step(state, xs):
+        xi, dti, bi, ci = xs
+        a = jnp.exp(dti * A.astype(f32)[None])           # (B, H)
+        xd = xi * dti[..., None]
+        state = a[..., None, None] * state + \
+            jnp.einsum("bhn,bhp->bhnp", bi, xd)
+        y = jnp.einsum("bhn,bhnp->bhp", ci, state)
+        return state, y
+
+    state0 = jnp.zeros((b, h, n, p_), f32)
+    _, ys = jax.lax.scan(step, state0, (xt, dtt, Bt, Ct))
+    y = ys.transpose(1, 0, 2, 3)
+    return (y + x.astype(f32) * D.astype(f32)[None, None, :, None]
+            ).astype(x.dtype)

@@ -1,0 +1,262 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above run BEFORE any other import (jax locks the device count
+on first init): the dry-run — and only the dry-run — sees 512 placeholder
+host devices so the production meshes can build. Smoke tests and benches
+import through normal entry points and see 1 device.
+
+Per cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. installs the sharding rules, derives param/opt/state/batch specs,
+  3. ``jit(step).lower(**ShapeDtypeStructs).compile()`` — no allocation,
+  4. prints memory_analysis() (fits?) + cost_analysis() (FLOPs/bytes),
+  5. parses the post-SPMD HLO for collectives and emits the roofline terms
+     as JSON for EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+import argparse
+import functools
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, get_arch, list_archs
+from repro.configs.shapes import SHAPES, ShapeConfig, applicable
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.roofline import analysis as RA
+from repro.serve.decode import make_prefill_step, make_serve_step
+from repro.sharding import rules as SR
+from repro.train.optimizer import OptimizerConfig, opt_state_specs
+from repro.train.train_step import TrainConfig, make_opt_state, \
+    make_train_step
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "decode":
+        tok_shape = (b, 1, cfg.n_codebooks) if cfg.n_codebooks else (b, 1)
+        out = {"tokens": jax.ShapeDtypeStruct(tok_shape, i32),
+               "cache_len": jax.ShapeDtypeStruct((b,), i32)}
+    else:
+        tok_shape = (b, s, cfg.n_codebooks) if cfg.n_codebooks else (b, s)
+        out = {"tokens": jax.ShapeDtypeStruct(tok_shape, i32)}
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct(tok_shape, i32)
+    if cfg.family == "vlm":
+        out["vision"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_vision_tokens, cfg.vision_dim), jnp.bfloat16)
+    return out
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
+               tcfg: TrainConfig, serve_layout: str = "fsdp"):
+    """Returns (jitted_fn, example_args) ready for .lower(*args)."""
+    rules = SR.AxisRules.for_mesh(mesh)
+    SR.set_rules(rules)
+    param_shapes = jax.eval_shape(
+        functools.partial(M.init_params, cfg), jax.random.PRNGKey(0))
+    resident = serve_layout == "resident" and shape.kind == "decode"
+    if resident:
+        # serving-optimized: bf16 resident weights, model-axis TP only —
+        # no data-axis weight sharding, so no per-token FSDP gathers
+        # (§Perf C)
+        param_shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32
+                else s.dtype), param_shapes)
+    pspecs = SR.param_specs(cfg, rules, fsdp=not resident,
+                            param_shapes=param_shapes)
+    batch_sds = input_specs(cfg, shape)
+    bspecs = SR.batch_specs(cfg, shape.kind, shape.global_batch, rules,
+                            layout=serve_layout if shape.kind == "decode"
+                            else "fsdp")
+
+    if shape.kind == "train":
+        if tcfg.master_weights:
+            # bf16 param storage; fp32 truth in opt_state["master"]
+            param_shapes = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    s.shape, jnp.bfloat16 if s.dtype == jnp.float32
+                    else s.dtype), param_shapes)
+        ocfg = OptimizerConfig()
+        step = make_train_step(cfg, tcfg, ocfg)
+        opt_shapes = jax.eval_shape(
+            functools.partial(make_opt_state, tcfg=tcfg), param_shapes)
+        ospecs = opt_state_specs(pspecs, param_shapes, rules, zero=True)
+        if tcfg.master_weights:
+            ospecs["master"] = ospecs["mu"]
+        if tcfg.grad_compression:
+            ospecs["residuals"] = pspecs
+        fn = jax.jit(step,
+                     in_shardings=(_named(mesh, pspecs),
+                                   _named(mesh, ospecs),
+                                   _named(mesh, bspecs)),
+                     out_shardings=(_named(mesh, pspecs),
+                                    _named(mesh, ospecs), None),
+                     donate_argnums=(0, 1))
+        return fn, (param_shapes, opt_shapes, batch_sds)
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, attn_impl=tcfg.attn_impl)
+        out_spec = NamedSharding(mesh, P(bspecs["tokens"][0], None))
+        fn = jax.jit(step,
+                     in_shardings=(_named(mesh, pspecs),
+                                   _named(mesh, bspecs)),
+                     out_shardings=out_spec)
+        return fn, (param_shapes, batch_sds)
+
+    # decode
+    buffer_len = shape.seq_len
+    step = make_serve_step(cfg, buffer_len)
+    vision_sds = batch_sds.get("vision")
+    if vision_sds is not None:
+        state_shapes = jax.eval_shape(
+            lambda v, pp: T.init_decode_state(cfg, shape.global_batch,
+                                              buffer_len, vision=v,
+                                              params=pp),
+            vision_sds, param_shapes)
+    else:
+        state_shapes = jax.eval_shape(
+            functools.partial(T.init_decode_state, cfg,
+                              shape.global_batch, buffer_len))
+    sspecs = SR.decode_state_specs(cfg, shape.global_batch, rules,
+                                   layout=serve_layout)
+    fn = jax.jit(step,
+                 in_shardings=(_named(mesh, pspecs),
+                               _named(mesh, sspecs),
+                               _named(mesh, bspecs)),
+                 out_shardings=(None, _named(mesh, sspecs), None),
+                 donate_argnums=(1,))
+    return fn, (param_shapes, state_shapes, batch_sds)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             mesh=None, tcfg: TrainConfig = None,
+             out_dir: str = "benchmarks/results/dryrun",
+             serve_layout: str = "fsdp",
+             verbose: bool = True) -> dict:
+    from repro.launch.mesh import make_production_mesh
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    label = f"{arch} x {shape_name} x {'multi' if multi_pod else 'single'}-pod"
+    if not ok:
+        if verbose:
+            print(f"[SKIP] {label}: {why}")
+        result = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                  "status": "n/a", "reason": why}
+        if out_dir:
+            out = Path(out_dir)
+            out.mkdir(parents=True, exist_ok=True)
+            tag = (f"{arch}__{shape_name}__"
+                   f"{'multi' if multi_pod else 'single'}")
+            (out / f"{tag}.json").write_text(json.dumps(result, indent=1))
+        return result
+    tcfg = tcfg or TrainConfig()
+    mesh = mesh if mesh is not None else make_production_mesh(
+        multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.perf_counter()
+    fn, args = build_cell(cfg, shape, mesh, tcfg=tcfg,
+                          serve_layout=serve_layout)
+    # NamedShardings carry the mesh: no global mesh context needed
+    lowered = fn.lower(*args)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                mem[attr] = int(v)
+    except Exception as e:  # noqa: BLE001 — CPU backend may not support it
+        mem = {"error": str(e)}
+    hlo_text = compiled.as_text()
+    roof = RA.analyze(compiled, cfg, shape, n_chips, hlo_text=hlo_text)
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok", "n_chips": int(n_chips),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "roofline": roof.as_dict(),
+        "train_config": dataclass_dict(tcfg),
+    }
+    if verbose:
+        print(f"[OK] {label}: chips={n_chips} "
+              f"compile={t_compile:.1f}s "
+              f"compute={roof.compute_s*1e3:.1f}ms "
+              f"memory={roof.memory_s*1e3:.1f}ms "
+              f"collective={roof.collective_s*1e3:.1f}ms "
+              f"dominant={roof.dominant} "
+              f"useful={roof.useful_flops_ratio:.2f} "
+              f"roofline_frac={roof.roofline_fraction:.3f}")
+        if mem and "error" not in mem:
+            print(f"     memory_analysis: {mem}")
+    if out_dir:
+        out = Path(out_dir)
+        out.mkdir(parents=True, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+        (out / f"{tag}.json").write_text(json.dumps(result, indent=1))
+    SR.set_rules(None)
+    return result
+
+
+def dataclass_dict(tcfg):
+    import dataclasses
+    return dataclasses.asdict(tcfg) if tcfg else {}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, choices=list_archs() + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) cell")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--remat", default="full",
+                    choices=["none", "full", "dots"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+    tcfg = TrainConfig(remat=args.remat, microbatches=args.microbatches)
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, multi_pod=mp, tcfg=tcfg,
+                             out_dir=args.out)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"[FAIL] {arch} x {shape} x "
+                          f"{'multi' if mp else 'single'}: {e!r}")
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

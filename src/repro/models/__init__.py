@@ -1,0 +1,1 @@
+from repro.models import blocks, mamba, model, rwkv, transformer

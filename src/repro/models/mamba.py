@@ -1,0 +1,177 @@
+"""Mamba-2 (SSD) block: in_proj -> causal depthwise conv -> selective state
+space (chunk-parallel scan) -> gated RMSNorm -> out_proj.
+
+Recurrence per head (state N x P, P = head_dim, scalar decay per head):
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t^T
+    y_t = C_t^T h_t + D * x_t
+Chunked jnp path mirrors the Pallas kernel in ``repro.kernels.mamba2_ssd``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.blocks import _dense_init
+
+
+def init_mamba_layer(cfg: ArchConfig, key):
+    """Projections are kept SEPARATE (z/x/B/C/dt) rather than one fused
+    in_proj: tensor-parallel sharding of the fused matrix would put the
+    split boundaries off shard boundaries and force per-layer reshards
+    (DESIGN.md §5). z/x columns shard over the model axis (head-aligned);
+    B/C/dt are small and stay replicated."""
+    mc = cfg.mamba
+    d = cfg.d_model
+    di = mc.d_inner(d)
+    nh = mc.n_heads(d)
+    gn = mc.n_groups * mc.d_state
+    ks = jax.random.split(key, 8)
+    dt = jnp.exp(jax.random.uniform(ks[0], (nh,), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    return {
+        "z_proj": _dense_init(ks[1], (d, di)),
+        "x_proj": _dense_init(ks[2], (d, di)),
+        "B_proj": _dense_init(ks[3], (d, gn)),
+        "C_proj": _dense_init(ks[4], (d, gn)),
+        "dt_proj": _dense_init(ks[5], (d, nh)),
+        "conv_x": 0.1 * jax.random.normal(ks[6], (mc.d_conv, di),
+                                          jnp.float32),
+        "conv_b_x": jnp.zeros((di,), jnp.float32),
+        "conv_BC": 0.1 * jax.random.normal(ks[7], (mc.d_conv, 2 * gn),
+                                           jnp.float32),
+        "conv_b_BC": jnp.zeros((2 * gn,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),   # inverse softplus
+        "gate_norm": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[1], (di, d), fan_in=di),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv via shifted adds. x: (B, S, C); w: (W, C).
+
+    state: (B, W-1, C) previous inputs for decode. Returns (y, new_state).
+    """
+    wlen = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, : wlen - 1])
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)        # (B, S+W-1, C)
+    y = sum(xp[:, i: i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(wlen))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(wlen - 1):]
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int = 256):
+    """Chunk-parallel SSD. x: (B,S,H,P); dt: (B,S,H); A: (H,)<0;
+    B,C: (B,S,G,N); D: (H,). Returns y (B,S,H,P). fp32 internals."""
+    f32 = jnp.float32
+    b, s, h, p_ = x.shape
+    g, n = B.shape[2], B.shape[3]
+    reps = h // g
+    nc = max(s // chunk, 1)
+    c = s // nc
+
+    la = dt.astype(f32) * A.astype(f32)[None, None, :]       # (B,S,H) <= 0
+    xr = (x.astype(f32) * dt.astype(f32)[..., None])          # dt-weighted input
+    Bh = jnp.repeat(B.astype(f32), reps, axis=2)              # (B,S,H,N)
+    Ch = jnp.repeat(C.astype(f32), reps, axis=2)
+
+    def to_chunks(a, feat):
+        return a.reshape(b, nc, c, h, feat).transpose(1, 0, 3, 2, 4)
+    xc = to_chunks(xr, p_)                                    # (nc,B,H,C,P)
+    bc = to_chunks(Bh, n)
+    cc = to_chunks(Ch, n)
+    lac = la.reshape(b, nc, c, h).transpose(1, 0, 3, 2)       # (nc,B,H,C)
+    cum = jnp.cumsum(lac, axis=-1)                            # inclusive
+    tot = cum[..., -1:]
+
+    def body(state, xs):
+        xcb, bcb, ccb, cumb, totb = xs
+        # inter-chunk: y += C_t exp(cum_t) . h0
+        cd = ccb * jnp.exp(cumb)[..., None]
+        y = jnp.einsum("bhcn,bhnp->bhcp", cd, state)
+        # intra-chunk pairs j <= t, decay exp(cum_t - cum_j); half-shift for
+        # numerical safety of the factorization
+        cs = ccb * jnp.exp(cumb - 0.5 * totb)[..., None]
+        bs_ = bcb * jnp.exp(0.5 * totb - cumb)[..., None]
+        att = jnp.einsum("bhcn,bhjn->bhcj", cs, bs_)
+        idx = jnp.arange(cumb.shape[-1])
+        mask = idx[:, None] >= idx[None, :]
+        att = att * mask[None, None]
+        y = y + jnp.einsum("bhcj,bhjp->bhcp", att, xcb)
+        # state: h' = exp(tot) h0 + sum_j exp(tot - cum_j) B_j (dt_j x_j)^T
+        bd = bcb * jnp.exp(totb - cumb)[..., None]
+        state = jnp.exp(totb)[..., None] * state \
+            + jnp.einsum("bhcn,bhcp->bhnp", bd, xcb)
+        return state, y
+
+    state0 = jnp.zeros((b, h, n, p_), f32)
+    _, ys = jax.lax.scan(body, state0, (xc, bc, cc, cum, tot))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h, p_)
+    y = y + x.astype(f32) * D.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype)
+
+
+def ssd_recurrent(x, dt, A, B, C, D, state):
+    """Single-token decode. x: (B,1,H,P); state: (B,H,N,P)."""
+    f32 = jnp.float32
+    xt = x.astype(f32)[:, 0] * dt.astype(f32)[:, 0, :, None]   # (B,H,P)
+    g = B.shape[2]
+    reps = x.shape[2] // g
+    bt = jnp.repeat(B.astype(f32)[:, 0], reps, axis=1)          # (B,H,N)
+    ct = jnp.repeat(C.astype(f32)[:, 0], reps, axis=1)
+    a = jnp.exp(dt.astype(f32)[:, 0] * A.astype(f32)[None])     # (B,H)
+    state = a[..., None, None] * state + jnp.einsum("bhn,bhp->bhnp", bt, xt)
+    y = jnp.einsum("bhn,bhnp->bhp", ct, state) \
+        + x.astype(f32)[:, 0] * D.astype(f32)[None, :, None]
+    return y[:, None].astype(x.dtype), state
+
+
+def mamba_block(p, x, cfg: ArchConfig, *, state=None):
+    """state: (ssm_state, conv_state) for decode, else None."""
+    mc = cfg.mamba
+    b, s, d = x.shape
+    di = mc.d_inner(d)
+    nh = mc.n_heads(d)
+    gn = mc.n_groups * mc.d_state
+    cd = x.dtype
+
+    z = x @ p["z_proj"].astype(cd)
+    xs_ = x @ p["x_proj"].astype(cd)
+    BC = jnp.concatenate([x @ p["B_proj"].astype(cd),
+                          x @ p["C_proj"].astype(cd)], axis=-1)
+    dt_raw = x @ p["dt_proj"].astype(cd)
+    conv_state = None if state is None else state[1]
+    cs_x = None if conv_state is None else conv_state[..., :di]
+    cs_bc = None if conv_state is None else conv_state[..., di:]
+    xs_, ncs_x = _causal_conv(xs_, p["conv_x"], p["conv_b_x"], cs_x)
+    BC, ncs_bc = _causal_conv(BC, p["conv_BC"], p["conv_b_BC"], cs_bc)
+    new_conv_state = jnp.concatenate([ncs_x, ncs_bc], axis=-1)
+    B, C = jnp.split(BC, [gn], axis=-1)
+    xs_ = xs_.reshape(b, s, nh, mc.head_dim)
+    B = B.reshape(b, s, mc.n_groups, mc.d_state)
+    C = C.reshape(b, s, mc.n_groups, mc.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if state is None:
+        y = ssd_chunked(xs_, dt, A, B, C, p["D"], chunk=mc.chunk)
+        new_ssm = None
+    else:
+        y, new_ssm = ssd_recurrent(xs_, dt, A, B, C, p["D"], state[0])
+    y = y.reshape(b, s, di)
+    # gated RMSNorm (Mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True)
+                            + 1e-5) * p["gate_norm"]).astype(cd)
+    out = y @ p["out_proj"].astype(cd)
+    new_state = None if state is None else (new_ssm, new_conv_state)
+    return out, new_state

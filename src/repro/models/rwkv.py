@@ -1,0 +1,188 @@
+"""RWKV-6 (Finch) blocks: time-mix with data-dependent decay + channel-mix.
+
+Parallel (train/prefill) path uses a chunked GLA-style formulation in pure
+jnp (the Pallas kernel in ``repro.kernels.rwkv6`` is the TPU-native version);
+decode path carries per-layer state ((B,H,K,V) wkv state + last token).
+
+Recurrence per head (K = V = head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t in (0,1)^K data-dependent (decay LoRA), u a learned per-channel
+bonus ("first-token" weight).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.blocks import _dense_init
+
+
+def init_rwkv_layer(cfg: ArchConfig, key):
+    r = cfg.rwkv
+    d = cfg.d_model
+    ks = jax.random.split(key, 16)
+    # 5 token-shift mixing coefficients (r,k,v,w,g) + base mix for lora input
+    p = {
+        "mu": 0.5 * jnp.ones((6, d), jnp.float32),   # x-base + r,k,v,w,g
+        "shift_lora_a": _dense_init(ks[0], (5, d, r.lora_shift)),
+        "shift_lora_b": jnp.zeros((5, r.lora_shift, d), jnp.float32),
+        "decay_lora_a": _dense_init(ks[1], (d, r.lora_decay)),
+        "decay_lora_b": jnp.zeros((r.lora_decay, d), jnp.float32),
+        "decay_base": -6.0 * jnp.ones((d,), jnp.float32),
+        "bonus_u": jnp.zeros((d,), jnp.float32),
+        "wr": _dense_init(ks[2], (d, d)),
+        "wk": _dense_init(ks[3], (d, d)),
+        "wv": _dense_init(ks[4], (d, d)),
+        "wg": _dense_init(ks[5], (d, d)),
+        "wo": _dense_init(ks[6], (d, d)),
+        "ln_x": jnp.ones((d,), jnp.float32),   # per-head group norm scale
+        # channel mix
+        "cm_mu": 0.5 * jnp.ones((2, d), jnp.float32),
+        "cm_wk": _dense_init(ks[7], (d, cfg.d_ff)),
+        "cm_wv": _dense_init(ks[8], (cfg.d_ff, d), fan_in=cfg.d_ff),
+        "cm_wr": _dense_init(ks[9], (d, d)),
+    }
+    return p
+
+
+def _token_shift(x, last=None):
+    """shift right by one along seq; ``last`` (B,1,D) fills position 0."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xs):
+    """RWKV6 data-dependent token-shift interpolation.
+
+    Returns the five mixed inputs (r,k,v,w,g): each
+        x + (xs - x) * (mu_i + lora_i(x + (xs - x) * mu_x))
+    """
+    dx = xs - x
+    base = x + dx * p["mu"][0].astype(x.dtype)
+    # 5 branches unrolled (tiny LoRA matmuls)
+    outs = []
+    for i in range(5):
+        lora = jnp.tanh(base @ p["shift_lora_a"][i].astype(x.dtype)) \
+            @ p["shift_lora_b"][i].astype(x.dtype)
+        mix = p["mu"][i + 1].astype(x.dtype) + lora
+        outs.append(x + dx * mix)
+    return outs
+
+
+def _decay(p, xw):
+    """per-token decay w_t in (0,1)^D (log-space).  Returns log(w_t) <= 0."""
+    lora = jnp.tanh(xw @ p["decay_lora_a"].astype(xw.dtype)) \
+        @ p["decay_lora_b"].astype(xw.dtype)
+    logw = -jnp.exp((p["decay_base"].astype(jnp.float32)
+                     + lora.astype(jnp.float32)))
+    return logw  # (B, S, D), <= 0
+
+
+def _group_norm_heads(x, scale, n_heads, eps=1e-5):
+    """GroupNorm over each head's channels. x: (B, S, D)."""
+    b, s, d = x.shape
+    hx = x.reshape(b, s, n_heads, d // n_heads).astype(jnp.float32)
+    mu = hx.mean(-1, keepdims=True)
+    var = ((hx - mu) ** 2).mean(-1, keepdims=True)
+    hx = (hx - mu) * jax.lax.rsqrt(var + eps)
+    return (hx.reshape(b, s, d) * scale).astype(x.dtype)
+
+
+def wkv6_chunked(r, k, v, logw, u, *, chunk: int = 128):
+    """Chunk-parallel WKV6 scan (GLA-style), pure jnp.
+
+    r,k,v: (B, S, H, K); logw: (B, S, H, K) (log decay, <=0); u: (H, K).
+    Returns y: (B, S, H, K).  fp32 internals.
+    """
+    b, s, h, dk = r.shape
+    nc = max(s // chunk, 1)
+    c = s // nc
+    f32 = jnp.float32
+    r_, k_, v_, lw = (a.astype(f32).reshape(b, nc, c, h, dk).transpose(1, 0, 3, 2, 4)
+                      for a in (r, k, v, logw))   # (nc, B, H, C, K)
+
+    # within-chunk cumulative log decay, exclusive: q_i = sum_{j<i} logw_j
+    cum = jnp.cumsum(lw, axis=3)
+    cum_excl = cum - lw                       # (nc,B,H,C,K)
+    total = cum[:, :, :, -1:, :]              # (nc,B,H,1,K) full-chunk decay
+
+    def body(state, xs):
+        rc, kc, vc, ce, tot, lwc = xs          # each (B,H,C,K) etc.
+        # inter-chunk: y_inter = (r * exp(ce)) @ state   (ce <= 0: stable)
+        rd = rc * jnp.exp(ce)
+        y_inter = jnp.einsum("bhck,bhkv->bhcv", rd, state)
+        # intra-chunk scores: A_ij = sum_k r_ik k_jk exp(ce_i - cum_j), j<i.
+        # ce_i - cum_j <= 0 pairwise, but the factorization exp(ce)*exp(-cum)
+        # can overflow alone -> shift both exponents by tot/2 (bounds each
+        # factor's exponent by |tot|/2).
+        rds = rc * jnp.exp(ce - 0.5 * tot)
+        ki = kc * jnp.exp(0.5 * tot - (ce + lwc))   # k_j * exp(tot/2 - cum_j)
+        att = jnp.einsum("bhck,bhjk->bhcj", rds, ki)
+        idx = jnp.arange(rc.shape[2])
+        mask = idx[:, None] > idx[None, :]
+        att = att * mask[None, None]
+        # diagonal: bonus u term  y_i += (r_i . (u * k_i)) v_i
+        diag = jnp.einsum("bhck,bhck->bhc", rc, kc * u.astype(f32)[None, :, None, :])
+        y = y_inter + jnp.einsum("bhcj,bhjv->bhcv", att, vc) \
+            + diag[..., None] * vc
+        # state update: S' = diag(exp(tot)) S + sum_j exp(tot - cum_j) k_j v_j
+        kdec = kc * jnp.exp(tot - (ce + lwc))
+        state = jnp.exp(tot).transpose(0, 1, 3, 2) * state \
+            + jnp.einsum("bhck,bhcv->bhkv", kdec, vc)
+        return state, y
+
+    state0 = jnp.zeros((b, h, dk, dk), f32)
+    _, ys = jax.lax.scan(body, state0, (r_, k_, v_, cum_excl, total, lw))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dk)
+    return y.astype(r.dtype)
+
+
+def wkv6_recurrent(r, k, v, logw, u, state):
+    """Single-token decode. r,k,v,logw: (B, 1, H, K); state (B,H,K,V)."""
+    f32 = jnp.float32
+    rt, kt, vt, lwt = (a.astype(f32)[:, 0] for a in (r, k, v, logw))  # (B,H,K)
+    kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+    y = jnp.einsum("bhk,bhkv->bhv", rt, state + u.astype(f32)[None, :, :, None] * kv)
+    state = jnp.exp(lwt)[..., None] * state + kv
+    return y[:, None].astype(r.dtype), state
+
+
+def rwkv_time_mix(p, x, cfg: ArchConfig, *, state=None, last_x=None):
+    """Time-mix sub-block. state: (wkv_state, last_token) for decode."""
+    r_cfg = cfg.rwkv
+    b, s, d = x.shape
+    h = d // r_cfg.head_dim
+    cd = x.dtype
+    xs = _token_shift(x, last_x)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xs)
+    r = (xr @ p["wr"].astype(cd)).reshape(b, s, h, r_cfg.head_dim)
+    k = (xk @ p["wk"].astype(cd)).reshape(b, s, h, r_cfg.head_dim)
+    v = (xv @ p["wv"].astype(cd)).reshape(b, s, h, r_cfg.head_dim)
+    g = jax.nn.silu(xg @ p["wg"].astype(cd))
+    logw = _decay(p, xw).reshape(b, s, h, r_cfg.head_dim)
+    u = p["bonus_u"].reshape(h, r_cfg.head_dim)
+
+    if state is None:
+        y = wkv6_chunked(r, k, v, logw.astype(jnp.float32), u,
+                         chunk=r_cfg.chunk)
+        new_state = None
+    else:
+        y, new_wkv = wkv6_recurrent(r, k, v, logw, u, state)
+        new_state = new_wkv
+    y = y.reshape(b, s, d)
+    y = _group_norm_heads(y, p["ln_x"].astype(jnp.float32), h)
+    out = (y * g) @ p["wo"].astype(cd)
+    return out, new_state
+
+
+def rwkv_channel_mix(p, x, *, last_x=None):
+    cd = x.dtype
+    xs = _token_shift(x, last_x)
+    dx = xs - x
+    xk = x + dx * p["cm_mu"][0].astype(cd)
+    xr = x + dx * p["cm_mu"][1].astype(cd)
+    k = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(cd)))
+    return jax.nn.sigmoid(xr @ p["cm_wr"].astype(cd)) * (k @ p["cm_wv"].astype(cd))

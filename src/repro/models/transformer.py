@@ -1,0 +1,358 @@
+"""Unified stacked model over heterogeneous block types.
+
+Layouts (keeps HLO size ~one layer body regardless of depth):
+  uniform : one ``lax.scan`` over all (stacked-param) layers
+            -> dense, moe, rwkv archs
+  periodic: outer scan over periods of [inner scan of k homogeneous layers +
+            one special layer], + trailing inner layers
+            -> vlm   (4 dense + 1 cross-attn) x 8
+            -> hybrid(5 mamba + 1 *shared* attn block) x 13 + 3 mamba
+
+Decode state is a pytree with the same stacking as the params, threaded
+through the scans as xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks as B
+from repro.models import mamba as M
+from repro.models import rwkv as R
+from repro.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# layout
+# ---------------------------------------------------------------------------
+
+def build_layout(cfg: ArchConfig) -> dict:
+    if cfg.family == "vlm":
+        k = cfg.cross_attn_every
+        periods = cfg.n_layers // k
+        trailing = cfg.n_layers - periods * k
+        return {"kind": "periodic", "periods": periods, "inner_n": k - 1,
+                "inner_block": "dense", "single_block": "cross_attn",
+                "trailing": trailing}
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        periods = cfg.n_layers // k
+        trailing = cfg.n_layers - periods * k
+        return {"kind": "periodic", "periods": periods, "inner_n": k - 1,
+                "inner_block": "mamba", "single_block": "shared_attn",
+                "trailing": trailing}
+    block = {"ssm": "rwkv"}.get(cfg.family)
+    if block is None:
+        block = "moe" if cfg.moe is not None else "dense"
+    return {"kind": "uniform", "block": block, "n": cfg.n_layers}
+
+
+# ---------------------------------------------------------------------------
+# single-layer init / forward
+# ---------------------------------------------------------------------------
+
+def init_layer(block: str, cfg: ArchConfig, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if block == "dense" or block == "shared_attn":
+        return {"attn": B.init_attention(cfg, k1),
+                "mlp": B.init_mlp(cfg, k2),
+                "ln1": B.init_norm(cfg), "ln2": B.init_norm(cfg)}
+    if block == "moe":
+        return {"attn": B.init_attention(cfg, k1),
+                "moe": B.init_moe(cfg, k2),
+                "ln1": B.init_norm(cfg), "ln2": B.init_norm(cfg)}
+    if block == "cross_attn":
+        return {"attn": B.init_attention(cfg, k1, d_src=cfg.vision_dim),
+                "mlp": B.init_mlp(cfg, k2),
+                "ln1": B.init_norm(cfg), "ln2": B.init_norm(cfg),
+                "gate_attn": jnp.zeros((), jnp.float32),
+                "gate_mlp": jnp.zeros((), jnp.float32)}
+    if block == "rwkv":
+        return {"tm": R.init_rwkv_layer(cfg, k1),
+                "ln1": B.init_norm(cfg), "ln2": B.init_norm(cfg)}
+    if block == "mamba":
+        return {"m": M.init_mamba_layer(cfg, k1),
+                "ln1": B.init_norm(cfg)}
+    raise ValueError(block)
+
+
+def layer_fwd(block: str, p, x, cfg: ArchConfig, ctx: dict,
+              state=None, collect_kv: bool = False):
+    """Returns (x, new_state, aux, kv_out)."""
+    aux = jnp.zeros((), jnp.float32)
+    kv_out = None
+    decode = ctx["mode"] == "decode"
+    if block in ("dense", "moe", "shared_attn"):
+        h = B.apply_norm(p["ln1"], x, cfg)
+        kv_cache = state if decode else None
+        o, new_cache = B.attention_block(
+            p["attn"], h, cfg, rope=ctx.get("rope"),
+            positions=ctx.get("positions"),
+            kv_cache=kv_cache, cache_len=ctx.get("cache_len"),
+            attn_impl=ctx.get("attn_impl", "xla"))
+        x = x + o
+        h = B.apply_norm(p["ln2"], x, cfg)
+        if block == "moe":
+            y, aux = B.moe_block(p["moe"], h, cfg)
+        else:
+            y = B.mlp_block(p["mlp"], h)
+        x = x + y
+        new_state = new_cache if decode else None
+        x = constrain(x, ("batch", None, None))
+        return x, new_state, aux, kv_out
+    if block == "cross_attn":
+        h = B.apply_norm(p["ln1"], x, cfg)
+        if decode:
+            kv, vv = state          # precomputed vision K/V
+            hd = cfg.resolved_head_dim
+            b_, s_, _ = h.shape
+            q = (h @ p["attn"]["wq"].astype(h.dtype)).reshape(
+                b_, s_, cfg.n_heads, hd)
+            if cfg.qk_norm:
+                q = B.rms_head_norm(q, p["attn"]["q_norm"].astype(h.dtype))
+            kq = B._gqa_expand(kv.astype(h.dtype), cfg.n_heads)
+            vq = B._gqa_expand(vv.astype(h.dtype), cfg.n_heads)
+            sc = jnp.einsum("bqhd,bkhd->bhqk", q, kq,
+                            preferred_element_type=jnp.float32) * hd ** -0.5
+            pr = jax.nn.softmax(sc, -1).astype(h.dtype)
+            o = jnp.einsum("bhqk,bkhd->bqhd", pr, vq)
+            o = o.reshape(b_, s_, cfg.n_heads * hd) @ \
+                p["attn"]["wo"].astype(h.dtype)
+            new_state = state
+        else:
+            o, _ = B.attention_block(p["attn"], h, cfg,
+                                     kv_src=ctx["vision"].astype(h.dtype))
+            new_state = None
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * o
+        h = B.apply_norm(p["ln2"], x, cfg)
+        x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * B.mlp_block(p["mlp"], h)
+        x = constrain(x, ("batch", None, None))
+        return x, new_state, aux, None
+    if block == "rwkv":
+        h = B.apply_norm(p["ln1"], x, cfg)
+        if decode:
+            wkv, tm_last, cm_last = state
+            o, new_wkv = R.rwkv_time_mix(p["tm"], h, cfg, state=wkv,
+                                         last_x=tm_last)
+            new_tm_last = h[:, -1:]
+            x = x + o
+            h2 = B.apply_norm(p["ln2"], x, cfg)
+            x = x + R.rwkv_channel_mix(p["tm"], h2, last_x=cm_last)
+            new_state = (new_wkv, new_tm_last, h2[:, -1:])
+        else:
+            o, _ = R.rwkv_time_mix(p["tm"], h, cfg)
+            x = x + o
+            h2 = B.apply_norm(p["ln2"], x, cfg)
+            x = x + R.rwkv_channel_mix(p["tm"], h2)
+            new_state = None
+        x = constrain(x, ("batch", None, None))
+        return x, new_state, aux, None
+    if block == "mamba":
+        h = B.apply_norm(p["ln1"], x, cfg)
+        o, new_state = M.mamba_block(p["m"], h, cfg, state=state)
+        x = x + o
+        x = constrain(x, ("batch", None, None))
+        return x, new_state, aux, None
+    raise ValueError(block)
+
+
+# ---------------------------------------------------------------------------
+# stacked init
+# ---------------------------------------------------------------------------
+
+def _stack_init(block: str, cfg: ArchConfig, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_layer(block, cfg, k))(keys)
+
+
+def init_stack(cfg: ArchConfig, key):
+    layout = build_layout(cfg)
+    if layout["kind"] == "uniform":
+        return {"layers": _stack_init(layout["block"], cfg, key, layout["n"])}
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    periods, inner_n = layout["periods"], layout["inner_n"]
+    inner = jax.vmap(lambda k: _stack_init(layout["inner_block"], cfg, k,
+                                           inner_n))(
+        jax.random.split(k1, periods))
+    out = {"layers": {"inner": inner,
+                      "trailing": _stack_init(layout["inner_block"], cfg, k2,
+                                              max(layout["trailing"], 1))}}
+    if layout["single_block"] == "cross_attn":
+        out["layers"]["single"] = _stack_init("cross_attn", cfg, k3, periods)
+    else:   # hybrid: ONE shared attn block
+        out["shared_block"] = init_layer("shared_attn", cfg, k4)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# stacked forward
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, ctx):
+    pol = ctx.get("remat")
+    if ctx["mode"] != "train" or pol in (None, "none"):
+        return fn
+    if pol == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _scan_layers(block: str, stacked, x, cfg, ctx, states=None,
+                 collect_kv=False):
+    """Scan homogeneous stacked layers. Returns (x, aux, new_states, kvs)."""
+    decode = ctx["mode"] == "decode"
+
+    if decode:
+        def body(carry, xs):
+            x, aux = carry
+            p, st = xs
+            x, new_st, a, _ = layer_fwd(block, p, x, cfg, ctx, st)
+            return (x, aux + a), new_st
+        (x, aux), new_states = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (stacked, states))
+        return x, aux, new_states, None
+
+    def body(carry, p):
+        x, aux = carry
+        x, _, a, kv = layer_fwd(block, p, x, cfg, ctx, None, collect_kv)
+        return (x, aux + a), kv
+    body = _maybe_remat(body, ctx)
+    (x, aux), kvs = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                 stacked)
+    return x, aux, None, kvs
+
+
+def apply_stack(params, x, cfg: ArchConfig, ctx: dict, states=None):
+    """Run all layers. states: decode-state pytree or None.
+
+    Returns (x, aux, new_states)."""
+    layout = build_layout(cfg)
+    if layout["kind"] == "uniform":
+        x, aux, new_states, _ = _scan_layers(
+            layout["block"], params["layers"], x, cfg, ctx,
+            None if states is None else states["layers"])
+        return x, aux, (None if states is None else {"layers": new_states})
+
+    periods = layout["periods"]
+    inner_block = layout["inner_block"]
+    single_block = layout["single_block"]
+    decode = ctx["mode"] == "decode"
+    shared_p = params.get("shared_block")
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if decode:
+        def outer(carry, xs):
+            x, aux = carry
+            if single_block == "cross_attn":
+                (inner_p, single_p), (inner_st, single_st) = xs
+            else:
+                inner_p, (inner_st, single_st) = xs
+                single_p = shared_p
+            x, a1, new_inner_st, _ = _scan_layers(
+                inner_block, inner_p, x, cfg, ctx, inner_st)
+            x, new_single_st, a2, _ = layer_fwd(
+                single_block, single_p, x, cfg, ctx, single_st)
+            return (x, aux + a1 + a2), (new_inner_st, new_single_st)
+
+        if single_block == "cross_attn":
+            xs = ((params["layers"]["inner"], params["layers"]["single"]),
+                  (states["inner"], states["single"]))
+        else:
+            xs = (params["layers"]["inner"],
+                  (states["inner"], states["single"]))
+        (x, aux), new_sts = jax.lax.scan(outer, (x, aux0), xs)
+        new_states = {"inner": new_sts[0], "single": new_sts[1]}
+        if layout["trailing"]:
+            x, a3, new_tr, _ = _scan_layers(
+                inner_block, params["layers"]["trailing"], x, cfg, ctx,
+                states["trailing"])
+            aux = aux + a3
+            new_states["trailing"] = new_tr
+        else:
+            new_states["trailing"] = states["trailing"]
+        return x, aux, new_states
+
+    def outer(carry, xs):
+        x, aux = carry
+        if single_block == "cross_attn":
+            inner_p, single_p = xs
+        else:
+            inner_p, single_p = xs, shared_p
+        x, a1, _, _ = _scan_layers(inner_block, inner_p, x, cfg, ctx)
+        x, _, a2, _ = layer_fwd(single_block, single_p, x, cfg, ctx)
+        return (x, aux + a1 + a2), None
+
+    if single_block == "cross_attn":
+        xs = (params["layers"]["inner"], params["layers"]["single"])
+    else:
+        xs = params["layers"]["inner"]
+    (x, aux), _ = jax.lax.scan(outer, (x, aux0), xs)
+    if layout["trailing"]:
+        x, a3, _, _ = _scan_layers(inner_block,
+                                   params["layers"]["trailing"], x, cfg, ctx)
+        aux = aux + a3
+    return x, aux, None
+
+
+# ---------------------------------------------------------------------------
+# decode-state init
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ArchConfig, batch: int, buffer_len: int,
+                      dtype=jnp.bfloat16, vision=None, params=None):
+    """Zeroed decode state (cache buffers) for the whole stack."""
+    hd = cfg.resolved_head_dim
+    layout = build_layout(cfg)
+
+    def attn_state():
+        shape = (batch, buffer_len, cfg.n_kv_heads, hd)
+        return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+    def rwkv_state():
+        h = cfg.d_model // cfg.rwkv.head_dim
+        return (jnp.zeros((batch, h, cfg.rwkv.head_dim, cfg.rwkv.head_dim),
+                          jnp.float32),
+                jnp.zeros((batch, 1, cfg.d_model), dtype),
+                jnp.zeros((batch, 1, cfg.d_model), dtype))
+
+    def mamba_state():
+        mc = cfg.mamba
+        nh = mc.n_heads(cfg.d_model)
+        conv_ch = mc.d_inner(cfg.d_model) + 2 * mc.n_groups * mc.d_state
+        return (jnp.zeros((batch, nh, mc.d_state, mc.head_dim), jnp.float32),
+                jnp.zeros((batch, mc.d_conv - 1, conv_ch), dtype))
+
+    def cross_state(single_p):
+        # precompute vision K/V from params (requires params + vision)
+        b_, nv, _ = vision.shape
+        k = (vision @ single_p["attn"]["wk"].astype(vision.dtype)).reshape(
+            b_, nv, cfg.n_kv_heads, hd)
+        v = (vision @ single_p["attn"]["wv"].astype(vision.dtype)).reshape(
+            b_, nv, cfg.n_kv_heads, hd)
+        return (k.astype(dtype), v.astype(dtype))
+
+    def stack_states(maker, n):
+        one = maker()
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+
+    if layout["kind"] == "uniform":
+        maker = {"dense": attn_state, "moe": attn_state,
+                 "rwkv": rwkv_state}.get(layout["block"], attn_state)
+        return {"layers": stack_states(maker, layout["n"])}
+
+    periods, inner_n = layout["periods"], layout["inner_n"]
+    inner_maker = mamba_state if layout["inner_block"] == "mamba" \
+        else attn_state
+    inner = stack_states(lambda: jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (inner_n,) + a.shape), inner_maker()),
+        periods)
+    if layout["single_block"] == "cross_attn":
+        singles = jax.vmap(cross_state)(params["layers"]["single"])
+    else:
+        singles = stack_states(attn_state, periods)
+    trailing = stack_states(inner_maker, max(layout["trailing"], 1))
+    return {"inner": inner, "single": singles, "trailing": trailing}

@@ -1,0 +1,3 @@
+from repro.sharding.rules import (AxisRules, constrain, set_rules,
+                                  current_rules, param_specs,
+                                  batch_specs, logical_to_spec)

@@ -1,0 +1,136 @@
+"""Fault-tolerant, datalake-versioned checkpoints with elastic restore.
+
+Checkpoints are ACAI filesets ("<run>-ckpt" versions), written through a
+transactional upload session (a crashed save never becomes a visible
+version) with provenance edges from the training job. Restore reshards onto
+ANY mesh: arrays are saved unsharded-logical (global shape) and re-placed
+with the target mesh's NamedShardings — elastic scaling across restarts.
+"""
+from __future__ import annotations
+
+import io
+import json
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.core.acai import AcaiProject
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _unflatten_like(template, flat: dict[str, Any], cast: bool = False):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    leaves = []
+    for path, tmpl_leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        leaf = flat[key]
+        if cast and hasattr(tmpl_leaf, "dtype"):
+            leaf = np.asarray(leaf).astype(tmpl_leaf.dtype)
+        leaves.append(leaf)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+
+
+def _np_savable(v) -> np.ndarray:
+    """npz cannot hold bf16; widen to fp32 (dtype restored from template)."""
+    arr = np.asarray(v)
+    if arr.dtype == jnp.bfloat16:
+        arr = arr.astype(np.float32)
+    return arr
+
+
+class CheckpointManager:
+    def __init__(self, project: AcaiProject, run_name: str,
+                 keep: int = 3):
+        self.project = project
+        self.run = run_name
+        self.keep = keep
+
+    @property
+    def fileset(self) -> str:
+        return f"{self.run}-ckpt"
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, params, opt_state=None,
+             extra: Optional[dict] = None, job_id: Optional[str] = None,
+             input_fileset: Optional[str] = None) -> str:
+        state = {"params": params}
+        if opt_state is not None:
+            state["opt"] = opt_state
+        flat = _flatten(state)
+        buf = io.BytesIO()
+        np.savez(buf, **{k: _np_savable(v) for k, v in flat.items()})
+        manifest = {"step": step, "keys": sorted(flat),
+                    "extra": extra or {}}
+        storage = self.project.storage
+        paths = [f"/{self.fileset}/state.npz", f"/{self.fileset}/manifest.json"]
+        sid = storage.begin_session(paths, creator="trainer")
+        storage.session_put(sid, paths[0], buf.getvalue())
+        storage.session_put(sid, paths[1], json.dumps(manifest).encode())
+        fvs = storage.commit_session(sid)
+        fsv = self.project.filesets.create(
+            self.fileset, [f"{fv.path}@{fv.version}" for fv in fvs],
+            creator="trainer")
+        self.project.metadata.register(fsv.ref, kind="checkpoint",
+                                       step=step, run=self.run,
+                                       **(extra or {}))
+        if job_id is not None:
+            src = None
+            if input_fileset:
+                src = self.project.filesets.resolve(input_fileset).ref
+            self.project.provenance.add_job_edge(src=src, dst=fsv.ref,
+                                                 job_id=job_id)
+        return fsv.ref
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        if not self.project.filesets.exists(self.fileset):
+            return None
+        ref = self.project.filesets.resolve(self.fileset).ref
+        return self.project.metadata.get(ref).get("step")
+
+    def restore(self, template, *, version: Optional[int] = None,
+                mesh=None, specs=None):
+        """Rebuild ``template``-shaped state. With (mesh, specs) the arrays
+        are placed sharded on the target mesh — any device count (elastic).
+        Returns (state, step)."""
+        ref = self.fileset if version is None else \
+            f"{self.fileset}:{version}"
+        fsv = self.project.filesets.resolve(ref)
+        raw = self.project.storage._get_blob(
+            self.project.storage.resolve(
+                f"/{self.fileset}/state.npz",
+                fsv.files[f"/{self.fileset}/state.npz"]).blob)
+        man = json.loads(self.project.storage._get_blob(
+            self.project.storage.resolve(
+                f"/{self.fileset}/manifest.json",
+                fsv.files[f"/{self.fileset}/manifest.json"]).blob))
+        npz = np.load(io.BytesIO(raw))
+        flat = {k: npz[k] for k in npz.files}
+        state = _unflatten_like(template, flat, cast=True)
+        if mesh is not None and specs is not None:
+            flat_spec = _flatten(specs)
+            placed = {}
+            for key, arr in _flatten(state).items():
+                spec = flat_spec.get(key)
+                if spec is not None:
+                    placed[key] = jax.device_put(
+                        arr, NamedSharding(mesh, spec))
+                else:
+                    placed[key] = jnp.asarray(arr)
+            state = _unflatten_like(template, placed)
+        else:
+            state = jax.tree.map(jnp.asarray, state)
+        return state, man["step"]

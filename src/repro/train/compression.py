@@ -1,0 +1,75 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Two pieces:
+  * ``compress``/``decompress`` + ``error_feedback``: bf16 or int8
+    (per-tensor scale) gradient quantization with residual carry-over, so
+    the optimizer sees what a compressed all-reduce would deliver.
+  * ``compressed_psum``: a shard_map building block performing the actual
+    low-precision all-reduce on a real mesh axis (used by the pod-DP path;
+    validated in tests on a host-device mesh).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def compress(g, kind: Literal["bf16", "int8"] = "bf16"):
+    if kind == "bf16" or g.size == 0:
+        return g.astype(jnp.bfloat16), None
+    # int8: symmetric per-tensor scale
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q, scale, dtype=jnp.float32):
+    if scale is None:
+        return q.astype(dtype)
+    return q.astype(dtype) * scale
+
+
+def compress_grads_with_feedback(grads, residuals, kind="bf16"):
+    """Returns (compressed-then-decompressed grads, new residuals).
+
+    Error feedback: residual_t+1 = g + residual_t - Q(g + residual_t); the
+    quantization error re-enters the next step instead of being lost.
+    """
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = compress(g32, kind)
+        deq = decompress(q, scale)
+        return deq, g32 - deq
+
+    out = jax.tree.map(one, grads, residuals)
+    new_g = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_r = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_g, new_r
+
+
+def init_residuals(grads_shape):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_shape)
+
+
+def compressed_psum(x, axis_name: str, kind: Literal["bf16", "int8"] = "bf16"):
+    """All-reduce in low precision inside shard_map: quantize locally,
+    all-gather the compressed shards, dequantize + sum in fp32.
+
+    Halves (bf16) or quarters (int8) the bytes on the wire vs fp32 psum at
+    the cost of an all-gather layout; on slow inter-pod links this is the
+    standard trade (1-bit Adam / DALL-E bf16-allreduce lineage).
+    """
+    q, scale = compress(x, kind)
+    qs = jax.lax.all_gather(q, axis_name)            # (n, ...) compressed
+    if scale is not None:
+        scales = jax.lax.all_gather(scale, axis_name)
+        return jnp.sum(qs.astype(jnp.float32)
+                       * scales.reshape((-1,) + (1,) * x.ndim), axis=0)
+    return jnp.sum(qs.astype(jnp.float32), axis=0)

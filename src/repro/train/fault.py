@@ -1,0 +1,87 @@
+"""Fault tolerance: checkpoint/restart supervision + straggler watchdog.
+
+``TrainSupervisor`` wraps a step function with (a) periodic checkpointing
+through the data lake, (b) automatic restore-and-continue on failures
+(injectable for tests; on a real pod this is the coordinator restart path),
+and (c) a step-time watchdog implementing the paper's straggler policy at
+training-step granularity (a step slower than ``straggler_factor`` x the
+running median is flagged; on real fleets the launcher would reschedule the
+slow host — here we record + expose the signal)."""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable, Optional
+
+from repro.train.checkpoints import CheckpointManager
+
+
+class JobPreempted(RuntimeError):
+    """Simulated node failure / preemption."""
+
+
+@dataclasses.dataclass
+class SupervisorReport:
+    steps_run: int = 0
+    restarts: int = 0
+    checkpoints: int = 0
+    straggler_steps: list = dataclasses.field(default_factory=list)
+    final_step: int = 0
+
+
+class TrainSupervisor:
+    def __init__(self, ckpt: CheckpointManager, *, save_every: int = 10,
+                 straggler_factor: float = 3.0, max_restarts: int = 10):
+        self.ckpt = ckpt
+        self.save_every = save_every
+        self.straggler_factor = straggler_factor
+        self.max_restarts = max_restarts
+
+    def run(self, step_fn: Callable, state: dict, n_steps: int,
+            batch_fn: Callable[[int], dict],
+            failure_hook: Optional[Callable[[int], None]] = None,
+            time_fn: Callable[[], float] = time.perf_counter,
+            ) -> tuple[dict, SupervisorReport]:
+        """state: {"params":..., "opt":..., "step": int}."""
+        report = SupervisorReport()
+        step_times: list[float] = []
+        step = state["step"]
+        while step < n_steps:
+            try:
+                if failure_hook is not None:
+                    failure_hook(step)       # may raise JobPreempted
+                t0 = time_fn()
+                params, opt, metrics = step_fn(state["params"],
+                                               state["opt"], batch_fn(step))
+                dt = time_fn() - t0
+                state = {"params": params, "opt": opt, "step": step + 1}
+                report.steps_run += 1
+                if len(step_times) >= 3:
+                    med = statistics.median(step_times)
+                    if dt > self.straggler_factor * med:
+                        report.straggler_steps.append(step)
+                step_times.append(dt)
+                step += 1
+                if step % self.save_every == 0 or step == n_steps:
+                    self.ckpt.save(step, state["params"], state["opt"],
+                                   extra={"loss": float(metrics["loss"])})
+                    report.checkpoints += 1
+            except JobPreempted:
+                report.restarts += 1
+                if report.restarts > self.max_restarts:
+                    raise
+                restored, ck_step = self._restore_or_initial(state)
+                state = restored
+                step = ck_step
+        report.final_step = step
+        return state, report
+
+    def _restore_or_initial(self, template_state):
+        last = self.ckpt.latest_step()
+        if last is None:
+            return {"params": template_state["params"],
+                    "opt": template_state["opt"], "step": 0}, 0
+        st, step = self.ckpt.restore({"params": template_state["params"],
+                                      "opt": template_state["opt"]})
+        return {"params": st["params"], "opt": st["opt"], "step": step}, step

@@ -1,0 +1,40 @@
+"""Dry-run machinery smoke test in a subprocess (needs its own process:
+XLA locks the host-device count at first init; the suite must keep 1)."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import json
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4, 4), ("data", "model"))
+out = {}
+r = run_cell("olmo-1b", "decode_32k", mesh=mesh, out_dir=None,
+             verbose=False)
+out["decode"] = {"status": r["status"],
+                 "dominant": r["roofline"]["dominant"],
+                 "coll": r["roofline"]["collective_s"]}
+r = run_cell("qwen3-8b", "long_500k", mesh=mesh, out_dir=None,
+             verbose=False)
+out["na"] = r["status"]
+print("RESULT::" + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_cell_in_subprocess():
+    proc = subprocess.run([sys.executable, "-c", SCRIPT],
+                          capture_output=True, text=True, timeout=560,
+                          env={**__import__("os").environ,
+                               "PYTHONPATH": "src"})
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT::")][0]
+    out = json.loads(line[len("RESULT::"):])
+    assert out["decode"]["status"] == "ok"
+    assert out["na"] == "n/a"          # full-attention arch skips long_500k

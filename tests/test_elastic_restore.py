@@ -1,0 +1,54 @@
+"""Elastic scaling: a checkpoint saved under one mesh restores — correctly
+resharded — onto a DIFFERENT device count (subprocess for device count)."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.acai import AcaiProject
+from repro.train.checkpoints import CheckpointManager
+
+proj = AcaiProject("p", "/tmp/acai-elastic")
+ckpt = CheckpointManager(proj, "elastic")
+
+mesh_a = jax.make_mesh((4,), ("model",), devices=jax.devices()[:4])
+mesh_b = jax.make_mesh((2,), ("model",), devices=jax.devices()[:2])
+spec = {"w": P("model", None), "b": P(None)}
+
+w = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+b = jnp.ones((8,), jnp.float32)
+params_a = {"w": jax.device_put(w, NamedSharding(mesh_a, spec["w"])),
+            "b": jax.device_put(b, NamedSharding(mesh_a, spec["b"]))}
+ckpt.save(3, params_a)
+
+restored, step = ckpt.restore({"params": params_a}, mesh=mesh_b,
+                              specs={"params": spec})
+rw = restored["params"]["w"]
+ok_vals = bool(jnp.array_equal(rw, w))
+ok_shard = len(rw.sharding.device_set) == 2
+print("RESULT::" + json.dumps({"step": step, "vals": ok_vals,
+                               "devices": ok_shard}))
+"""
+
+
+@pytest.mark.slow
+def test_checkpoint_restores_to_different_mesh():
+    import shutil
+    shutil.rmtree("/tmp/acai-elastic", ignore_errors=True)
+    proc = subprocess.run([sys.executable, "-c", SCRIPT],
+                          capture_output=True, text=True, timeout=300,
+                          env={**__import__("os").environ,
+                               "PYTHONPATH": "src"})
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT::")][0]
+    out = json.loads(line[len("RESULT::"):])
+    assert out == {"step": 3, "vals": True, "devices": True}

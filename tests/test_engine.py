@@ -1,0 +1,173 @@
+"""Execution-engine behaviour: lifecycle, FIFO+quota scheduling, agent
+protocol, log parser, quorum straggler policy, auth."""
+import pytest
+
+from repro.core.acai import AcaiPlatform, AuthError
+from repro.core.engine.lifecycle import IllegalTransition, JobState, \
+    check_transition
+from repro.core.engine.logparse import parse_line, parse_log
+from repro.core.engine.registry import JobSpec
+from repro.core.provision.pricing import CPU_PRICING
+
+
+def test_lifecycle_transitions():
+    check_transition(JobState.SUBMITTED, JobState.QUEUED)
+    check_transition(JobState.QUEUED, JobState.LAUNCHING)
+    check_transition(JobState.RUNNING, JobState.FINISHED)
+    with pytest.raises(IllegalTransition):
+        check_transition(JobState.FINISHED, JobState.RUNNING)
+    with pytest.raises(IllegalTransition):
+        check_transition(JobState.SUBMITTED, JobState.RUNNING)
+
+
+def test_log_parser():
+    assert parse_line("[[acai:precision=0.91]]") == {"precision": 0.91}
+    assert parse_line("[[acai:model=BERT,epoch=5]]") == \
+        {"model": "BERT", "epoch": 5}
+    text = "step 1\n[[acai:loss=2.5]]\nstep 2\n[[acai:loss=1.5]]\n"
+    assert parse_log(text) == {"loss": 1.5}   # latest wins
+
+
+@pytest.fixture
+def platform(tmp_path):
+    plat = AcaiPlatform(tmp_path)
+    admin = plat.create_project(plat.admin_token, "proj")
+    return plat, admin
+
+
+def test_auth(platform, tmp_path):
+    plat, admin = platform
+    with pytest.raises(AuthError):
+        plat.authenticate("bogus")
+    with pytest.raises(AuthError):
+        plat.create_project("bogus", "p2")
+    user_tok = plat.create_user(admin, "proj", "alice")
+    assert plat.authenticate(user_tok).name == "alice"
+    with pytest.raises(AuthError):
+        plat.create_user(user_tok, "proj", "eve")   # non-admin
+
+
+def test_agent_protocol_end_to_end(platform):
+    plat, admin = platform
+    proj = plat.project(admin)
+    proj.upload("/data/in.txt", b"42", creator="admin")
+    proj.create_file_set("inputs", ["/data/in.txt"], creator="admin")
+
+    def fn(workdir, job):
+        val = int((workdir / "data/in.txt").read_text())
+        (workdir / "out/result.txt").write_text(str(val * 2))
+        print(f"[[acai:answer={val * 2}]]")
+        return {"answer": val * 2}
+
+    job = plat.submit_job(admin, JobSpec(
+        name="double", project="", user="", fn=fn,
+        input_fileset="inputs", output_fileset="outputs",
+        resources={"vcpu": 1, "mem_mb": 1024}))
+    j = plat.engine(admin).registry.get(job.job_id)
+    assert j.state == JobState.FINISHED
+    assert j.outputs["answer"] == 84
+    # output file set exists with the result file
+    fsv = proj.filesets.resolve("outputs")
+    assert "/outputs/result.txt" in fsv.files
+    assert proj.storage.download("/outputs/result.txt") == b"84"
+    # provenance edge input -> output with job id
+    back = proj.provenance.backward("outputs:1")
+    assert ("inputs:1", {"action": "job", "job_id": job.job_id,
+                         "creator": "proj-admin"}) in back
+    # log parser attached metadata; cost computed from the pricing model
+    md = proj.metadata.get(job.job_id)
+    assert md["answer"] == 84
+    assert md["cost"] > 0
+    # monitor saw the progress stages
+    stages = [e.get("stage") for e in
+              plat.engine(admin).monitor.watch(job.job_id) if "stage" in e]
+    assert stages == ["downloading", "running", "uploading"]
+
+
+def test_failed_job(platform):
+    plat, admin = platform
+
+    def boom(workdir, job):
+        raise RuntimeError("user code crashed")
+
+    job = plat.submit_job(admin, JobSpec(name="bad", project="", user="",
+                                         fn=boom))
+    j = plat.engine(admin).registry.get(job.job_id)
+    assert j.state == JobState.FAILED
+    assert "user code crashed" in j.error
+
+
+def _virtual_platform(tmp_path, quota_k=2):
+    plat = AcaiPlatform(tmp_path, virtual=True, quota_k=quota_k)
+    admin = plat.create_project(plat.admin_token, "proj")
+    return plat, admin
+
+
+def test_fifo_quota_scheduling(tmp_path):
+    plat, admin = _virtual_platform(tmp_path, quota_k=2)
+    eng = plat.engine(admin)
+    durations = [5.0, 5.0, 1.0, 1.0]
+    jobs = [plat.submit_job(admin, JobSpec(
+        name=f"j{i}", project="", user="", duration=d))
+        for i, d in enumerate(durations)]
+    # quota k=2: only two launched immediately, FIFO order preserved
+    states = [eng.registry.get(j.job_id).state for j in jobs]
+    assert states[:2] == [JobState.RUNNING, JobState.RUNNING]
+    assert states[2:] == [JobState.QUEUED, JobState.QUEUED]
+    eng.run_all()
+    assert all(eng.registry.get(j.job_id).state == JobState.FINISHED
+               for j in jobs)
+    # FIFO: j2 starts only after one of j0/j1 finishes (virtual t=5)
+    assert eng.launcher.now == pytest.approx(6.0)
+
+
+def test_per_user_isolation(tmp_path):
+    plat, admin = _virtual_platform(tmp_path, quota_k=1)
+    alice = plat.create_user(admin, "proj", "alice")
+    eng = plat.engine(admin)
+    ja = [plat.submit_job(alice, JobSpec(name="a", project="", user="",
+                                         duration=10.0)) for _ in range(3)]
+    jb = plat.submit_job(admin, JobSpec(name="b", project="", user="",
+                                        duration=1.0))
+    # alice's queue cannot starve admin's queue: quota is per (project,user)
+    assert eng.registry.get(jb.job_id).state == JobState.RUNNING
+    eng.run_all()
+
+
+def test_quorum_straggler_mitigation(tmp_path):
+    plat, admin = _virtual_platform(tmp_path, quota_k=100)
+    eng = plat.engine(admin)
+    # 19 fast jobs + 1 extreme straggler
+    jobs = [plat.submit_job(admin, JobSpec(
+        name=f"p{i}", project="", user="",
+        duration=1.0 if i < 19 else 10_000.0)) for i in range(20)]
+    res = eng.scheduler.run_until_quorum([j.job_id for j in jobs],
+                                         frac=0.95)
+    assert len(res["finished"]) == 19
+    assert len(res["stragglers"]) == 1
+    assert res["virtual_time"] == pytest.approx(1.0)  # didn't wait 10000s
+    straggler = eng.registry.get(res["stragglers"][0])
+    assert straggler.state == JobState.KILLED
+
+
+def test_job_kill(tmp_path):
+    plat, admin = _virtual_platform(tmp_path, quota_k=1)
+    eng = plat.engine(admin)
+    j1 = plat.submit_job(admin, JobSpec(name="a", project="", user="",
+                                        duration=100.0))
+    j2 = plat.submit_job(admin, JobSpec(name="b", project="", user="",
+                                        duration=1.0))
+    eng.scheduler.kill(j1.job_id)
+    assert eng.registry.get(j1.job_id).state == JobState.KILLED
+    # queued job launches after the kill frees the quota slot
+    assert eng.registry.get(j2.job_id).state == JobState.RUNNING
+
+
+def test_pricing_model_shape():
+    # unit price ramps 2/3 -> 4/3 of baseline (paper Fig. 11)
+    dim = CPU_PRICING.dims["vcpu"]
+    assert dim.unit_price(0.5) == pytest.approx(dim.base_unit_price * 2 / 3)
+    assert dim.unit_price(8.0) == pytest.approx(dim.base_unit_price * 4 / 3)
+    lo = CPU_PRICING.job_cost({"vcpu": 0.5, "mem_mb": 512}, 3600)
+    hi = CPU_PRICING.job_cost({"vcpu": 8, "mem_mb": 8192}, 3600)
+    assert hi > lo * 16   # superlinear in resources

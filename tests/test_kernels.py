@@ -1,0 +1,200 @@
+"""Per-kernel allclose validation against the ref.py oracles, sweeping
+shapes/dtypes (interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,h,kv,d", [
+    (1, 256, 4, 4, 64),       # MHA
+    (2, 256, 4, 2, 32),       # GQA 2:1
+    (1, 512, 8, 2, 64),       # GQA 4:1, more blocks
+    (1, 128, 2, 1, 128),      # MQA, single block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, s, h, kv, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=128,
+                              block_k=128, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    out = ops.flash_attention(q, k, v, causal=False, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("blocks", [(64, 64), (128, 64), (64, 128)])
+def test_flash_attention_block_shapes(blocks):
+    bq, bk = blocks
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 32))
+    k = jax.random.normal(ks[1], (1, 256, 2, 32))
+    v = jax.random.normal(ks[2], (1, 256, 2, 32))
+    out = ops.flash_attention(q, k, v, block_q=bq, block_k=bk,
+                              interpret=True)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# WKV6
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,h,k", [(1, 128, 2, 32), (2, 256, 4, 64),
+                                     (1, 64, 1, 16)])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_wkv6_matches_ref(b, s, h, k, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    r = jax.random.normal(ks[0], (b, s, h, k)) * 0.5
+    kk = jax.random.normal(ks[1], (b, s, h, k)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, k)) * 0.5
+    # realistic RWKV decay magnitudes: logw in (-0.5, -1e-3)
+    logw = -jnp.exp(jax.random.uniform(ks[3], (b, s, h, k),
+                                       minval=-7.0, maxval=-0.7))
+    u = jax.random.normal(ks[4], (h, k)) * 0.3
+    out = ops.wkv6(r, kk, v, logw, u, chunk=64, interpret=True)
+    want = ref.wkv6_ref(r, kk, v, logw, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_jnp_chunked_matches_ref():
+    """The pure-jnp chunked path (models/rwkv.py) against the oracle."""
+    from repro.models.rwkv import wkv6_chunked
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    b, s, h, k = 2, 128, 2, 32
+    r = jax.random.normal(ks[0], (b, s, h, k)) * 0.5
+    kk = jax.random.normal(ks[1], (b, s, h, k)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, k)) * 0.5
+    logw = -jnp.exp(jax.random.uniform(ks[3], (b, s, h, k), minval=-7.0,
+                                       maxval=-0.7))
+    u = jax.random.normal(ks[4], (h, k)) * 0.3
+    out = wkv6_chunked(r, kk, v, logw, u, chunk=32)
+    want = ref.wkv6_ref(r, kk, v, logw, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_recurrent_matches_ref():
+    from repro.models.rwkv import wkv6_recurrent
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    b, s, h, k = 1, 8, 2, 16
+    r = jax.random.normal(ks[0], (b, s, h, k)) * 0.5
+    kk = jax.random.normal(ks[1], (b, s, h, k)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, k)) * 0.5
+    logw = -jnp.exp(jax.random.uniform(ks[3], (b, s, h, k), minval=-7.0,
+                                       maxval=-0.7))
+    u = jax.random.normal(ks[4], (h, k)) * 0.3
+    state = jnp.zeros((b, h, k, k))
+    outs = []
+    for t in range(s):
+        y, state = wkv6_recurrent(r[:, t:t+1], kk[:, t:t+1], v[:, t:t+1],
+                                  logw[:, t:t+1], u, state)
+        outs.append(y)
+    out = jnp.concatenate(outs, axis=1)
+    want = ref.wkv6_ref(r, kk, v, logw, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,h,p,g,n", [
+    (1, 128, 2, 32, 1, 16), (2, 256, 4, 64, 2, 32), (1, 64, 2, 16, 1, 8)])
+def test_ssd_matches_ref(b, s, h, p, g, n):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)) - 1.0)
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    D = jnp.ones((h,))
+    out = ops.mamba2_ssd(x, dt, A, B, C, D, chunk=64, interpret=True)
+    want = ref.ssd_ref(x, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_ssd_jnp_chunked_matches_ref():
+    from repro.models.mamba import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    b, s, h, p, g, n = 2, 128, 4, 32, 2, 16
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)) - 1.0)
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    D = jnp.ones((h,))
+    out = ssd_chunked(x, dt, A, B, C, D, chunk=32)
+    want = ref.ssd_ref(x, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_ssd_recurrent_matches_ref():
+    from repro.models.mamba import ssd_recurrent
+    ks = jax.random.split(jax.random.PRNGKey(8), 5)
+    b, s, h, p, g, n = 1, 8, 2, 16, 1, 8
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)) - 1.0)
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    D = jnp.ones((h,))
+    state = jnp.zeros((b, h, n, p))
+    outs = []
+    for t in range(s):
+        y, state = ssd_recurrent(x[:, t:t+1], dt[:, t:t+1], A,
+                                 B[:, t:t+1], C[:, t:t+1], D, state)
+        outs.append(y)
+    out = jnp.concatenate(outs, axis=1)
+    want = ref.ssd_ref(x, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,h,kv,d", [(2, 512, 4, 2, 64),
+                                        (1, 1024, 8, 8, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(b, s, h, kv, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (b, 1, h, d), dtype)
+    kc = jax.random.normal(ks[1], (b, s, kv, d), dtype)
+    vc = jax.random.normal(ks[2], (b, s, kv, d), dtype)
+    cache_len = jax.random.randint(ks[3], (b,), 1, s)
+    out = ops.decode_attention(q, kc, vc, cache_len, block_k=256,
+                               interpret=True)
+    want = ref.decode_attention_ref(
+        jnp.swapaxes(q, 1, 2)[:, :, 0],
+        jnp.swapaxes(kc, 1, 2), jnp.swapaxes(vc, 1, 2), cache_len)
+    np.testing.assert_allclose(np.asarray(out[:, 0], np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))

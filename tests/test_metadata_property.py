@@ -1,0 +1,83 @@
+"""Property-style sweep: the indexed metadata store must agree with a
+brute-force reference under random operation sequences (hypothesis is not
+installed in this offline container — seeded randomized sweeps assert the
+same invariants)."""
+import numpy as np
+import pytest
+
+from repro.core.datalake.metadata import MetadataStore
+
+
+def brute_find(docs, conditions):
+    out = []
+    for aid, doc in docs.items():
+        ok = True
+        for key, cond in conditions.items():
+            v = doc.get(key)
+            if v is None:
+                ok = False
+                break
+            if isinstance(cond, tuple):
+                op = cond[0]
+                if op == "range":
+                    ok = cond[1] < v < cond[2]
+                elif op == ">":
+                    ok = v > cond[1]
+                elif op == "<":
+                    ok = v < cond[1]
+            else:
+                ok = v == cond
+            if not ok:
+                break
+        if ok:
+            out.append(aid)
+    return sorted(out)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_random_ops_match_bruteforce(tmp_path, seed):
+    rng = np.random.default_rng(seed)
+    store = MetadataStore(tmp_path / f"s{seed}")
+    docs = {}
+    keys = ["loss", "acc", "epoch"]
+    models = ["bert", "gpt", "t5"]
+    for i in range(rng.integers(20, 60)):
+        aid = f"a{rng.integers(0, 30)}"
+        attrs = {}
+        if rng.random() < 0.8:
+            attrs[str(rng.choice(keys))] = float(
+                np.round(rng.uniform(0, 10), 3))
+        if rng.random() < 0.5:
+            attrs["model"] = str(rng.choice(models))
+        if aid not in docs:
+            store.register(aid, kind="job", **attrs)
+            docs[aid] = {"kind": "job", **attrs}
+        else:
+            store.put(aid, **attrs)
+            docs[aid].update(attrs)
+
+    # equality, range, threshold queries vs brute force
+    for key in keys:
+        thr = float(rng.uniform(0, 10))
+        assert store.find(**{key: (">", thr)}) == \
+            brute_find(docs, {key: (">", thr)})
+        lo, hi = sorted(rng.uniform(0, 10, 2))
+        assert store.find(**{key: ("range", float(lo), float(hi))}) == \
+            brute_find(docs, {key: ("range", float(lo), float(hi))})
+    for mdl in models:
+        assert store.find(model=mdl) == brute_find(docs, {"model": mdl})
+    # conjunction
+    got = store.find(model="bert", loss=("<", 5.0))
+    assert got == brute_find(docs, {"model": "bert", "loss": ("<", 5.0)})
+    # max/min agree with brute force over the same filter
+    ids = store.find(kind="job")
+    with_loss = [(docs[a]["loss"], a) for a in ids if "loss" in docs[a]]
+    if with_loss:
+        assert store.find_max("loss", kind="job") == \
+            max(with_loss)[1]
+        assert store.find_min("loss", kind="job") == \
+            min(with_loss)[1]
+
+    # persistence: reload gives identical answers
+    store2 = MetadataStore(tmp_path / f"s{seed}")
+    assert store2.find(model="gpt") == store.find(model="gpt")

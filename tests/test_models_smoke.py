@@ -1,0 +1,104 @@
+"""Per-arch reduced-config smoke tests: one forward/train step on CPU,
+asserting output shapes and no NaNs; plus decode-step state threading."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch, list_archs
+from repro.models import model as M
+from repro.models import transformer as T
+
+ARCHS = ["qwen3-32b", "qwen3-8b", "mistral-nemo-12b", "olmo-1b",
+         "olmoe-1b-7b", "llama4-scout-17b-a16e", "rwkv6-7b",
+         "llama-3.2-vision-11b", "zamba2-7b", "musicgen-large"]
+
+
+def _batch(cfg, b=2, s=32, key=0):
+    k = jax.random.PRNGKey(key)
+    if cfg.n_codebooks:
+        tokens = jax.random.randint(k, (b, s, cfg.n_codebooks), 0,
+                                    cfg.vocab_size)
+    else:
+        tokens = jax.random.randint(k, (b, s), 0, cfg.vocab_size)
+    labels = jnp.roll(tokens, -1, axis=1)
+    return {"tokens": tokens, "labels": labels}
+
+
+def _vision(cfg, b=2):
+    if cfg.family != "vlm":
+        return None
+    return jax.random.normal(jax.random.PRNGKey(7),
+                             (b, cfg.n_vision_tokens, cfg.vision_dim),
+                             jnp.float32).astype(jnp.bfloat16)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_loss(arch):
+    cfg = get_arch(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    ctx = M.make_ctx(cfg, 32, "train", vision=_vision(cfg), remat="full")
+    loss, metrics = M.loss_fn(params, batch, cfg, ctx)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    logits, aux, _ = M.forward(params, batch["tokens"], cfg, ctx)
+    if cfg.n_codebooks:
+        assert logits.shape == (2, 32, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (2, 32, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_grad_step(arch):
+    cfg = get_arch(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    ctx = M.make_ctx(cfg, 32, "train", vision=_vision(cfg))
+
+    def lf(p):
+        return M.loss_fn(p, batch, cfg, ctx)[0]
+
+    loss, grads = jax.value_and_grad(lf)(params)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g, np.float32))) for g in flat)
+    # at least some gradient is non-zero
+    assert any(float(jnp.abs(g.astype(jnp.float32)).max()) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch):
+    cfg = get_arch(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    b, buf = 2, 16
+    vision = _vision(cfg, b)
+    states = T.init_decode_state(cfg, b, buf, vision=vision, params=params)
+    cache_len = jnp.zeros((b,), jnp.int32)
+    if cfg.n_codebooks:
+        tok = jnp.ones((b, 1, cfg.n_codebooks), jnp.int32)
+    else:
+        tok = jnp.ones((b, 1), jnp.int32)
+    for step in range(3):
+        ctx = M.make_ctx(cfg, buf, "decode", vision=vision,
+                         cache_len=cache_len)
+        logits, states = M.decode_step(params, tok, states, cache_len, cfg,
+                                       ctx)
+        cache_len = cache_len + 1
+        assert not bool(jnp.isnan(logits.astype(jnp.float32)).any()), arch
+    if cfg.n_codebooks:
+        assert logits.shape == (b, 1, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (b, 1, cfg.vocab_size)
+
+
+def test_all_archs_registered():
+    assert set(ARCHS) <= set(list_archs())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_positive(arch):
+    cfg = get_arch(arch)
+    n = cfg.n_params()
+    na = cfg.n_active_params()
+    assert n > 0 and na > 0 and na <= n

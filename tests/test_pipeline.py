@@ -1,0 +1,58 @@
+"""GPipe pipeline-parallel schedule vs the sequential oracle (4 pipeline
+stages on 4 host devices, own subprocess for the device count)."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.train.pipeline import pipeline_apply, sequential_apply
+
+mesh = jax.make_mesh((4,), ("stage",))
+S, D, B, M = 4, 16, 8, 4
+key = jax.random.PRNGKey(0)
+w = jax.random.normal(key, (S, D, D)) * 0.3
+b = jax.random.normal(jax.random.PRNGKey(1), (S, D)) * 0.1
+params = {"w": w, "b": b}
+x = jax.random.normal(jax.random.PRNGKey(2), (B, D))
+
+def stage_fn(p, a):
+    return jnp.tanh(a @ p["w"] + p["b"])
+
+want = sequential_apply(stage_fn, params, x)
+got = jax.jit(lambda p, xx: pipeline_apply(
+    stage_fn, p, xx, mesh=mesh, n_microbatches=M))(params, x)
+err = float(jnp.abs(got - want).max())
+
+# gradient flows through the pipeline too
+def loss_pipe(p):
+    return jnp.sum(pipeline_apply(stage_fn, p, x, mesh=mesh,
+                                  n_microbatches=M) ** 2)
+def loss_seq(p):
+    return jnp.sum(sequential_apply(stage_fn, p, x) ** 2)
+g1 = jax.grad(loss_pipe)(params)
+g2 = jax.grad(loss_seq)(params)
+gerr = max(float(jnp.abs(a - b).max())
+           for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)))
+print("RESULT::" + json.dumps({"err": err, "gerr": gerr}))
+"""
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential():
+    proc = subprocess.run([sys.executable, "-c", SCRIPT],
+                          capture_output=True, text=True, timeout=560,
+                          env={**__import__("os").environ,
+                               "PYTHONPATH": "src"})
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT::")][0]
+    out = json.loads(line[len("RESULT::"):])
+    assert out["err"] < 1e-5, out
+    assert out["gerr"] < 1e-4, out

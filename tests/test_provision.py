@@ -1,0 +1,160 @@
+"""Profiler + auto-provisioner behaviour, against a synthetic multiplicative
+ground-truth oracle (the paper's model is exactly recoverable -> tight
+assertions), plus constrained-search invariants across random seeds
+(property-style sweep)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.acai import AcaiPlatform
+from repro.core.engine.registry import JobSpec
+from repro.core.provision.autoprovision import AutoProvisioner
+from repro.core.provision.pricing import CPU_PRICING, Pricing, ResourceDim
+from repro.core.provision.profiler import (CommandTemplate, LogLinearModel,
+                                           Profiler)
+
+
+def oracle_runtime(cfg, noise=0.0, rng=None):
+    """t = t1 * epochs * c^-0.9 * m^-0.05 (paper Fig. 10 shape)."""
+    t = 120.0 * cfg["epoch"] * cfg["vcpu"] ** -0.9 * \
+        (cfg["mem_mb"] / 512.0) ** -0.05
+    if noise:
+        t *= math.exp(rng.normal(0, noise))
+    return t
+
+
+TEMPLATE = CommandTemplate(
+    name="mnist",
+    hints={"epoch": [1, 2, 3]},
+    resource_hints={"vcpu": [0.5, 1, 2], "mem_mb": [512, 1024, 2048]})
+
+
+def test_loglinear_exact_recovery():
+    grid = TEMPLATE.grid()
+    runtimes = [oracle_runtime(c) for c in grid]
+    model = LogLinearModel(TEMPLATE.feature_names).fit(grid, runtimes)
+    # the model family contains the oracle -> near-exact extrapolation
+    test_cfg = {"epoch": 20, "vcpu": 7.5, "mem_mb": 4096}
+    assert model.predict(test_cfg) == pytest.approx(
+        oracle_runtime(test_cfg), rel=1e-6)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_loglinear_beats_averaging_with_noise(seed):
+    rng = np.random.default_rng(seed)
+    grid = TEMPLATE.grid()
+    runtimes = [oracle_runtime(c, noise=0.1, rng=rng) for c in grid]
+    model = LogLinearModel(TEMPLATE.feature_names).fit(grid, runtimes)
+    # eval on the paper's extrapolated grid
+    eval_cfgs = [{"epoch": e, "vcpu": c, "mem_mb": m}
+                 for e in (5, 10, 20) for c in (0.5, 1, 2, 4, 8)
+                 for m in (512, 2048, 8192)]
+    true = np.array([oracle_runtime(c, noise=0.1, rng=rng)
+                     for c in eval_cfgs])
+    pred = model.predict_many(eval_cfgs)
+    ours = LogLinearModel.errors(pred, true)
+    base = LogLinearModel.errors(np.full_like(true, true.mean()), true)
+    assert ours["l1"] < base["l1"]
+    # per-seed extrapolation quality varies with noise draw; the Table-1
+    # benchmark reports the actual figure (paper: 98 %)
+    assert ours["variance_explained"] > 0.75
+
+
+def test_profiler_through_engine_with_quorum(tmp_path):
+    # virtual fleet: runtime oracle drives virtual durations
+    plat = AcaiPlatform(
+        tmp_path, virtual=True, quota_k=1000,
+        oracle=lambda job: oracle_runtime(job.spec.args))
+    admin = plat.create_project(plat.admin_token, "proj")
+    profiler = plat.make_profiler(admin)
+
+    def job_factory(cfg):
+        return JobSpec(name="prof", project="proj", user="u", args=cfg,
+                       resources={k: cfg[k] for k in ("vcpu", "mem_mb")})
+
+    class _Eng:  # thin facade binding submit to the platform
+        registry = plat.engine(admin).registry
+        scheduler = plat.engine(admin).scheduler
+
+        @staticmethod
+        def submit(spec):
+            return plat.submit_job(admin, spec)
+
+    profiler.engine = _Eng()
+    model = profiler.profile(TEMPLATE, job_factory)
+    cfgs, runtimes = profiler.training_sets["mnist"]
+    assert len(cfgs) >= int(0.95 * len(TEMPLATE.grid()))
+    assert model.predict({"epoch": 10, "vcpu": 4, "mem_mb": 1024}) == \
+        pytest.approx(oracle_runtime(
+            {"epoch": 10, "vcpu": 4, "mem_mb": 1024}), rel=1e-6)
+
+
+def _fit_profiler():
+    grid = TEMPLATE.grid()
+    prof = Profiler(engine=None)
+    prof.fit_offline(TEMPLATE, grid, [oracle_runtime(c) for c in grid])
+    return prof
+
+
+def test_optimize_runtime_under_cost(tmp_path):
+    prof = _fit_profiler()
+    ap = AutoProvisioner(prof, CPU_PRICING)
+    baseline = {"vcpu": 2.0, "mem_mb": 7680}
+    values = {"epoch": 20}
+    t_base = oracle_runtime({**values, **baseline})
+    c_base = CPU_PRICING.job_cost(baseline, t_base)
+    dec = ap.optimize_runtime("mnist", values, max_cost=c_base)
+    assert dec.feasible
+    assert dec.predicted_cost <= c_base * (1 + 1e-9)
+    assert dec.predicted_runtime < t_base        # speedup achieved
+    # provisioner should pick more CPU, less memory (paper Table 2 pattern)
+    assert dec.resources["vcpu"] > baseline["vcpu"]
+    assert dec.resources["mem_mb"] < baseline["mem_mb"]
+
+
+def test_optimize_cost_under_runtime(tmp_path):
+    prof = _fit_profiler()
+    ap = AutoProvisioner(prof, CPU_PRICING)
+    baseline = {"vcpu": 2.0, "mem_mb": 7680}
+    values = {"epoch": 20}
+    t_base = oracle_runtime({**values, **baseline})
+    c_base = CPU_PRICING.job_cost(baseline, t_base)
+    dec = ap.optimize_cost("mnist", values, max_runtime=t_base)
+    assert dec.feasible
+    assert dec.predicted_runtime <= t_base * (1 + 1e-9)
+    assert dec.predicted_cost < c_base           # cost reduction achieved
+    # conservative allocation (paper Table 3 pattern): far below baseline mem
+    assert dec.resources["mem_mb"] <= 2048
+
+
+def test_infeasible_constraints():
+    prof = _fit_profiler()
+    ap = AutoProvisioner(prof, CPU_PRICING)
+    dec = ap.optimize_runtime("mnist", {"epoch": 20}, max_cost=1e-9)
+    assert not dec.feasible
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_search_invariants_random_pricing(seed):
+    """Property sweep: for random pricing/constraints, the decision is
+    always feasible-optimal within the table."""
+    rng = np.random.default_rng(seed)
+    pricing = Pricing([
+        ResourceDim("vcpu", 0.5, 8.0, float(rng.uniform(0.01, 0.1)),
+                    tuple(np.arange(0.5, 8.5, 0.5))),
+        ResourceDim("mem_mb", 512, 8192, float(rng.uniform(1e-6, 1e-5)),
+                    tuple(range(512, 8448, 256))),
+    ])
+    prof = _fit_profiler()
+    ap = AutoProvisioner(prof, pricing)
+    budget = float(rng.uniform(0.001, 0.2))
+    dec = ap.optimize_runtime("mnist", {"epoch": 5}, max_cost=budget)
+    feas = [r for r in dec.table if r["feasible"]]
+    if not feas:
+        assert not dec.feasible
+        return
+    assert dec.feasible
+    assert dec.predicted_runtime == pytest.approx(
+        min(r["runtime"] for r in feas))
+    assert dec.predicted_cost <= budget * (1 + 1e-9)
