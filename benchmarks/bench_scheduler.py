@@ -1,0 +1,143 @@
+"""Scheduler benchmark — throughput, queue wait and makespan of a mixed
+5k-job fleet on finite cluster capacity, FIFO vs fair-share + EASY
+backfill.
+
+The fleet mirrors the ACAI workload mix (§3.3, §4.2.2): a large majority
+of small, short profiling jobs (the auto-provisioner's exploration grids)
+sharing capacity with a minority of big, long training jobs. Under strict
+global FIFO a blocked 8-vCPU training job convoys everything behind it
+while capacity sits idle; fair-share + backfill slots profiling jobs into
+the holes. The virtual clock makes both runs deterministic, and an
+auditing cluster proves capacity is never oversubscribed on any dimension.
+
+Emits ``BENCH_scheduler.json`` so future PRs have a perf trajectory:
+  {policy: {makespan_s, mean_queue_wait_s, throughput_jobs_per_hour,
+            backfilled, oversubscribed, wall_s}}
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core.engine.cluster import Cluster
+from repro.core.engine.events import EventBus
+from repro.core.engine.launcher import VirtualRunner
+from repro.core.engine.lifecycle import JobState
+from repro.core.engine.registry import JobRegistry, JobSpec
+from repro.core.engine.scheduler import Scheduler
+from repro.core.provision.pricing import CPU_PRICING
+
+N_JOBS = 5000
+N_USERS = 8
+NODES = 2               # 16 vCPU / 16 GB total — heavy contention
+
+
+class AuditingCluster(Cluster):
+    """Records the reservation high-water mark per dimension."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.high_water = {n: 0.0 for n in self.capacity}
+
+    def reserve(self, job_id, resources):
+        req = super().reserve(job_id, resources)
+        for n in self.capacity:
+            self.high_water[n] = max(self.high_water[n], self.used[n])
+        return req
+
+
+def make_fleet(seed: int = 0, n_jobs: int = N_JOBS) -> list[JobSpec]:
+    rng = np.random.default_rng(seed)
+    fleet = []
+    for i in range(n_jobs):
+        user = f"u{int(rng.integers(N_USERS))}"
+        if rng.random() < 0.9:       # profiling job: small + short
+            spec = JobSpec(
+                name=f"prof-{i}", project="bench", user=user,
+                duration=float(rng.uniform(5.0, 60.0)),
+                resources={"vcpu": float(rng.choice([0.5, 1.0, 2.0])),
+                           "mem_mb": float(rng.choice([512, 1024, 2048]))})
+        else:                        # training job: big + long
+            spec = JobSpec(
+                name=f"train-{i}", project="bench", user=user,
+                duration=float(rng.uniform(300.0, 900.0)),
+                resources={"vcpu": 8.0, "mem_mb": 8192.0})
+        fleet.append(spec)
+    return fleet
+
+
+def run_policy(fleet: list[JobSpec], policy: str, backfill: bool) -> dict:
+    registry = JobRegistry()
+    bus = EventBus()
+    runner = VirtualRunner(registry, bus)
+    cluster = AuditingCluster(
+        {n: max(d.values) * NODES for n, d in CPU_PRICING.dims.items()},
+        {n: d.minimum for n, d in CPU_PRICING.dims.items()})
+    sched = Scheduler(registry, runner, bus, quota_k=16, cluster=cluster,
+                      policy=policy, backfill=backfill, backfill_depth=50)
+    t0 = time.perf_counter()
+    for spec in fleet:
+        sched.submit(registry.submit(JobSpec(**spec.__dict__)))
+    sched.run_to_completion()
+    wall = time.perf_counter() - t0
+    finished = sum(1 for j in registry.all_jobs()
+                   if j.state == JobState.FINISHED)
+    assert finished == len(fleet), f"{finished}/{len(fleet)} finished"
+    oversubscribed = any(
+        cluster.high_water[n] > cluster.capacity[n] + 1e-9
+        for n in cluster.capacity)
+    makespan = runner.now
+    return {
+        "policy": f"{policy}+backfill" if backfill else policy,
+        "n_jobs": len(fleet),
+        "makespan_s": makespan,
+        "mean_queue_wait_s": sched.mean_queue_wait(),
+        "throughput_jobs_per_hour": len(fleet) / (makespan / 3600.0),
+        "backfilled": sched.stats["backfilled"],
+        "oversubscribed": oversubscribed,
+        "peak_vcpu": cluster.high_water["vcpu"],
+        "capacity_vcpu": cluster.capacity["vcpu"],
+        "wall_s": wall,
+        "sched_events_per_s": len(fleet) * 2 / max(wall, 1e-9),
+    }
+
+
+def run(n_jobs: int = N_JOBS, seed: int = 0) -> dict:
+    fleet = make_fleet(seed, n_jobs)
+    fifo = run_policy(fleet, "fifo", backfill=False)
+    fair = run_policy(fleet, "fair", backfill=True)
+    out = {
+        "fleet": {"n_jobs": n_jobs, "n_users": N_USERS, "nodes": NODES},
+        "fifo": fifo,
+        "fair_backfill": fair,
+        "makespan_speedup": fifo["makespan_s"] / fair["makespan_s"],
+        "queue_wait_reduction":
+            1.0 - fair["mean_queue_wait_s"] / fifo["mean_queue_wait_s"],
+    }
+    assert not fifo["oversubscribed"] and not fair["oversubscribed"]
+    return out
+
+
+def report(res: dict) -> None:
+    """Print the CSV contract lines and write BENCH_scheduler.json —
+    shared between standalone runs and benchmarks/run.py."""
+    for name in ("fifo", "fair_backfill"):
+        r = res[name]
+        print(f"scheduler.{name},{r['wall_s'] * 1e6:.0f},"
+              f"makespan={r['makespan_s']:.0f}s"
+              f"_wait={r['mean_queue_wait_s']:.0f}s"
+              f"_backfilled={r['backfilled']}")
+    print(f"scheduler.speedup,0,makespan_x={res['makespan_speedup']:.3f}"
+          f"_wait_cut={res['queue_wait_reduction'] * 100:.1f}%")
+    with open("BENCH_scheduler.json", "w") as f:
+        json.dump(res, f, indent=1)
+
+
+def main() -> None:
+    report(run())
+
+
+if __name__ == "__main__":
+    main()

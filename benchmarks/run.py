@@ -47,6 +47,11 @@ def main() -> None:
           f"ops={ru['acai']['bookkeeping_ops']},"
           f"tracking_cut={ru['tracking_time_reduction']*100:.0f}%")
 
+    from benchmarks import bench_scheduler
+    rs = bench_scheduler.run()
+    results["scheduler"] = rs
+    bench_scheduler.report(rs)
+
     from benchmarks import bench_kernels
     rk = bench_kernels.run()
     results["kernels"] = rk

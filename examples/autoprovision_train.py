@@ -67,17 +67,28 @@ def main():
     dec, hist = ap.refined_search(template.name, values,
                                   measure_fn=true_runtime,
                                   objective="runtime", max_cost=c_base)
-    t = true_runtime({**values, **dec.resources})
-    print(f"[fix cost, optimize runtime] -> {dec.resources}: {t:.0f}s "
-          f"(speedup {t_base/t:.2f}x, {len(hist)} refinement rounds)")
+    if dec.feasible:
+        t = true_runtime({**values, **dec.resources})
+        print(f"[fix cost, optimize runtime] -> {dec.resources}: {t:.0f}s "
+              f"(speedup {t_base/t:.2f}x, {len(hist)} refinement rounds)")
+    else:
+        # refinement measured the candidate, found the model overshooting
+        # past the collective wall, and the refit excludes the whole grid:
+        # stay on the baseline rather than bust the budget
+        print(f"[fix cost, optimize runtime] -> infeasible after "
+              f"{len(hist)} refinement rounds; keeping baseline {baseline}")
 
     dec, hist = ap.refined_search(template.name, values,
                                   measure_fn=true_runtime,
                                   objective="cost", max_runtime=t_base)
-    t = true_runtime({**values, **dec.resources})
-    c = TPU_PRICING.job_cost(dec.resources, t)
-    print(f"[fix runtime, optimize cost] -> {dec.resources}: ${c:.2f} "
-          f"(saving {100*(1-c/c_base):.1f}%, {len(hist)} rounds)")
+    if dec.feasible:
+        t = true_runtime({**values, **dec.resources})
+        c = TPU_PRICING.job_cost(dec.resources, t)
+        print(f"[fix runtime, optimize cost] -> {dec.resources}: ${c:.2f} "
+              f"(saving {100*(1-c/c_base):.1f}%, {len(hist)} rounds)")
+    else:
+        print(f"[fix runtime, optimize cost] -> infeasible after "
+              f"{len(hist)} refinement rounds; keeping baseline {baseline}")
 
 
 if __name__ == "__main__":

@@ -17,8 +17,10 @@ from repro.core.datalake.fileset import FileSetManager
 from repro.core.datalake.metadata import MetadataStore
 from repro.core.datalake.provenance import ProvenanceGraph
 from repro.core.datalake.storage import Storage
+from repro.core.engine.cluster import Cluster
 from repro.core.engine.events import EventBus
-from repro.core.engine.launcher import LocalRunner, VirtualRunner
+from repro.core.engine.launcher import (LocalRunner, ThreadPoolRunner,
+                                        VirtualRunner)
 from repro.core.engine.monitor import JobMonitor
 from repro.core.engine.registry import JobRegistry, JobSpec
 from repro.core.engine.scheduler import Scheduler
@@ -72,19 +74,36 @@ class AcaiEngine:
                  pricing: Pricing = CPU_PRICING, quota_k: int = 2,
                  virtual: bool = False,
                  oracle: Optional[Callable] = None,
-                 workroot: str = "/tmp/acai-jobs"):
+                 workroot: str = "/tmp/acai-jobs",
+                 runner: Optional[str] = None, max_workers: int = 4,
+                 cluster: Optional[Cluster] = None,
+                 cluster_nodes: Optional[int] = None,
+                 policy: str = "fair", backfill: bool = True):
         self.bus = EventBus()
         self.registry = JobRegistry(
             metadata=datalake.metadata if datalake else None)
-        if virtual:
+        runner = runner or ("virtual" if virtual else "local")
+        if runner == "virtual":
             self.launcher = VirtualRunner(self.registry, self.bus,
                                           oracle=oracle, pricing=pricing)
-        else:
+        elif runner == "thread":
+            self.launcher = ThreadPoolRunner(self.registry, self.bus,
+                                             datalake=datalake,
+                                             pricing=pricing,
+                                             workroot=workroot,
+                                             max_workers=max_workers)
+        elif runner == "local":
             self.launcher = LocalRunner(self.registry, self.bus,
                                         datalake=datalake, pricing=pricing,
                                         workroot=workroot)
+        else:
+            raise ValueError(f"unknown runner {runner!r}")
+        if cluster is None and cluster_nodes is not None:
+            cluster = Cluster.from_pricing(pricing, nodes=cluster_nodes)
         self.scheduler = Scheduler(self.registry, self.launcher, self.bus,
-                                   quota_k=quota_k)
+                                   quota_k=quota_k, cluster=cluster,
+                                   policy=policy, backfill=backfill)
+        self.cluster = cluster
         self.monitor = JobMonitor(self.bus)
         self.pricing = pricing
 
@@ -102,7 +121,10 @@ class AcaiPlatform:
     """Credential server + project/user management (§3.1, §4.1)."""
 
     def __init__(self, root: str | Path, *, pricing: Pricing = CPU_PRICING,
-                 virtual: bool = False, oracle=None, quota_k: int = 2):
+                 virtual: bool = False, oracle=None, quota_k: int = 2,
+                 runner: Optional[str] = None, max_workers: int = 4,
+                 cluster_nodes: Optional[int] = None,
+                 policy: str = "fair", backfill: bool = True):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self._users: dict[str, User] = {}      # token -> user
@@ -113,6 +135,11 @@ class AcaiPlatform:
         self._virtual = virtual
         self._oracle = oracle
         self._quota_k = quota_k
+        self._runner = runner
+        self._max_workers = max_workers
+        self._cluster_nodes = cluster_nodes
+        self._policy = policy
+        self._backfill = backfill
 
     # -- credential server ----------------------------------------------
     @property
@@ -136,7 +163,10 @@ class AcaiPlatform:
         self._engines[name] = AcaiEngine(
             datalake=self._projects[name], pricing=self._pricing,
             virtual=self._virtual, oracle=self._oracle,
-            quota_k=self._quota_k,
+            quota_k=self._quota_k, runner=self._runner,
+            max_workers=self._max_workers,
+            cluster_nodes=self._cluster_nodes,
+            policy=self._policy, backfill=self._backfill,
             workroot=str(self.root / name / "jobs"))
         return self.create_user(None, name, f"{name}-admin", _admin=True)
 
@@ -163,8 +193,10 @@ class AcaiPlatform:
         spec.user = user.name
         return self._engines[user.project].submit(spec)
 
-    def make_profiler(self, token: str, quorum: float = 0.95) -> Profiler:
-        return Profiler(self.engine(token), quorum=quorum)
+    def make_profiler(self, token: str, quorum: float = 0.95,
+                      priority: int = 0) -> Profiler:
+        return Profiler(self.engine(token), quorum=quorum,
+                        priority=priority)
 
     def make_autoprovisioner(self, token: str,
                              profiler: Profiler) -> AutoProvisioner:

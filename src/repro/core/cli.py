@@ -2,8 +2,8 @@
 
     python -m repro.core.cli --root /tmp/acai --token <tok> <command> ...
 
-Commands: upload, download, ls, create-file-set, jobs, find, trace,
-profile, autoprovision. State persists under --root (tokens in
+Commands: upload, download, ls, create-file-set, jobs, cluster, find,
+trace, profile, autoprovision. State persists under --root (tokens in
 tokens.json for this local deployment)."""
 from __future__ import annotations
 
@@ -70,6 +70,9 @@ def main(argv=None) -> int:
     sp.add_argument("--status", default=None)
     sp.add_argument("--sort-by", default="job_id")
 
+    sub.add_parser("cluster",
+                   help="capacity/utilization + queue-wait metrics")
+
     sp = sub.add_parser("find")
     sp.add_argument("conditions", nargs="+",
                     help="key=value or key>value / key<value")
@@ -115,6 +118,10 @@ def main(argv=None) -> int:
         eng = plat.engine(args.token)
         print(job_history(eng.registry, proj.metadata,
                           status=args.status, sort_by=args.sort_by))
+    elif args.cmd == "cluster":
+        from repro.core.engine.dashboard import scheduler_page
+        eng = plat.engine(args.token)
+        print(scheduler_page(eng.scheduler, eng.monitor))
     elif args.cmd == "find":
         conds = {}
         for c in args.conditions:

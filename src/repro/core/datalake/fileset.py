@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import threading
 import time
 from typing import Optional, TYPE_CHECKING
 
@@ -51,6 +52,8 @@ class FileSetManager:
         self.storage = storage
         self.provenance = provenance
         self._path = storage.root / "filesets.json"
+        # job agents on ThreadPoolRunner workers create sets concurrently
+        self._lock = threading.RLock()
         self._sets: dict[str, list[FileSetVersion]] = {}
         if self._path.exists():
             raw = json.loads(self._path.read_text())
@@ -113,20 +116,21 @@ class FileSetManager:
         override earlier ones for the same path (the paper's update example).
         A file set cannot contain two versions of the same file by
         construction. Dependencies to source sets are recorded."""
-        files: dict[str, int] = {}
-        deps: list[str] = []
-        for spec in specs:
-            got, d = self._expand_spec(spec)
-            files.update(got)
-            deps.extend(d)
-        vs = self._sets.setdefault(name, [])
-        prev = vs[-1] if vs else None
-        fsv = FileSetVersion(name=name, version=(prev.version + 1 if prev
-                                                 else 1),
-                             files=files, created_at=time.time(),
-                             creator=creator)
-        vs.append(fsv)
-        self._save()
+        with self._lock:
+            files: dict[str, int] = {}
+            deps: list[str] = []
+            for spec in specs:
+                got, d = self._expand_spec(spec)
+                files.update(got)
+                deps.extend(d)
+            vs = self._sets.setdefault(name, [])
+            prev = vs[-1] if vs else None
+            fsv = FileSetVersion(name=name, version=(prev.version + 1 if prev
+                                                     else 1),
+                                 files=files, created_at=time.time(),
+                                 creator=creator)
+            vs.append(fsv)
+            self._save()
         if self.provenance is not None:
             self.provenance.add_fileset(fsv.ref)
             seen = set()

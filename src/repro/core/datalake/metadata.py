@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import bisect
 import json
+import threading
 import time
 from pathlib import Path
 from typing import Any, Iterable, Optional
@@ -23,6 +24,8 @@ class MetadataStore:
     def __init__(self, root: str | Path):
         Path(root).mkdir(parents=True, exist_ok=True)
         self._path = Path(root) / "metadata.json"
+        # job agents on ThreadPoolRunner workers put() concurrently
+        self._lock = threading.RLock()
         self._docs: dict[str, dict[str, Any]] = {}
         # key -> sorted [(value, artifact_id)]
         self._index: dict[str, list[tuple[Any, str]]] = {}
@@ -57,20 +60,22 @@ class MetadataStore:
         self.put(artifact_id, **doc)
 
     def put(self, artifact_id: str, **attrs: Any) -> None:
-        doc = self._docs.setdefault(artifact_id, {})
-        for k, v in attrs.items():
-            if k in doc and doc[k] is not None:
-                self._index_remove(k, doc[k], artifact_id)
-            doc[k] = v
-            self._index_add(k, v, artifact_id)
-        self._save()
+        with self._lock:
+            doc = self._docs.setdefault(artifact_id, {})
+            for k, v in attrs.items():
+                if k in doc and doc[k] is not None:
+                    self._index_remove(k, doc[k], artifact_id)
+                doc[k] = v
+                self._index_add(k, v, artifact_id)
+            self._save()
 
     def tag(self, artifact_id: str, tag: str) -> None:
-        doc = self._docs.setdefault(artifact_id, {})
-        tags = doc.setdefault("tags", [])
-        if tag not in tags:
-            tags.append(tag)
-        self._save()
+        with self._lock:
+            doc = self._docs.setdefault(artifact_id, {})
+            tags = doc.setdefault("tags", [])
+            if tag not in tags:
+                tags.append(tag)
+            self._save()
 
     def get(self, artifact_id: str) -> dict[str, Any]:
         return dict(self._docs.get(artifact_id, {}))

@@ -13,6 +13,7 @@ source fileset --(creation)--> derived fileset.
 from __future__ import annotations
 
 import json
+import threading
 from pathlib import Path
 from typing import Optional
 
@@ -22,6 +23,8 @@ import networkx as nx
 class ProvenanceGraph:
     def __init__(self, root: str | Path):
         self._path = Path(root) / "provenance.json"
+        # job agents on ThreadPoolRunner workers add edges concurrently
+        self._lock = threading.RLock()
         self.g = nx.MultiDiGraph()
         if self._path.exists():
             raw = json.loads(self._path.read_text())
@@ -36,25 +39,29 @@ class ProvenanceGraph:
 
     # ------------------------------------------------------------------
     def add_fileset(self, fileset_ref: str) -> None:
-        self.g.add_node(fileset_ref)
-        self._save()
+        with self._lock:
+            self.g.add_node(fileset_ref)
+            self._save()
 
     def add_job_edge(self, *, src: Optional[str], dst: str, job_id: str,
                      creator: str = "") -> None:
         """input fileset --(job execution)--> output fileset."""
-        self.g.add_node(dst)
-        if src is not None:
-            self.g.add_node(src)
-            self.g.add_edge(src, dst, action="job", job_id=job_id,
-                            creator=creator)
-        self._save()
+        with self._lock:
+            self.g.add_node(dst)
+            if src is not None:
+                self.g.add_node(src)
+                self.g.add_edge(src, dst, action="job", job_id=job_id,
+                                creator=creator)
+            self._save()
 
     def add_creation_edge(self, *, src: str, dst: str,
                           creator: str = "") -> None:
-        self.g.add_node(src)
-        self.g.add_node(dst)
-        self.g.add_edge(src, dst, action="fileset_creation", creator=creator)
-        self._save()
+        with self._lock:
+            self.g.add_node(src)
+            self.g.add_node(dst)
+            self.g.add_edge(src, dst, action="fileset_creation",
+                            creator=creator)
+            self._save()
 
     # -- the three paper APIs -------------------------------------------
     def whole_graph(self) -> dict:

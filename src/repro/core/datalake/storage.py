@@ -144,13 +144,16 @@ class Storage:
             return sid
 
     def session_put(self, sid: str, path: str, data: bytes) -> None:
-        sess = self._session(sid, "pending")
-        if path not in sess["files"]:
-            raise DataLakeError(f"{path} not declared in session {sid}")
         # distinct destination per file: content-addressing guarantees
-        # asynchronous uploads never overwrite each other
-        sess["files"][path] = [self._put_blob(data), len(data)]
-        self._save()
+        # asynchronous uploads never overwrite each other's blobs — but the
+        # catalog save must still be serialized across concurrent agents
+        blob = self._put_blob(data)
+        with self._lock:
+            sess = self._session(sid, "pending")
+            if path not in sess["files"]:
+                raise DataLakeError(f"{path} not declared in session {sid}")
+            sess["files"][path] = [blob, len(data)]
+            self._save()
 
     def commit_session(self, sid: str) -> list[FileVersion]:
         """Allocate sequential version numbers; only fully-uploaded sessions

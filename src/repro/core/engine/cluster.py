@@ -1,0 +1,122 @@
+"""Cluster capacity model (ACAI §3.3.1 scaled up).
+
+The paper schedules jobs onto shared cloud capacity; the seed engine only
+gated on a per-(project, user) quota, which admits unbounded aggregate
+resources. ``Cluster`` holds finite totals per resource dimension and the
+scheduler reserves/releases against them on launch/terminal events, so the
+engine models a real shared deployment: admission waits for capacity, and
+utilization is observable.
+
+Totals are derived from the pricing model's node shapes — a "node" is the
+largest allocatable amount per dimension in ``pricing.grid()`` — times a
+node count, mirroring how a real cluster is a number of machine shapes.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Optional
+
+
+class CapacityError(RuntimeError):
+    """A reservation that can never fit (exceeds cluster totals)."""
+
+
+class Cluster:
+    """Finite multi-dimensional capacity with per-job reservations.
+
+    All mutating calls are thread-safe (the ThreadPoolRunner finalizes jobs
+    from worker threads). Missing dimensions in a job's resource dict are
+    charged at ``defaults`` (the pricing minimum), matching how
+    ``Pricing.job_cost`` bills them.
+    """
+
+    def __init__(self, capacity: dict[str, float],
+                 defaults: Optional[dict[str, float]] = None):
+        self.capacity = {k: float(v) for k, v in capacity.items()}
+        self.defaults = dict(defaults or {})
+        self.used: dict[str, float] = {k: 0.0 for k in self.capacity}
+        self._held: dict[str, dict[str, float]] = {}   # job_id -> resources
+        self._lock = threading.RLock()
+
+    # -- construction ---------------------------------------------------
+    @classmethod
+    def from_pricing(cls, pricing, nodes: int = 8) -> "Cluster":
+        """Totals = ``nodes`` x the largest node shape the pricing allocates."""
+        capacity = {name: max(dim.values) * nodes
+                    for name, dim in pricing.dims.items()}
+        defaults = {name: dim.minimum for name, dim in pricing.dims.items()}
+        return cls(capacity, defaults)
+
+    # -- normalization --------------------------------------------------
+    def charge(self, resources: Optional[dict[str, Any]]) -> dict[str, float]:
+        """The amounts a job is billed against capacity, per dimension."""
+        resources = resources or {}
+        return {name: float(resources.get(name, self.defaults.get(name, 0.0)))
+                for name in self.capacity}
+
+    # -- admission ------------------------------------------------------
+    def fits(self, resources: Optional[dict[str, Any]]) -> bool:
+        return self.fits_charge(self.charge(resources))
+
+    def fits_charge(self, req: dict[str, float]) -> bool:
+        """Admission check on a pre-computed charge (the scheduler caches
+        charges at submit to keep the dispatch scan cheap)."""
+        with self._lock:
+            return all(self.used[n] + amt <= self.capacity[n] + 1e-9
+                       for n, amt in req.items())
+
+    def ever_fits(self, resources: Optional[dict[str, Any]]) -> bool:
+        """Could this job run on an empty cluster at all?"""
+        req = self.charge(resources)
+        return all(amt <= self.capacity[n] + 1e-9 for n, amt in req.items())
+
+    def reserve(self, job_id: str,
+                resources: Optional[dict[str, Any]]) -> dict[str, float]:
+        req = self.charge(resources)
+        with self._lock:
+            if job_id in self._held:
+                return self._held[job_id]
+            if not all(self.used[n] + amt <= self.capacity[n] + 1e-9
+                       for n, amt in req.items()):
+                raise CapacityError(f"{job_id}: {req} oversubscribes "
+                                    f"{self.free()}")
+            for n, amt in req.items():
+                self.used[n] += amt
+            self._held[job_id] = req
+            return req
+
+    def release(self, job_id: str) -> Optional[dict[str, float]]:
+        """Idempotent: releasing an unknown/already-released job is a no-op."""
+        with self._lock:
+            req = self._held.pop(job_id, None)
+            if req is not None:
+                for n, amt in req.items():
+                    self.used[n] = max(0.0, self.used[n] - amt)
+            return req
+
+    def held(self, job_id: str) -> Optional[dict[str, float]]:
+        with self._lock:
+            return dict(self._held[job_id]) if job_id in self._held else None
+
+    def reservations(self) -> dict[str, dict[str, float]]:
+        with self._lock:
+            return {jid: dict(res) for jid, res in self._held.items()}
+
+    # -- observability --------------------------------------------------
+    def free(self) -> dict[str, float]:
+        with self._lock:
+            return {n: self.capacity[n] - self.used[n] for n in self.capacity}
+
+    def utilization(self) -> dict[str, float]:
+        with self._lock:
+            return {n: (self.used[n] / self.capacity[n]
+                        if self.capacity[n] > 0 else 0.0)
+                    for n in self.capacity}
+
+    def dominant_share(self, resources: Optional[dict[str, Any]]) -> float:
+        """DRF-style dominant share of one job's charge — the fair-share
+        accounting unit (usage = dominant_share x runtime)."""
+        req = self.charge(resources)
+        shares = [amt / self.capacity[n] for n, amt in req.items()
+                  if self.capacity[n] > 0]
+        return max(shares) if shares else 0.0

@@ -52,6 +52,50 @@ def job_history(registry: JobRegistry, metadata=None, *,
     return "\n".join(lines)
 
 
+def scheduler_page(scheduler, monitor=None) -> str:
+    """The cluster page: capacity + utilization, per-queue pressure and
+    queue-wait statistics from the capacity scheduler."""
+    lines = []
+    with scheduler._lock:     # dispatch may be running on a worker thread
+        if scheduler.cluster is not None:
+            cl = scheduler.cluster
+            util = cl.utilization()
+            lines.append("| resource | capacity | used | utilization |")
+            lines.append("|---|---|---|---|")
+            for dim in cl.capacity:
+                lines.append(f"| {dim} | {cl.capacity[dim]:g} "
+                             f"| {cl.used[dim]:g} "
+                             f"| {util[dim] * 100:.1f}% |")
+        else:
+            lines.append("(no cluster attached — capacity-unconstrained)")
+
+        lines.append("")
+        lines.append("| queue (project, user) | depth | active | waits | "
+                     "mean_wait_s |")
+        lines.append("|---|---|---|---|---|")
+        keys = sorted(set(scheduler._queues) | set(scheduler._active)
+                      | set(scheduler.stats["wait_by_key"]))
+        for key in keys:
+            count, total = scheduler.stats["wait_by_key"].get(key, (0, 0.0))
+            mean_w = total / count if count else 0.0
+            depth = len(scheduler._queues.get(key, ()))
+            active = len(scheduler._active.get(key, ()))
+            lines.append(f"| {key} | {depth} | {active} | {count} "
+                         f"| {mean_w:.2f} |")
+        s = scheduler.stats
+        lines.append(f"\nlaunched={s['launched']} "
+                     f"completed={s['completed']} "
+                     f"backfilled={s['backfilled']} "
+                     f"mean_queue_wait={scheduler.mean_queue_wait():.2f}s")
+    if monitor is not None and monitor.cluster_samples:
+        peak = monitor.peak_utilization()
+        mean = monitor.mean_utilization()
+        for dim in peak:
+            lines.append(f"utilization.{dim}: mean={mean[dim] * 100:.1f}% "
+                         f"peak={peak[dim] * 100:.1f}%")
+    return "\n".join(lines)
+
+
 def provenance_page(provenance, root: Optional[str] = None,
                     direction: str = "backward", max_depth: int = 10) -> str:
     """The provenance page: whole graph, or interactive trace from a node."""

@@ -1,29 +1,40 @@
 """In-process pub/sub event bus (the paper's Redis stand-in, §4.2).
 
-Two primary topics, exactly as the paper: ``container_status`` (published by
-the launcher watching the cluster) and ``job_progress`` (published by the
-in-container agent: downloading, running, uploading...). Synchronous
-delivery keeps the engine deterministic for tests; a real deployment swaps
-this for Redis without changing publishers/subscribers.
+Three topics: ``container_status`` (published by the launcher watching the
+cluster), ``job_progress`` (published by the in-container agent:
+downloading, running, uploading...), and ``scheduler_metrics`` (cluster
+utilization / queue-depth snapshots from the capacity scheduler).
+Synchronous delivery keeps the engine deterministic for tests; a real
+deployment swaps this for Redis without changing publishers/subscribers.
+
+Publish/subscribe are thread-safe for the ThreadPoolRunner's workers;
+handlers are invoked outside the bus lock (handlers take their own locks,
+and holding the bus lock across them would invert lock order).
 """
 from __future__ import annotations
 
+import threading
 from collections import defaultdict
 from typing import Any, Callable
 
 TOPIC_CONTAINER_STATUS = "container_status"
 TOPIC_JOB_PROGRESS = "job_progress"
+TOPIC_SCHEDULER = "scheduler_metrics"
 
 
 class EventBus:
     def __init__(self):
         self._subs: dict[str, list[Callable[[dict], None]]] = defaultdict(list)
         self.history: list[tuple[str, dict]] = []
+        self._lock = threading.RLock()
 
     def subscribe(self, topic: str, fn: Callable[[dict], None]) -> None:
-        self._subs[topic].append(fn)
+        with self._lock:
+            self._subs[topic].append(fn)
 
     def publish(self, topic: str, msg: dict) -> None:
-        self.history.append((topic, dict(msg)))
-        for fn in list(self._subs[topic]):
+        with self._lock:
+            self.history.append((topic, dict(msg)))
+            subs = list(self._subs[topic])
+        for fn in subs:
             fn(dict(msg))

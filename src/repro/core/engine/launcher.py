@@ -5,27 +5,38 @@ downloads code + input file set, runs the user command, uploads the output
 file set, and broadcasts progress on the event bus. The ``Runner`` interface
 reproduces that protocol; two implementations ship:
 
-  LocalRunner   — executes the job's python callable synchronously in a
-                  scratch "container" directory (real measured runtime).
-  VirtualRunner — completes jobs on a virtual clock using a runtime oracle
-                  (duration = spec.duration or oracle(job)); this is what the
-                  auto-provisioning experiments schedule thousands of
-                  profiling jobs on, and what exercises quota/straggler
-                  logic deterministically.
+  LocalRunner      — executes the job's python callable synchronously in a
+                     scratch "container" directory (real measured runtime).
+  ThreadPoolRunner — LocalRunner semantics on a bounded worker pool:
+                     ``launch`` returns immediately and the agent protocol
+                     (download/run/upload/publish) runs on a worker thread;
+                     ``pending``/``step`` let the scheduler drain it like
+                     the virtual runner.
+  VirtualRunner    — completes jobs on a virtual clock using a runtime
+                     oracle (duration = spec.duration or oracle(job)); this
+                     is what the auto-provisioning experiments schedule
+                     thousands of profiling jobs on, and what exercises
+                     quota/capacity/straggler logic deterministically. It
+                     exposes expected completion times so the scheduler's
+                     EASY backfill can compute shadow start times.
 """
 from __future__ import annotations
 
 import heapq
 import io
+import sys
+import threading
 import time
 import traceback
-from contextlib import redirect_stdout
+from concurrent.futures import ThreadPoolExecutor
+from contextlib import contextmanager, redirect_stdout
 from pathlib import Path
 from typing import Callable, Optional
 
 from repro.core.engine.events import (EventBus, TOPIC_CONTAINER_STATUS,
                                       TOPIC_JOB_PROGRESS)
-from repro.core.engine.lifecycle import JobState
+from repro.core.engine.lifecycle import (IllegalTransition, JobState,
+                                         TERMINAL_STATES)
 from repro.core.engine.logparse import parse_log
 from repro.core.engine.registry import Job, JobRegistry
 
@@ -33,6 +44,15 @@ from repro.core.engine.registry import Job, JobRegistry
 class Runner:
     def launch(self, job: Job) -> None:
         raise NotImplementedError
+
+    # -- optional hooks the capacity scheduler consults -----------------
+    def expected_duration(self, job: Job) -> Optional[float]:
+        """Best-effort runtime estimate for backfill; None if unknown."""
+        return job.spec.duration
+
+    def expected_end(self, job_id: str) -> Optional[float]:
+        """Expected completion time of a running job; None if unknown."""
+        return None
 
 
 class LocalRunner(Runner):
@@ -46,6 +66,10 @@ class LocalRunner(Runner):
         self.datalake = datalake            # AcaiProject-like facade or None
         self.workroot = Path(workroot)
         self.pricing = pricing
+
+    def _capture(self, log_buf: io.StringIO):
+        """Capture the job fn's stdout into its log buffer."""
+        return redirect_stdout(log_buf)
 
     def launch(self, job: Job) -> None:
         bus, reg = self.bus, self.registry
@@ -64,7 +88,7 @@ class LocalRunner(Runner):
                                                    workdir)
             bus.publish(TOPIC_JOB_PROGRESS,
                         {"job_id": job.job_id, "stage": "running"})
-            with redirect_stdout(log_buf):
+            with self._capture(log_buf):
                 result = job.spec.fn(workdir, job) if job.spec.fn else None
             if isinstance(result, dict):
                 job.outputs.update(result)
@@ -112,6 +136,15 @@ class LocalRunner(Runner):
 
     def _finalize(self, job: Job, log_text: str, state: JobState,
                   error: Optional[str] = None) -> None:
+        # the job may have been killed while the fn ran (thread workers):
+        # keep the registry's terminal state, don't overwrite it
+        if self.registry.get(job.job_id).state in TERMINAL_STATES:
+            state = self.registry.get(job.job_id).state
+        else:
+            try:
+                self.registry.set_state(job.job_id, state, error=error)
+            except IllegalTransition:   # killed between check and set
+                state = self.registry.get(job.job_id).state
         if self.pricing is not None and job.runtime is not None:
             job.cost = self.pricing.job_cost(job.spec.resources, job.runtime)
         if self.datalake is not None:
@@ -121,13 +154,112 @@ class LocalRunner(Runner):
             self.datalake.metadata.put(job.job_id, runtime=job.runtime,
                                        cost=job.cost, state=state.value)
         job.outputs["log"] = log_text
-        self.registry.set_state(job.job_id, state, error=error)
         self.bus.publish(TOPIC_CONTAINER_STATUS,
                          {"job_id": job.job_id, "status": state.value})
 
 
+class _ThreadLocalStdout(io.TextIOBase):
+    """Dispatches writes to a per-thread buffer, falling back to the real
+    stdout. ``contextlib.redirect_stdout`` swaps the process-global
+    ``sys.stdout``, so concurrent agents would capture each other's logs;
+    this proxy keeps each worker's job log isolated."""
+
+    def __init__(self, fallback):
+        self.fallback = fallback
+        self._local = threading.local()
+
+    def push(self, buf) -> None:
+        self._local.buf = buf
+
+    def pop(self) -> None:
+        self._local.buf = None
+
+    def _target(self):
+        return getattr(self._local, "buf", None) or self.fallback
+
+    def write(self, s) -> int:
+        return self._target().write(s)
+
+    def flush(self) -> None:
+        self._target().flush()
+
+    def writable(self) -> bool:
+        return True
+
+
+_stdout_proxy_lock = threading.Lock()
+
+
+class ThreadPoolRunner(LocalRunner):
+    """Concurrent LocalRunner: the same agent protocol (download -> run ->
+    upload -> publish), executed on a bounded pool of worker threads so the
+    scheduler can keep the cluster full. ``pending``/``step`` mirror the
+    virtual runner so ``run_to_completion`` drains either transparently."""
+
+    def __init__(self, registry: JobRegistry, bus: EventBus, *,
+                 datalake=None, workroot: str = "/tmp/acai-jobs",
+                 pricing=None, max_workers: int = 4):
+        super().__init__(registry, bus, datalake=datalake,
+                         workroot=workroot, pricing=pricing)
+        self.max_workers = max_workers
+        self._executor = ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="acai-agent")
+        self._cv = threading.Condition()
+        self._inflight: set[str] = set()
+        self._completions = 0
+
+    @contextmanager
+    def _capture(self, log_buf: io.StringIO):
+        with _stdout_proxy_lock:
+            if not isinstance(sys.stdout, _ThreadLocalStdout):
+                sys.stdout = _ThreadLocalStdout(sys.stdout)
+            proxy = sys.stdout
+        proxy.push(log_buf)
+        try:
+            yield
+        finally:
+            proxy.pop()
+
+    def launch(self, job: Job) -> None:
+        with self._cv:
+            self._inflight.add(job.job_id)
+        self._executor.submit(self._run, job)
+
+    def _run(self, job: Job) -> None:
+        try:
+            LocalRunner.launch(self, job)
+        finally:
+            with self._cv:
+                self._inflight.discard(job.job_id)
+                self._completions += 1
+                self._cv.notify_all()
+
+    def pending(self) -> int:
+        with self._cv:
+            return len(self._inflight)
+
+    def step(self, timeout: float = 120.0) -> None:
+        """Block until at least one in-flight job completes (or none are
+        left) — the drain primitive ``run_to_completion`` loops on."""
+        with self._cv:
+            seen = self._completions
+            self._cv.wait_for(
+                lambda: self._completions > seen or not self._inflight,
+                timeout)
+
+    def shutdown(self) -> None:
+        self._executor.shutdown(wait=True)
+
+
 class VirtualRunner(Runner):
-    """Virtual-clock agent for simulated fleets (profiling experiments)."""
+    """Virtual-clock agent for simulated fleets (profiling experiments).
+
+    The duration is drawn ONCE at launch (stochastic oracles stay
+    consistent between the scheduled end and the recorded runtime) and the
+    expected completion time is exposed for EASY backfill. KILLED jobs
+    publish their terminal ``container_status`` exactly like FINISHED ones,
+    so monitors/dashboards observe kills on the virtual clock.
+    """
 
     def __init__(self, registry: JobRegistry, bus: EventBus, *,
                  oracle: Optional[Callable[[Job], float]] = None,
@@ -137,27 +269,43 @@ class VirtualRunner(Runner):
         self.oracle = oracle
         self.pricing = pricing
         self.now = 0.0
-        self._heap: list[tuple[float, int, str]] = []
+        self._heap: list[tuple[float, int, str, float]] = []
+        self._ends: dict[str, float] = {}
+        self._dur_cache: dict[str, float] = {}
         self._seq = 0
+
+    def _draw_duration(self, job: Job) -> float:
+        """One oracle draw per job, shared between the backfill estimate
+        and the actual launch — stochastic oracles stay consistent and the
+        RNG stream does not depend on how often the scheduler peeks."""
+        if job.spec.duration is not None:
+            return job.spec.duration
+        if job.job_id not in self._dur_cache:
+            self._dur_cache[job.job_id] = self.oracle(job)
+        return self._dur_cache[job.job_id]
 
     def launch(self, job: Job) -> None:
         self.registry.set_state(job.job_id, JobState.RUNNING)
-        dur = job.spec.duration if job.spec.duration is not None \
-            else self.oracle(job)
+        dur = self._draw_duration(job)
         self._seq += 1
-        heapq.heappush(self._heap, (self.now + dur, self._seq, job.job_id))
+        self._ends[job.job_id] = self.now + dur
+        heapq.heappush(self._heap, (self.now + dur, self._seq, job.job_id,
+                                    dur))
 
     def step(self) -> Optional[str]:
         """Advance to the next completion; returns the finished job id."""
         if not self._heap:
             return None
-        t, _, job_id = heapq.heappop(self._heap)
+        t, _, job_id, dur = heapq.heappop(self._heap)
         self.now = max(self.now, t)
+        self._ends.pop(job_id, None)
+        self._dur_cache.pop(job_id, None)
         job = self.registry.get(job_id)
         if job.state == JobState.KILLED:
+            self.bus.publish(TOPIC_CONTAINER_STATUS,
+                             {"job_id": job_id, "status": "KILLED"})
             return job_id
-        job.runtime = (job.spec.duration if job.spec.duration is not None
-                       else self.oracle(job))
+        job.runtime = dur
         if self.pricing is not None:
             job.cost = self.pricing.job_cost(job.spec.resources, job.runtime)
         self.registry.set_state(job_id, JobState.FINISHED)
@@ -167,3 +315,12 @@ class VirtualRunner(Runner):
 
     def pending(self) -> int:
         return len(self._heap)
+
+    # -- capacity-scheduler hooks ---------------------------------------
+    def expected_duration(self, job: Job) -> Optional[float]:
+        if job.spec.duration is None and self.oracle is None:
+            return None
+        return self._draw_duration(job)
+
+    def expected_end(self, job_id: str) -> Optional[float]:
+        return self._ends.get(job_id)

@@ -1,21 +1,31 @@
-"""Job monitor + log server (ACAI §4.2): subscribes to both bus topics,
+"""Job monitor + log server (ACAI §4.2): subscribes to all bus topics,
 keeps per-job latest status, progress stage and log tail; the dashboard's
-WebSocket feed becomes the ``watch`` API."""
+WebSocket feed becomes the ``watch`` API. With the capacity scheduler it
+also records cluster-utilization snapshots (``scheduler_metrics`` topic),
+so queue pressure and capacity holes are observable over (virtual) time."""
 from __future__ import annotations
 
 from collections import defaultdict
 
 from repro.core.engine.events import (EventBus, TOPIC_CONTAINER_STATUS,
-                                      TOPIC_JOB_PROGRESS)
+                                      TOPIC_JOB_PROGRESS, TOPIC_SCHEDULER)
 
 
 class JobMonitor:
-    def __init__(self, bus: EventBus):
+    def __init__(self, bus: EventBus, *, max_samples: int = 10_000):
         self.status: dict[str, str] = {}
         self.stage: dict[str, str] = {}
         self.events: dict[str, list[dict]] = defaultdict(list)
+        self.cluster_samples: list[dict] = []
+        self.max_samples = max_samples
+        # running aggregates at ingest: the sample buffer is trimmed, so
+        # peak/mean must not be recomputed from it
+        self._peak: dict[str, float] = {}
+        self._util_sum: dict[str, float] = defaultdict(float)
+        self._util_n = 0
         bus.subscribe(TOPIC_CONTAINER_STATUS, self._on_status)
         bus.subscribe(TOPIC_JOB_PROGRESS, self._on_progress)
+        bus.subscribe(TOPIC_SCHEDULER, self._on_scheduler)
 
     def _on_status(self, msg: dict) -> None:
         self.status[msg["job_id"]] = msg.get("status", "")
@@ -25,5 +35,25 @@ class JobMonitor:
         self.stage[msg["job_id"]] = msg.get("stage", "")
         self.events[msg["job_id"]].append(msg)
 
+    def _on_scheduler(self, msg: dict) -> None:
+        self.cluster_samples.append(msg)
+        util = msg.get("utilization", {})
+        if util:
+            self._util_n += 1
+            for dim, u in util.items():
+                self._peak[dim] = max(self._peak.get(dim, 0.0), u)
+                self._util_sum[dim] += u
+        if len(self.cluster_samples) > self.max_samples:
+            del self.cluster_samples[:len(self.cluster_samples) // 2]
+
     def watch(self, job_id: str) -> list[dict]:
         return list(self.events[job_id])
+
+    # -- utilization over (virtual) time --------------------------------
+    def peak_utilization(self) -> dict[str, float]:
+        return dict(self._peak)
+
+    def mean_utilization(self) -> dict[str, float]:
+        if not self._util_n:
+            return {}
+        return {d: v / self._util_n for d, v in self._util_sum.items()}

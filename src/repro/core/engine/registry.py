@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Callable, Optional
 
@@ -24,6 +25,8 @@ class JobSpec:
     args: dict[str, Any] = dataclasses.field(default_factory=dict)
     # virtual-duration hook for simulated runs (profiling experiments)
     duration: Optional[float] = None
+    # scheduling priority (added to the queue's priority; higher first)
+    priority: int = 0
 
 
 @dataclasses.dataclass
@@ -49,11 +52,13 @@ class JobRegistry:
         self._jobs: dict[str, Job] = {}
         self._ctr = 0
         self.metadata = metadata
+        self._lock = threading.RLock()
 
     def submit(self, spec: JobSpec) -> Job:
-        self._ctr += 1
-        job = Job(job_id=f"job-{self._ctr}", spec=spec)
-        self._jobs[job.job_id] = job
+        with self._lock:
+            self._ctr += 1
+            job = Job(job_id=f"job-{self._ctr}", spec=spec)
+            self._jobs[job.job_id] = job
         if self.metadata is not None:
             self.metadata.register(job.job_id, kind="job",
                                    creator=spec.user, model=spec.name,
@@ -68,12 +73,13 @@ class JobRegistry:
 
     def set_state(self, job_id: str, new: JobState,
                   error: Optional[str] = None) -> Job:
-        job = self._jobs[job_id]
-        check_transition(job.state, new)
-        job.state = new
-        if new == JobState.RUNNING:
-            job.started_at = time.time()
-        if new in (JobState.FINISHED, JobState.FAILED, JobState.KILLED):
-            job.finished_at = time.time()
-            job.error = error
-        return job
+        with self._lock:
+            job = self._jobs[job_id]
+            check_transition(job.state, new)
+            job.state = new
+            if new == JobState.RUNNING:
+                job.started_at = time.time()
+            if new in (JobState.FINISHED, JobState.FAILED, JobState.KILLED):
+                job.finished_at = time.time()
+                job.error = error
+            return job

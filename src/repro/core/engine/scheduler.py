@@ -1,71 +1,367 @@
-"""Job scheduler (ACAI §3.3.1): per-(project, user) FIFO queues with a quota
-of at most k jobs in LAUNCHING|RUNNING per tuple, plus the paper's 95 %
-profiling quorum as a first-class straggler-mitigation policy (§4.2.2).
+"""Cluster-capacity scheduler (ACAI §3.3.1–§3.3.2, scaled to shared
+capacity).
+
+The seed engine was a per-(project, user) FIFO with a quota of at most
+``quota_k`` jobs in LAUNCHING|RUNNING per tuple. That quota survives, but
+admission is now gated on a finite ``Cluster``: a job launches only when
+its resource charge fits the remaining capacity, reserved on launch and
+released on terminal events. Across queues the scheduler orders work by
+
+  1. priority      — queue priority + per-job priority, higher first;
+  2. fair share    — accumulated dominant-share x runtime per queue,
+                     divided by the queue's weight, lower first (DRF-style);
+  3. submit order  — FIFO tie-break.
+
+When the head candidate does not fit, EASY backfill lets later (smaller)
+jobs launch into the capacity hole as long as they provably do not delay
+the blocked job: either they finish before the blocked job's shadow start
+time (computed from the running jobs' expected completions), or they fit
+into the capacity that remains spare after the blocked job starts. With
+``policy="fifo"`` the scheduler degrades to a strict global-submission-order
+convoy (the benchmark baseline).
+
+Dispatch is iterative and non-reentrant: runners that publish a terminal
+``container_status`` synchronously from inside ``launch`` (instant local
+jobs) re-enter the scheduler through the bus; a guard flag folds those
+re-entries into the outer dispatch loop instead of recursing, so a fast job
+can neither double-launch nor miscount quota/capacity. All entry points
+are locked for the ThreadPoolRunner's worker threads.
+
+The paper's 95 % profiling quorum (§4.2.2) stays a first-class
+straggler-mitigation policy.
 """
 from __future__ import annotations
 
+import threading
+import time
 from collections import defaultdict, deque
 from typing import Optional
 
-from repro.core.engine.events import EventBus, TOPIC_CONTAINER_STATUS
-from repro.core.engine.lifecycle import (ACTIVE_STATES, TERMINAL_STATES,
-                                         JobState)
+from repro.core.engine.cluster import Cluster
+from repro.core.engine.events import (EventBus, TOPIC_CONTAINER_STATUS,
+                                      TOPIC_SCHEDULER)
+from repro.core.engine.lifecycle import TERMINAL_STATES, JobState
 from repro.core.engine.registry import Job, JobRegistry
+
+
+class QueueConfig:
+    """Per-(project, user) scheduling knobs."""
+
+    def __init__(self, priority: int = 0, weight: float = 1.0):
+        self.priority = priority
+        self.weight = max(weight, 1e-9)
 
 
 class Scheduler:
     def __init__(self, registry: JobRegistry, launcher, bus: EventBus,
-                 quota_k: int = 2):
+                 quota_k: int = 2, *, cluster: Optional[Cluster] = None,
+                 policy: str = "fair", backfill: bool = True,
+                 backfill_depth: int = 100):
+        if policy not in ("fair", "fifo"):
+            raise ValueError(f"unknown policy {policy!r}")
         self.registry = registry
         self.launcher = launcher
         self.bus = bus
         self.quota_k = quota_k
+        self.cluster = cluster
+        self.policy = policy
+        self.backfill = backfill and policy == "fair"
+        self.backfill_depth = backfill_depth
         self._queues: dict[tuple, deque[str]] = defaultdict(deque)
         self._active: dict[tuple, set[str]] = defaultdict(set)
+        self._qconf: dict[tuple, QueueConfig] = defaultdict(QueueConfig)
+        self._usage: dict[tuple, float] = defaultdict(float)
+        self._seq_of: dict[str, int] = {}
+        self._seq = 0
+        # dispatch-scan caches: priority and capacity charge per queued job,
+        # plus a per-dim lower bound on any job's charge (monotone min) so a
+        # saturated cluster short-circuits the scan entirely.
+        self._prio_of: dict[str, int] = {}
+        self._charge_of: dict[str, dict[str, float]] = {}
+        self._min_charge: dict[str, float] = {}
+        self._queued_at: dict[str, float] = {}
+        self._started_at: dict[str, float] = {}
+        self._lock = threading.RLock()
+        self._dispatching = False
+        self._dispatch_pending = False
+        # running aggregates (not per-job lists): a long-lived platform
+        # schedules millions of jobs, so metrics must stay O(queues)
+        self.stats = {"launched": 0, "completed": 0, "backfilled": 0,
+                      "wait_count": 0, "wait_sum": 0.0,
+                      "wait_by_key": defaultdict(lambda: [0, 0.0])}
         bus.subscribe(TOPIC_CONTAINER_STATUS, self._on_container_status)
 
     # ------------------------------------------------------------------
-    def submit(self, job: Job) -> None:
-        self.registry.set_state(job.job_id, JobState.QUEUED)
-        self._queues[job.queue_key].append(job.job_id)
-        self._maybe_launch(job.queue_key)
+    def _now(self) -> float:
+        now = getattr(self.launcher, "now", None)
+        return now if now is not None else time.time()
 
-    def kill(self, job_id: str) -> None:
-        job = self.registry.get(job_id)
-        if job.state in TERMINAL_STATES:
-            return
-        key = job.queue_key
-        if job_id in self._queues[key]:
-            self._queues[key].remove(job_id)
-        self._active[key].discard(job_id)
-        self.registry.set_state(job_id, JobState.KILLED)
-        self._maybe_launch(key)
+    def configure_queue(self, project: str, user: str, *,
+                        priority: int = 0, weight: float = 1.0) -> None:
+        with self._lock:
+            self._qconf[(project, user)] = QueueConfig(priority, weight)
 
     # ------------------------------------------------------------------
-    def _maybe_launch(self, key: tuple) -> None:
-        q = self._queues[key]
-        while q and len(self._active[key]) < self.quota_k:
-            job_id = q.popleft()
-            job = self.registry.get(job_id)
-            self._active[key].add(job_id)
-            self.registry.set_state(job_id, JobState.LAUNCHING)
-            self.launcher.launch(job)
+    def submit(self, job: Job) -> None:
+        with self._lock:
+            self.registry.set_state(job.job_id, JobState.QUEUED)
+            self._seq += 1
+            self._seq_of[job.job_id] = self._seq
+            self._prio_of[job.job_id] = job.spec.priority
+            self._queued_at[job.job_id] = self._now()
+            self._queues[job.queue_key].append(job.job_id)
+            if self.cluster is not None:
+                charge = self.cluster.charge(job.spec.resources)
+                if any(amt > self.cluster.capacity[n] + 1e-9
+                       for n, amt in charge.items()):
+                    # can never fit even on an empty cluster: fail fast
+                    self._fail_infeasible(job.queue_key, job)
+                    return
+                self._charge_of[job.job_id] = charge
+                for n, amt in charge.items():
+                    self._min_charge[n] = min(
+                        self._min_charge.get(n, amt), amt)
+            self._dispatch()
 
+    def kill(self, job_id: str) -> None:
+        with self._lock:
+            job = self.registry.get(job_id)
+            if job.state in TERMINAL_STATES:
+                return
+            key = job.queue_key
+            if job_id in self._queues[key]:
+                self._queues[key].remove(job_id)
+            self._active[key].discard(job_id)
+            self.registry.set_state(job_id, JobState.KILLED)
+            self._settle(job_id, key)
+            self._dispatch()
+
+    # -- dispatch (non-reentrant) ---------------------------------------
+    def _maybe_launch(self, key: Optional[tuple] = None) -> None:
+        """Back-compat alias for the dispatch loop."""
+        with self._lock:
+            self._dispatch()
+
+    def _dispatch(self) -> None:
+        if self._dispatching:
+            # re-entered from a terminal event published inside launch();
+            # fold into the outer loop instead of recursing.
+            self._dispatch_pending = True
+            return
+        self._dispatching = True
+        try:
+            progress = True
+            while progress or self._dispatch_pending:
+                self._dispatch_pending = False
+                progress = self._dispatch_once()
+        finally:
+            self._dispatching = False
+        self._publish_snapshot()
+
+    def _candidates(self) -> list[str]:
+        """Queue-head slices ordered by (priority, fair share, FIFO)."""
+        out = []
+        for key, q in self._queues.items():
+            if not q:
+                continue
+            headroom = self.quota_k - len(self._active[key])
+            if headroom <= 0:
+                continue
+            depth = min(len(q), max(headroom, 0)
+                        + (self.backfill_depth if self.backfill else 0))
+            slice_ = list(q)[:depth]
+            conf = self._qconf[key]
+            share = self._usage[key] / conf.weight
+            for jid in slice_:
+                prio = conf.priority + self._prio_of.get(jid, 0)
+                out.append((key, jid, prio, share))
+        if self.policy == "fifo":
+            out.sort(key=lambda c: self._seq_of[c[1]])
+        else:
+            out.sort(key=lambda c: (-c[2], c[3], self._seq_of[c[1]]))
+        return [(key, jid) for key, jid, _, _ in out]
+
+    def _saturated(self) -> bool:
+        """No queued job can possibly fit: some dimension's free capacity
+        is below the smallest charge any submitted job carries."""
+        if self.cluster is None or not self._min_charge:
+            return False
+        free = self.cluster.free()
+        return any(free[n] + 1e-9 < amt
+                   for n, amt in self._min_charge.items())
+
+    def _dispatch_once(self) -> bool:
+        if self._saturated():
+            return False
+        launched = False
+        blocked_req = None
+        shadow = spare = None
+        quota_used: dict[tuple, int] = {}
+        for key, job_id in self._candidates():
+            if job_id not in self._queues[key]:
+                continue        # launched/killed by a nested event
+            used = quota_used.get(key, len(self._active[key]))
+            if used >= self.quota_k:
+                continue
+            job = self.registry.get(job_id)
+            charge = self._charge_of.get(job_id)
+            fits = self.cluster is None or self.cluster.fits_charge(charge)
+            if not fits:
+                if blocked_req is None:
+                    blocked_req = charge
+                    shadow, spare = self._shadow_time(blocked_req)
+                if not self.backfill:
+                    break       # convoy: strict order blocks the rest
+                continue
+            if blocked_req is not None:
+                ok, via_spare = self._can_backfill(job, charge, shadow,
+                                                   spare)
+                if not ok:
+                    continue
+                if via_spare:
+                    # this job may still be running at the shadow time:
+                    # consume its share of the spare so later backfill
+                    # candidates cannot collectively delay the blocked job
+                    for n, amt in charge.items():
+                        spare[n] -= amt
+                self.stats["backfilled"] += 1
+            self._launch(key, job)
+            quota_used[key] = used + 1
+            launched = True
+            if self._saturated():
+                break
+        return launched
+
+    def _launch(self, key: tuple, job: Job) -> None:
+        self._queues[key].remove(job.job_id)
+        self._active[key].add(job.job_id)
+        if self.cluster is not None:
+            self.cluster.reserve(job.job_id, job.spec.resources)
+        now = self._now()
+        self._started_at[job.job_id] = now
+        wait = now - self._queued_at.pop(job.job_id, now)
+        self.stats["launched"] += 1
+        self.stats["wait_count"] += 1
+        self.stats["wait_sum"] += wait
+        by_key = self.stats["wait_by_key"][key]
+        by_key[0] += 1
+        by_key[1] += wait
+        self.registry.set_state(job.job_id, JobState.LAUNCHING)
+        self.launcher.launch(job)
+
+    def _fail_infeasible(self, key: tuple, job: Job) -> None:
+        self._queues[key].remove(job.job_id)
+        err = (f"resources {job.spec.resources} exceed cluster capacity "
+               f"{self.cluster.capacity}")
+        self.registry.set_state(job.job_id, JobState.LAUNCHING)
+        self.registry.set_state(job.job_id, JobState.FAILED, error=err)
+        self.bus.publish(TOPIC_CONTAINER_STATUS,
+                         {"job_id": job.job_id, "status": "FAILED"})
+
+    # -- EASY backfill ---------------------------------------------------
+    def _shadow_time(self, blocked_req: dict) -> tuple[Optional[float],
+                                                       Optional[dict]]:
+        """Earliest time the blocked job fits (shadow start) and the
+        capacity left spare at that instant after it starts. Requires the
+        launcher to expose expected completion times; otherwise backfill
+        stays conservative (disabled for this round)."""
+        if self.cluster is None or \
+                not hasattr(self.launcher, "expected_end"):
+            return None, None
+        ends = []
+        for jid, res in self.cluster.reservations().items():
+            end = self.launcher.expected_end(jid)
+            if end is None:
+                return None, None
+            ends.append((end, res))
+        ends.sort(key=lambda e: e[0])
+        free = self.cluster.free()
+        for end, res in ends:
+            for n, amt in res.items():
+                free[n] += amt
+            if all(free[n] >= blocked_req[n] - 1e-9 for n in blocked_req):
+                spare = {n: free[n] - blocked_req[n] for n in blocked_req}
+                return end, spare
+        return None, None
+
+    def _can_backfill(self, job: Job, charge: dict,
+                      shadow: Optional[float],
+                      spare: Optional[dict]) -> tuple[bool, bool]:
+        """(admit, via_spare): admit if the job provably cannot delay the
+        blocked head — it ends before the shadow start, or it fits into
+        the capacity still spare once the head starts (``via_spare``)."""
+        if shadow is None:
+            return False, False
+        dur = None
+        if hasattr(self.launcher, "expected_duration"):
+            dur = self.launcher.expected_duration(job)
+        if dur is not None and self._now() + dur <= shadow + 1e-9:
+            return True, False  # finishes before the blocked job starts
+        return all(charge[n] <= spare[n] + 1e-9 for n in charge), True
+
+    # -- terminal events -------------------------------------------------
     def _on_container_status(self, msg: dict) -> None:
         status = msg.get("status", "")
-        if status in {s.value for s in TERMINAL_STATES}:
-            job = self.registry.get(msg["job_id"])
+        if status not in {s.value for s in TERMINAL_STATES}:
+            return
+        with self._lock:
+            job_id = msg["job_id"]
+            job = self.registry.get(job_id)
             key = job.queue_key
-            if msg["job_id"] in self._active[key]:
-                self._active[key].discard(msg["job_id"])
-                self._maybe_launch(key)
+            self._active[key].discard(job_id)
+            self._settle(job_id, key)
+            self._dispatch()
+
+    def _settle(self, job_id: str, key: tuple) -> None:
+        """Release capacity, free per-job bookkeeping, and charge
+        fair-share usage. Idempotent (a killed virtual job later pops off
+        the clock and publishes KILLED again), and usage/completed only
+        accrue for jobs that actually launched."""
+        if self.cluster is not None:
+            released = self.cluster.release(job_id)
+        else:
+            released = None
+        started_at = self._started_at.pop(job_id, None)
+        self._prio_of.pop(job_id, None)
+        self._charge_of.pop(job_id, None)
+        self._seq_of.pop(job_id, None)
+        self._queued_at.pop(job_id, None)
+        if started_at is None:
+            return          # never launched (queued kill / infeasible)
+        job = self.registry.get(job_id)
+        runtime = job.runtime
+        if runtime is None:
+            runtime = max(0.0, self._now() - started_at)
+        share = self.cluster.dominant_share(released or job.spec.resources) \
+            if self.cluster is not None else 1.0
+        self._usage[key] += (share if share > 0 else 1.0) * runtime
+        self.stats["completed"] += 1
+
+    def _publish_snapshot(self) -> None:
+        if self.cluster is None:
+            return
+        self.bus.publish(TOPIC_SCHEDULER, {
+            "now": self._now(),
+            "utilization": self.cluster.utilization(),
+            "queued": sum(len(q) for q in self._queues.values()),
+            "active": sum(len(a) for a in self._active.values()),
+        })
 
     # ------------------------------------------------------------------
     def queue_depth(self, project: str, user: str) -> int:
-        return len(self._queues[(project, user)])
+        with self._lock:
+            return len(self._queues[(project, user)])
 
     def active_count(self, project: str, user: str) -> int:
-        return len(self._active[(project, user)])
+        with self._lock:
+            return len(self._active[(project, user)])
+
+    def utilization(self) -> dict[str, float]:
+        return self.cluster.utilization() if self.cluster is not None else {}
+
+    def mean_queue_wait(self) -> float:
+        n = self.stats["wait_count"]
+        return self.stats["wait_sum"] / n if n else 0.0
 
     # -- quorum / straggler mitigation ----------------------------------
     def run_until_quorum(self, job_ids: list[str], frac: float = 0.95,
@@ -89,6 +385,6 @@ class Scheduler:
                 "virtual_time": getattr(self.launcher, "now", None)}
 
     def run_to_completion(self) -> None:
-        """Drain the virtual runner completely."""
+        """Drain the runner completely (virtual clock or thread pool)."""
         while self.launcher.pending() > 0:
             self.launcher.step()

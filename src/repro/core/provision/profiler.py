@@ -81,10 +81,14 @@ class LogLinearModel:
 class Profiler:
     """Drives profiling fleets through the engine and serves predictions."""
 
-    def __init__(self, engine, quorum: float = 0.95):
+    def __init__(self, engine, quorum: float = 0.95, priority: int = 0):
         # engine: repro.core.acai.AcaiEngine (registry+scheduler facade)
+        # priority: scheduling priority stamped on profiling jobs — the
+        # fleets are small and short, ideal backfill candidates, so
+        # platforms typically submit them below training priority.
         self.engine = engine
         self.quorum = quorum
+        self.priority = priority
         self.models: dict[str, LogLinearModel] = {}
         self.training_sets: dict[str, tuple[list[dict], list[float]]] = {}
 
@@ -93,7 +97,11 @@ class Profiler:
                 ) -> LogLinearModel:
         """job_factory(config) -> JobSpec for one profiling run."""
         grid = template.grid()
-        jobs = [self.engine.submit(job_factory(cfg)) for cfg in grid]
+        specs = [job_factory(cfg) for cfg in grid]
+        for spec in specs:
+            if not spec.priority:
+                spec.priority = self.priority
+        jobs = [self.engine.submit(spec) for spec in specs]
         res = self.engine.scheduler.run_until_quorum(
             [j.job_id for j in jobs], frac=self.quorum)
         configs, runtimes = [], []

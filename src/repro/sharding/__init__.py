@@ -1,3 +1,4 @@
+from repro.sharding.mesh import make_abstract_mesh
 from repro.sharding.rules import (AxisRules, constrain, set_rules,
                                   current_rules, param_specs,
                                   batch_specs, logical_to_spec)

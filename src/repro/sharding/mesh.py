@@ -1,0 +1,30 @@
+"""Version-compatible AbstractMesh construction.
+
+JAX changed ``AbstractMesh``'s constructor across 0.4.x -> 0.5+:
+
+    old (<= 0.4.x):  AbstractMesh(((name, size), ...))
+    new (>= 0.5):    AbstractMesh(axis_sizes, axis_names)
+
+Callers should never spell either signature directly; ``make_abstract_mesh``
+tries the new form and falls back to the old pair form, so mesh-shape
+property tests (and anything else building device-free meshes) collect and
+run on every pinned JAX.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+
+def make_abstract_mesh(axis_sizes: Sequence[int],
+                       axis_names: Sequence[str]):
+    """Build ``jax.sharding.AbstractMesh`` on any supported JAX version."""
+    from jax.sharding import AbstractMesh
+    sizes = tuple(int(s) for s in axis_sizes)
+    names = tuple(str(n) for n in axis_names)
+    if len(sizes) != len(names):
+        raise ValueError(f"axis_sizes/axis_names length mismatch: "
+                         f"{sizes} vs {names}")
+    try:
+        return AbstractMesh(sizes, names)          # new signature
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))   # old signature

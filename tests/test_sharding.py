@@ -7,17 +7,18 @@ import functools
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import get_arch, list_archs
 from repro.configs.shapes import SHAPES, applicable
 from repro.models import model as M
 from repro.models import transformer as T
+from repro.sharding import make_abstract_mesh
 from repro.sharding import rules as SR
 
 MESHES = {
-    "single": AbstractMesh((16, 16), ("data", "model")),
-    "multi": AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+    "single": make_abstract_mesh((16, 16), ("data", "model")),
+    "multi": make_abstract_mesh((2, 16, 16), ("pod", "data", "model")),
 }
 
 

@@ -1,0 +1,211 @@
+"""ThreadPoolRunner: the LocalRunner agent protocol on a bounded worker
+pool — same lifecycle events, provenance edges, and log/metadata capture
+as the synchronous runner, plus concurrency, quota and capacity behavior
+under threads."""
+import threading
+import time
+
+import pytest
+
+from repro.core.acai import AcaiPlatform
+from repro.core.engine.cluster import Cluster
+from repro.core.engine.lifecycle import JobState
+from repro.core.engine.registry import JobSpec
+
+
+@pytest.fixture
+def platform(tmp_path):
+    plat = AcaiPlatform(tmp_path, runner="thread", max_workers=4)
+    admin = plat.create_project(plat.admin_token, "proj")
+    return plat, admin
+
+
+def test_agent_protocol_end_to_end_threaded(platform):
+    """The LocalRunner e2e flow from test_engine.py, unchanged in behavior:
+    download -> run -> upload -> publish, provenance edge, log-parsed
+    metadata, cost — just drained through run_all() instead of returning
+    synchronously from submit."""
+    plat, admin = platform
+    proj = plat.project(admin)
+    proj.upload("/data/in.txt", b"42", creator="admin")
+    proj.create_file_set("inputs", ["/data/in.txt"], creator="admin")
+
+    def fn(workdir, job):
+        val = int((workdir / "data/in.txt").read_text())
+        (workdir / "out/result.txt").write_text(str(val * 2))
+        print(f"[[acai:answer={val * 2}]]")
+        return {"answer": val * 2}
+
+    job = plat.submit_job(admin, JobSpec(
+        name="double", project="", user="", fn=fn,
+        input_fileset="inputs", output_fileset="outputs",
+        resources={"vcpu": 1, "mem_mb": 1024}))
+    eng = plat.engine(admin)
+    eng.run_all()
+    j = eng.registry.get(job.job_id)
+    assert j.state == JobState.FINISHED
+    assert j.outputs["answer"] == 84
+    fsv = proj.filesets.resolve("outputs")
+    assert "/outputs/result.txt" in fsv.files
+    assert proj.storage.download("/outputs/result.txt") == b"84"
+    back = proj.provenance.backward("outputs:1")
+    assert ("inputs:1", {"action": "job", "job_id": job.job_id,
+                         "creator": "proj-admin"}) in back
+    md = proj.metadata.get(job.job_id)
+    assert md["answer"] == 84
+    assert md["cost"] > 0
+    stages = [e.get("stage") for e in eng.monitor.watch(job.job_id)
+              if "stage" in e]
+    assert stages == ["downloading", "running", "uploading"]
+
+
+def test_failed_job_threaded(platform):
+    plat, admin = platform
+
+    def boom(workdir, job):
+        raise RuntimeError("user code crashed")
+
+    job = plat.submit_job(admin, JobSpec(name="bad", project="", user="",
+                                         fn=boom))
+    eng = plat.engine(admin)
+    eng.run_all()
+    j = eng.registry.get(job.job_id)
+    assert j.state == JobState.FAILED
+    assert "user code crashed" in j.error
+
+
+def test_bounded_workers_and_quota(tmp_path):
+    """max_workers=2 bounds real concurrency; quota_k bounds per-queue
+    admission; all jobs finish after the drain."""
+    plat = AcaiPlatform(tmp_path, runner="thread", max_workers=2,
+                        quota_k=2)
+    admin = plat.create_project(plat.admin_token, "proj")
+    running = []
+    peak = []
+    lock = threading.Lock()
+
+    def fn(workdir, job):
+        with lock:
+            running.append(job.job_id)
+            peak.append(len(running))
+        time.sleep(0.05)
+        with lock:
+            running.remove(job.job_id)
+
+    jobs = [plat.submit_job(admin, JobSpec(name=f"j{i}", project="",
+                                           user="", fn=fn))
+            for i in range(8)]
+    eng = plat.engine(admin)
+    eng.run_all()
+    assert all(eng.registry.get(j.job_id).state == JobState.FINISHED
+               for j in jobs)
+    assert max(peak) <= 2
+
+
+def test_capacity_respected_across_threads(tmp_path):
+    """With a 2-vcpu cluster and 1-vcpu jobs, at most two run at once even
+    though the pool has more workers; capacity is never oversubscribed."""
+    plat = AcaiPlatform(tmp_path, runner="thread", max_workers=4,
+                        quota_k=100)
+    admin = plat.create_project(plat.admin_token, "proj")
+    eng = plat.engine(admin)
+    cl = Cluster({"vcpu": 2.0}, {"vcpu": 0.5})
+    eng.scheduler.cluster = cl
+    eng.cluster = cl
+    running = []
+    peak = []
+    lock = threading.Lock()
+
+    def fn(workdir, job):
+        with lock:
+            running.append(job.job_id)
+            peak.append(len(running))
+        time.sleep(0.03)
+        with lock:
+            running.remove(job.job_id)
+
+    jobs = [plat.submit_job(admin, JobSpec(
+        name=f"j{i}", project="", user="", fn=fn,
+        resources={"vcpu": 1})) for i in range(6)]
+    eng.run_all()
+    assert all(eng.registry.get(j.job_id).state == JobState.FINISHED
+               for j in jobs)
+    assert max(peak) <= 2
+    assert all(v == 0.0 for v in cl.used.values())
+
+
+def test_concurrent_output_filesets_and_provenance(tmp_path):
+    """Many workers uploading output filesets + provenance edges + parsed
+    metadata concurrently: every artifact lands, nothing corrupts."""
+    plat = AcaiPlatform(tmp_path, runner="thread", max_workers=4)
+    admin = plat.create_project(plat.admin_token, "proj")
+    proj = plat.project(admin)
+
+    def fn(workdir, job):
+        i = job.spec.args["i"]
+        (workdir / "out/part.txt").write_text(str(i))
+        print(f"[[acai:part={i}]]")
+
+    jobs = [plat.submit_job(admin, JobSpec(
+        name=f"w{i}", project="", user="", fn=fn, args={"i": i},
+        output_fileset=f"out-{i}")) for i in range(12)]
+    eng = plat.engine(admin)
+    eng.run_all()
+    for i, j in enumerate(jobs):
+        assert eng.registry.get(j.job_id).state == JobState.FINISHED, \
+            eng.registry.get(j.job_id).error
+        assert proj.storage.download(f"/out-{i}/part.txt") == \
+            str(i).encode()
+        assert proj.metadata.get(j.job_id)["part"] == i
+        assert proj.filesets.resolve(f"out-{i}").version == 1
+    assert proj.provenance.is_dag()
+
+
+def test_kill_while_running_on_worker(platform):
+    """Killing a job mid-run on a worker thread must not clobber the
+    KILLED state with FINISHED, and the terminal status reaches the
+    monitor and metadata."""
+    plat, admin = platform
+    proj = plat.project(admin)
+    started = threading.Event()
+
+    def slow(workdir, job):
+        started.set()
+        time.sleep(0.3)
+
+    job = plat.submit_job(admin, JobSpec(name="victim", project="",
+                                         user="", fn=slow))
+    eng = plat.engine(admin)
+    assert started.wait(5.0)
+    eng.scheduler.kill(job.job_id)
+    eng.run_all()
+    assert eng.registry.get(job.job_id).state == JobState.KILLED
+    assert eng.monitor.status[job.job_id] == "KILLED"
+    assert proj.metadata.get(job.job_id)["state"] == "KILLED"
+
+
+def test_training_workflow_threaded(tmp_path):
+    """The test_system.py workflow shape (upload -> fileset -> jobs ->
+    metadata query) through the thread pool."""
+    plat = AcaiPlatform(tmp_path, runner="thread", max_workers=4)
+    admin = plat.create_project(plat.admin_token, "e2e")
+    proj = plat.project(admin)
+    proj.upload("/data/dataset.json", b'{"seed": 7}', creator="e2e")
+    proj.create_file_set("TrainData", ["/data/dataset.json"], creator="e2e")
+
+    def train_job(workdir, job):
+        lr = job.spec.args["lr"]
+        loss = 1.0 / lr          # deterministic stand-in for training
+        print(f"[[acai:final_loss={loss}]]")
+
+    jobs = [plat.submit_job(admin, JobSpec(
+        name=f"train-lr{lr}", project="", user="", fn=train_job,
+        input_fileset="TrainData", args={"lr": lr},
+        resources={"vcpu": 2, "mem_mb": 2048})) for lr in (3e-3, 1e-4)]
+    eng = plat.engine(admin)
+    eng.run_all()
+    for j in jobs:
+        assert eng.registry.get(j.job_id).state == JobState.FINISHED, \
+            eng.registry.get(j.job_id).error
+    best = proj.metadata.find_min("final_loss", kind="job")
+    assert eng.registry.get(best).spec.args["lr"] == pytest.approx(3e-3)
