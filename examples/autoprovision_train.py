@@ -37,14 +37,8 @@ def main():
                         pricing=TPU_PRICING,
                         oracle=lambda job: true_runtime(job.spec.args))
     admin = plat.create_project(plat.admin_token, "provision-demo")
+    # the profiler submits as this token's user (stamped project/user)
     profiler = plat.make_profiler(admin)
-
-    class Eng:
-        registry = plat.engine(admin).registry
-        scheduler = plat.engine(admin).scheduler
-        submit = staticmethod(lambda spec: plat.submit_job(admin, spec))
-
-    profiler.engine = Eng()
 
     template = CommandTemplate(
         name=f"{ARCH}-train",

@@ -1,7 +1,9 @@
-"""The paper's usability-study workflow (§5.2) end-to-end through the ACAI
-SDK: upload data -> create file set -> submit a hyperparameter sweep ->
-log-parser auto-tags accuracies -> one indexed query finds the best run ->
-provenance traces how its output was produced.
+"""The paper's usability-study workflow (§5.2) as a declared Pipeline:
+ETL stage -> horizontal hyperparameter sweep (`pipeline.map`) -> report
+stage, with zero manual sequencing. Stage edges are inferred from the
+dataflow (one stage's output_fileset feeding another's input_fileset),
+the scheduler gates each stage on its parents, every handle resolves in
+dependency order, and provenance records one edge per declared DAG edge.
 
     PYTHONPATH=src python examples/hyperparam_sweep.py
 """
@@ -15,9 +17,19 @@ from repro.core.acai import AcaiPlatform
 from repro.core.engine.registry import JobSpec
 
 
+def etl_job(workdir, job):
+    """Normalize the raw dump into the training fileset."""
+    raw = json.loads((workdir / "raw/dump.json").read_text())
+    x = jnp.asarray(raw["x"])
+    x = (x - x.mean(axis=0)) / (x.std(axis=0) + 1e-6)
+    (workdir / "out/train.json").write_text(
+        json.dumps({"x": x.tolist(), "y": raw["y"]}))
+    print(f"[[acai:rows={len(raw['y'])}]]")
+
+
 def train_job(workdir, job):
     cfg = job.spec.args
-    data = json.loads((workdir / "data/train.json").read_text())
+    data = json.loads((workdir / "TrainSet/train.json").read_text())
     x = jnp.asarray(data["x"])
     y = jnp.asarray(data["y"])
     key = jax.random.PRNGKey(cfg["seed"])
@@ -42,44 +54,83 @@ def train_job(workdir, job):
 
 def main():
     root = tempfile.mkdtemp(prefix="acai-sweep-")
-    plat = AcaiPlatform(root)
+    plat = AcaiPlatform(root, runner="thread", max_workers=4, quota_k=100)
     admin = plat.create_project(plat.admin_token, "sweep-demo")
     proj = plat.project(admin)
 
-    # 1. dataset into the lake, referenced by a file set
+    # 0. only the RAW dump goes to the lake; the pipeline derives the rest
     key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (256, 16))
+    x = jax.random.normal(key, (256, 16)) * 3.0 + 1.5   # unnormalized
     w_true = jax.random.normal(jax.random.PRNGKey(1), (16,))
-    y = (x @ w_true > 0).astype(jnp.float32)
-    proj.upload("/data/train.json",
+    y = ((x - 1.5) @ w_true > 0).astype(jnp.float32)
+    proj.upload("/raw/dump.json",
                 json.dumps({"x": x.tolist(), "y": y.tolist()}).encode(),
                 creator="demo")
-    proj.create_file_set("TrainSet", ["/data/train.json"], creator="demo")
+    proj.create_file_set("RawDump", ["/raw/dump.json"], creator="demo")
 
-    # 2. the sweep: 8 jobs, each reads the file set, writes a model fileset
-    for i, (h, lr) in enumerate((h, lr) for h in (8, 16, 32, 64)
-                                for lr in (0.5, 0.1)):
-        plat.submit_job(admin, JobSpec(
-            name=f"sweep-{i}", project="", user="", fn=train_job,
-            input_fileset="TrainSet", output_fileset=f"model-{i}",
-            args={"hidden": h, "lr": lr, "steps": 100, "seed": i},
-            resources={"vcpu": 1, "mem_mb": 512}))
+    def report_job(workdir, job):
+        """Runs only after every sweep stage: one indexed query replaces
+        the manual experiment log."""
+        best = proj.metadata.find_max("accuracy", kind="job")
+        (workdir / "out/best.json").write_text(
+            json.dumps(proj.metadata.get(best) | {"job_id": best}))
 
-    # 3. one indexed query replaces the manual experiment log
-    best_id = proj.metadata.find_max("accuracy", kind="job")
-    best = proj.metadata.get(best_id)
-    print(f"best job: {best_id} acc={best['accuracy']:.3f} "
+    # 1. declare the DAG: ETL -> map sweep -> report. The sweep's edge on
+    # ETL and the report handles' ordering need no manual sequencing —
+    # TrainSet/model-* dataflow plus after= declare everything.
+    pipe = plat.pipeline(admin, name="sweep")
+    etl = pipe.stage(JobSpec(
+        name="etl", project="", user="", fn=etl_job,
+        input_fileset="RawDump", output_fileset="TrainSet",
+        resources={"vcpu": 1, "mem_mb": 512}))
+    sweep = pipe.map(
+        lambda p: JobSpec(
+            name=f"train-h{p['hidden']}-lr{p['lr']}", project="", user="",
+            fn=train_job, input_fileset="TrainSet",
+            output_fileset=f"model-h{p['hidden']}-lr{p['lr']}",
+            args={**p, "steps": 100, "seed": p["hidden"]},
+            resources={"vcpu": 1, "mem_mb": 512}),
+        {"hidden": (8, 16, 32, 64), "lr": (0.5, 0.1)})
+    report = pipe.stage(JobSpec(
+        name="report", project="", user="", fn=report_job,
+        output_fileset="SweepReport",
+        resources={"vcpu": 1, "mem_mb": 256}), after=sweep)
+
+    # 2. run: every stage gets a JobHandle future; resolution is DAG-gated
+    handles = pipe.run()
+    print(f"submitted {len(handles)} stages "
+          f"({plat.engine(admin).scheduler.held_count()} held on parents)")
+    states = pipe.wait(timeout=600)
+    print("terminal states:", [s.value for s in states])
+
+    report.handle.result()          # resolves the report stage (or raises)
+    best = json.loads(proj.storage.download("/SweepReport/best.json"))
+    print(f"best job: {best['job_id']} acc={best['accuracy']:.3f} "
           f"hidden={best['hidden']} lr={best['lr']} cost=${best['cost']:.6f}")
 
-    # 4. provenance: trace the best model back to its inputs
-    eng = plat.engine(admin)
-    out_ref = eng.registry.get(best_id).outputs["fileset"]
-    print("model fileset:", out_ref)
+    # 3. provenance reflects the DECLARED dataflow: one edge per DAG edge
+    edges = proj.provenance.dependency_edges(pipeline="sweep")
+    print(f"declared DAG edges recorded: {len(edges)} "
+          f"(1 etl->train x8, train->report x8)")
+    out_ref = plat.engine(admin).registry.get(best["job_id"]) \
+        .outputs["fileset"]
+    print("best model fileset:", out_ref)
     print("derived from:", proj.provenance.backward(out_ref))
-    print("replay order:", proj.provenance.replay_order(out_ref))
-    # range query, as in the paper's exemplar
-    good = proj.metadata.find(kind="job", accuracy=(">", 0.9))
-    print(f"{len(good)} jobs with accuracy > 0.9")
+
+    # 4. failure cascade: a broken ETL upstream-fails its whole subtree
+    def bad_etl(workdir, job):
+        raise RuntimeError("schema drift in raw dump")
+
+    pipe2 = plat.pipeline(admin, name="broken")
+    bad = pipe2.stage(JobSpec(name="bad-etl", project="", user="",
+                              fn=bad_etl, output_fileset="Clean2"))
+    kids = pipe2.map(
+        lambda p: JobSpec(name=f"never-{p['i']}", project="", user="",
+                          fn=train_job, input_fileset="Clean2"),
+        [{"i": 0}, {"i": 1}])
+    pipe2.run()
+    print("broken pipeline:",
+          {h.spec.name: h.wait(timeout=60).value for h in pipe2.handles})
 
 
 if __name__ == "__main__":

@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_arch, list_archs
-from repro.core.acai import AcaiProject
+from repro.core.acai import AcaiEngine, AcaiProject
+from repro.core.engine.registry import JobSpec
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.models import model as M
 from repro.train.checkpoints import CheckpointManager
@@ -63,6 +64,21 @@ def main():
     ids = project.metadata.find(kind="checkpoint")
     print("checkpoint metadata:", {i: project.metadata.get(i).get('loss')
                                    for i in ids[-2:]})
+
+    # evaluation as a platform job: submit returns a JobHandle future and
+    # .result() resolves it — no run_all(), no manual sequencing
+    eng = AcaiEngine(datalake=project, workroot=workdir + "/jobs")
+
+    def eval_job(wd, job):
+        n_params = sum(p.size for p in jax.tree.leaves(restored["params"]))
+        print(f"[[acai:eval_params={n_params},ckpt_step={rstep}]]")
+        return {"params": int(n_params)}
+
+    handle = eng.submit(JobSpec(name="eval", project="quickstart",
+                                user="you", fn=eval_job,
+                                resources={"vcpu": 1, "mem_mb": 512}))
+    print(f"eval job {handle.job_id}: {handle.result()['params']:,} params "
+          f"verified from checkpoint step {rstep}")
 
 
 if __name__ == "__main__":

@@ -1,1 +1,9 @@
 from repro.core.acai import AcaiEngine, AcaiPlatform, AcaiProject
+from repro.core.engine.handle import (JobFailedError, JobHandle,
+                                      UpstreamFailedError, wait_all)
+from repro.core.engine.pipeline import Pipeline, Stage
+from repro.core.engine.registry import JobSpec
+
+__all__ = ["AcaiEngine", "AcaiPlatform", "AcaiProject", "JobFailedError",
+           "JobHandle", "UpstreamFailedError", "wait_all", "Pipeline",
+           "Stage", "JobSpec"]

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import secrets
+import warnings
 from pathlib import Path
 from typing import Any, Callable, Optional
 
@@ -19,9 +20,11 @@ from repro.core.datalake.provenance import ProvenanceGraph
 from repro.core.datalake.storage import Storage
 from repro.core.engine.cluster import Cluster
 from repro.core.engine.events import EventBus
+from repro.core.engine.handle import JobHandle, wait_all
 from repro.core.engine.launcher import (LocalRunner, ThreadPoolRunner,
                                         VirtualRunner)
 from repro.core.engine.monitor import JobMonitor
+from repro.core.engine.pipeline import Pipeline
 from repro.core.engine.registry import JobRegistry, JobSpec
 from repro.core.engine.scheduler import Scheduler
 from repro.core.provision.autoprovision import AutoProvisioner
@@ -78,8 +81,10 @@ class AcaiEngine:
                  runner: Optional[str] = None, max_workers: int = 4,
                  cluster: Optional[Cluster] = None,
                  cluster_nodes: Optional[int] = None,
-                 policy: str = "fair", backfill: bool = True):
+                 policy: str = "fair", backfill: bool = True,
+                 usage_halflife: Optional[float] = None):
         self.bus = EventBus()
+        self.datalake = datalake
         self.registry = JobRegistry(
             metadata=datalake.metadata if datalake else None)
         runner = runner or ("virtual" if virtual else "local")
@@ -102,19 +107,76 @@ class AcaiEngine:
             cluster = Cluster.from_pricing(pricing, nodes=cluster_nodes)
         self.scheduler = Scheduler(self.registry, self.launcher, self.bus,
                                    quota_k=quota_k, cluster=cluster,
-                                   policy=policy, backfill=backfill)
+                                   policy=policy, backfill=backfill,
+                                   usage_halflife=usage_halflife)
         self.cluster = cluster
         self.monitor = JobMonitor(self.bus)
         self.pricing = pricing
 
-    def submit(self, spec: JobSpec):
+    def submit(self, spec: JobSpec, *, pipeline: str = "") -> JobHandle:
+        """Submit a job; returns a JobHandle future. Declared dependencies
+        (``spec.depends_on``) are recorded as provenance edges before the
+        job runs and gate its launch in the scheduler."""
+        parents = []
+        for pid in dict.fromkeys(spec.depends_on or ()):
+            try:
+                parents.append(self.registry.get(pid))
+            except KeyError:
+                # validated before the job is created: a bad dependency
+                # must not leave a zombie QUEUED job behind
+                raise ValueError(f"job {spec.name!r} depends on unknown "
+                                 f"job {pid!r}") from None
         job = self.registry.submit(spec)
+        if self.datalake is not None:
+            for parent in parents:
+                self.datalake.provenance.add_dependency_edge(
+                    src_job=parent.job_id, dst_job=job.job_id,
+                    pipeline=pipeline,
+                    src_fileset=parent.spec.output_fileset,
+                    dst_fileset=spec.input_fileset)
         self.scheduler.submit(job)
-        return job
+        return JobHandle(job, self)
 
-    def run_all(self) -> None:
+    def pipeline(self, name: str = "pipeline") -> Pipeline:
+        """A DAG builder whose stages submit to this engine."""
+        return Pipeline(self, name=name)
+
+    def wait_all(self, handles: Optional[list[JobHandle]] = None,
+                 timeout: Optional[float] = None):
+        """Resolve the given handles (or drain every pending job)."""
+        if handles is not None:
+            return wait_all(handles, timeout)
         if hasattr(self.launcher, "pending"):
             self.scheduler.run_to_completion()
+        return None
+
+    def run_all(self) -> None:
+        """Deprecated: drain the engine. Prefer keeping the JobHandles
+        from submit() and calling ``wait_all(handles)`` / ``h.result()``."""
+        warnings.warn("AcaiEngine.run_all() is deprecated; use the "
+                      "JobHandle futures returned by submit() "
+                      "(wait_all(handles), handle.result())",
+                      DeprecationWarning, stacklevel=2)
+        self.wait_all()
+
+
+class _UserEngine:
+    """Engine view bound to a user token: specs submitted through it are
+    stamped with the token's (project, user) exactly like ``submit_job``.
+    Everything else (registry, scheduler, monitor, ...) proxies to the
+    project's engine — the profiler's fleets run as the requesting user
+    without hand-rolled submit shims."""
+
+    def __init__(self, platform: "AcaiPlatform", token: str):
+        self._platform = platform
+        self._token = token
+        self._engine = platform.engine(token)
+
+    def submit(self, spec: JobSpec, **kw) -> JobHandle:
+        return self._platform.submit_job(self._token, spec, **kw)
+
+    def __getattr__(self, name):
+        return getattr(self._engine, name)
 
 
 class AcaiPlatform:
@@ -124,7 +186,8 @@ class AcaiPlatform:
                  virtual: bool = False, oracle=None, quota_k: int = 2,
                  runner: Optional[str] = None, max_workers: int = 4,
                  cluster_nodes: Optional[int] = None,
-                 policy: str = "fair", backfill: bool = True):
+                 policy: str = "fair", backfill: bool = True,
+                 usage_halflife: Optional[float] = None):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self._users: dict[str, User] = {}      # token -> user
@@ -140,6 +203,7 @@ class AcaiPlatform:
         self._cluster_nodes = cluster_nodes
         self._policy = policy
         self._backfill = backfill
+        self._usage_halflife = usage_halflife
 
     # -- credential server ----------------------------------------------
     @property
@@ -167,6 +231,7 @@ class AcaiPlatform:
             max_workers=self._max_workers,
             cluster_nodes=self._cluster_nodes,
             policy=self._policy, backfill=self._backfill,
+            usage_halflife=self._usage_halflife,
             workroot=str(self.root / name / "jobs"))
         return self.create_user(None, name, f"{name}-admin", _admin=True)
 
@@ -187,15 +252,24 @@ class AcaiPlatform:
     def engine(self, token: str) -> AcaiEngine:
         return self._engines[self.authenticate(token).project]
 
-    def submit_job(self, token: str, spec: JobSpec):
+    def submit_job(self, token: str, spec: JobSpec, *,
+                   pipeline: str = "") -> JobHandle:
         user = self.authenticate(token)
         spec.project = user.project
         spec.user = user.name
-        return self._engines[user.project].submit(spec)
+        return self._engines[user.project].submit(spec, pipeline=pipeline)
+
+    def pipeline(self, token: str, name: str = "pipeline") -> Pipeline:
+        """A DAG builder bound to the caller: stage specs are stamped with
+        the token's (project, user) at submit, like ``submit_job``."""
+        eng = self.engine(token)
+        return Pipeline(eng, name=name,
+                        submit=lambda spec: self.submit_job(
+                            token, spec, pipeline=name))
 
     def make_profiler(self, token: str, quorum: float = 0.95,
                       priority: int = 0) -> Profiler:
-        return Profiler(self.engine(token), quorum=quorum,
+        return Profiler(_UserEngine(self, token), quorum=quorum,
                         priority=priority)
 
     def make_autoprovisioner(self, token: str,

@@ -2,17 +2,26 @@
 
     python -m repro.core.cli --root /tmp/acai --token <tok> <command> ...
 
-Commands: upload, download, ls, create-file-set, jobs, cluster, find,
-trace, profile, autoprovision. State persists under --root (tokens in
-tokens.json for this local deployment)."""
+Commands: upload, download, ls, create-file-set, submit, status, wait,
+logs, jobs, cluster, find, trace. State persists under --root
+(tokens in tokens.json for this local deployment). ``submit`` runs a
+``module:callable`` through the futures SDK and prints the job id.
+Job state persists to the metadata store and log text to the data lake
+(``/.logs/<job-id>.log``), so ``status``/``logs`` work across
+invocations; ``--after`` accepts parents from past invocations too —
+a FINISHED parent is a met dependency, a failed one refuses the
+submit (the registry itself is per-process)."""
 from __future__ import annotations
 
 import argparse
+import importlib
 import json
 import sys
 from pathlib import Path
 
 from repro.core.acai import AcaiPlatform
+from repro.core.engine.handle import JobHandle
+from repro.core.engine.registry import JobSpec
 
 
 def _load_platform(root: Path) -> AcaiPlatform:
@@ -66,6 +75,28 @@ def main(argv=None) -> int:
     sp.add_argument("name")
     sp.add_argument("specs", nargs="+")
 
+    sp = sub.add_parser("submit", help="submit a job; prints id + state")
+    sp.add_argument("name")
+    sp.add_argument("--fn", required=True,
+                    help="module:callable executed as the job program")
+    sp.add_argument("--input-fileset", default=None)
+    sp.add_argument("--output-fileset", default=None)
+    sp.add_argument("--after", default="",
+                    help="comma-separated parent job ids (DAG gating)")
+    sp.add_argument("--arg", action="append", default=[],
+                    metavar="K=V", help="job arg (JSON values accepted)")
+    sp.add_argument("--vcpu", type=float, default=1)
+    sp.add_argument("--mem-mb", type=float, default=512)
+    sp.add_argument("--no-wait", action="store_true",
+                    help="print the handle immediately, don't resolve it")
+
+    for c, h in (("status", "job state"), ("logs", "job log text"),
+                 ("wait", "block until the job is terminal")):
+        sp = sub.add_parser(c, help=h)
+        sp.add_argument("job_id")
+        if c == "wait":
+            sp.add_argument("--timeout", type=float, default=None)
+
     sp = sub.add_parser("jobs")
     sp.add_argument("--status", default=None)
     sp.add_argument("--sort-by", default="job_id")
@@ -113,6 +144,86 @@ def main(argv=None) -> int:
     elif args.cmd == "create-file-set":
         print(proj.create_file_set(args.name, args.specs,
                                    creator=user.name))
+    elif args.cmd == "submit":
+        mod, _, fn_name = args.fn.partition(":")
+        fn = getattr(importlib.import_module(mod), fn_name)
+        job_args = {}
+        for kv in args.arg:
+            k, _, v = kv.partition("=")
+            try:
+                v = json.loads(v)
+            except json.JSONDecodeError:
+                pass
+            job_args[k] = v
+        # the registry is per-process (each invocation submits one job),
+        # so --after is a pre-submit gate over persisted terminal state;
+        # in-process scheduler gating needs the ROADMAP's persistent
+        # registry
+        for pid in [j for j in args.after.split(",") if j]:
+            past = proj.metadata.get(pid).get("state")
+            if past == "FINISHED":
+                continue
+            if past is None:
+                print(f"unknown parent job {pid}", file=sys.stderr)
+            else:
+                print(f"refusing submit: parent {pid} ended {past}",
+                      file=sys.stderr)
+            return 1
+        handle = plat.submit_job(args.token, JobSpec(
+            name=args.name, project="", user="", fn=fn,
+            input_fileset=args.input_fileset,
+            output_fileset=args.output_fileset,
+            args=job_args,
+            resources={"vcpu": args.vcpu, "mem_mb": args.mem_mb}))
+        state = handle.status() if args.no_wait else handle.wait()
+        print(f"{handle.job_id} {state.value}")
+    elif args.cmd in ("status", "wait", "logs"):
+        # cancel is SDK-only (JobHandle.cancel): the registry is
+        # per-process, so by the time a second invocation could cancel,
+        # the job is already terminal
+        eng = plat.engine(args.token)
+        in_registry = True
+        try:
+            job = eng.registry.get(args.job_id)
+        except KeyError:
+            in_registry = False
+        if args.cmd == "logs":
+            log = job.outputs.get("log") if in_registry else None
+            if log is None:
+                # the agent persists log text to the data lake
+                try:
+                    log = proj.storage.download(
+                        f"/.logs/{args.job_id}.log").decode()
+                except Exception:
+                    log = None
+            if log is None:
+                if not in_registry and not proj.metadata.get(args.job_id):
+                    print(f"unknown job {args.job_id}", file=sys.stderr)
+                    return 1
+                log = ""
+            sys.stdout.write(log)
+        elif in_registry:
+            h = JobHandle(job, eng)
+            state = h.wait(args.timeout) if args.cmd == "wait" \
+                else h.status()
+            print(state.value)
+        else:
+            # past invocation: the registry is per-process, read metadata
+            doc = proj.metadata.get(args.job_id)
+            if not doc:
+                print(f"unknown job {args.job_id}", file=sys.stderr)
+                return 1
+            state = doc.get("state")
+            if state is None:
+                # registered but no terminal state persisted: submitted by
+                # an interrupted or still-running invocation
+                if args.cmd == "wait":
+                    print(f"{args.job_id} has no terminal state recorded "
+                          f"(owning process interrupted or still running)",
+                          file=sys.stderr)
+                    return 1
+                state = "SUBMITTED"
+            print(state)
     elif args.cmd == "jobs":
         from repro.core.engine.dashboard import job_history
         eng = plat.engine(args.token)

@@ -54,6 +54,31 @@ class ProvenanceGraph:
                                 creator=creator)
             self._save()
 
+    def add_dependency_edge(self, *, src_job: str, dst_job: str,
+                            pipeline: str = "",
+                            src_fileset: Optional[str] = None,
+                            dst_fileset: Optional[str] = None) -> None:
+        """Declared DAG edge from the pipeline SDK: recorded at submit
+        time, before either job runs, so lineage reflects the *declared*
+        dataflow (JobSpec.depends_on) and not just observed reads/writes.
+        Nodes are job ids (fileset-version nodes are added later by the
+        runner when outputs actually materialize)."""
+        with self._lock:
+            self.g.add_node(src_job)
+            self.g.add_node(dst_job)
+            self.g.add_edge(src_job, dst_job, action="pipeline_dep",
+                            pipeline=pipeline, src_fileset=src_fileset,
+                            dst_fileset=dst_fileset)
+            self._save()
+
+    def dependency_edges(self, pipeline: Optional[str] = None) \
+            -> list[tuple[str, str, dict]]:
+        """All declared DAG edges, optionally filtered by pipeline name."""
+        with self._lock:
+            return [(u, v, d) for u, v, d in self.g.edges(data=True)
+                    if d.get("action") == "pipeline_dep"
+                    and (pipeline is None or d.get("pipeline") == pipeline)]
+
     def add_creation_edge(self, *, src: str, dst: str,
                           creator: str = "") -> None:
         with self._lock:

@@ -42,6 +42,10 @@ from repro.core.engine.registry import Job, JobRegistry
 
 
 class Runner:
+    # True when jobs complete on worker threads (terminal events arrive
+    # asynchronously); JobHandle.wait blocks on the bus instead of stepping
+    threaded = False
+
     def launch(self, job: Job) -> None:
         raise NotImplementedError
 
@@ -73,7 +77,16 @@ class LocalRunner(Runner):
 
     def launch(self, job: Job) -> None:
         bus, reg = self.bus, self.registry
-        reg.set_state(job.job_id, JobState.RUNNING)
+        try:
+            reg.set_state(job.job_id, JobState.RUNNING)
+        except IllegalTransition:
+            # killed between dispatch and worker pickup: publish the
+            # terminal status so waiters and dependents still observe it
+            reg.persist_state(job.job_id)
+            bus.publish(TOPIC_CONTAINER_STATUS,
+                        {"job_id": job.job_id,
+                         "status": reg.get(job.job_id).state.value})
+            return
         bus.publish(TOPIC_CONTAINER_STATUS,
                     {"job_id": job.job_id, "status": "provisioned"})
         workdir = self.workroot / job.job_id
@@ -153,6 +166,12 @@ class LocalRunner(Runner):
                 self.datalake.metadata.put(job.job_id, **meta)
             self.datalake.metadata.put(job.job_id, runtime=job.runtime,
                                        cost=job.cost, state=state.value)
+            # log text goes to the lake, not the metadata store: metadata
+            # values are bisect-indexed and rewritten wholesale on every
+            # put, so logs there would grow completion cost quadratically
+            self.datalake.storage.upload(f"/.logs/{job.job_id}.log",
+                                         log_text.encode(),
+                                         creator=job.spec.user)
         job.outputs["log"] = log_text
         self.bus.publish(TOPIC_CONTAINER_STATUS,
                          {"job_id": job.job_id, "status": state.value})
@@ -195,6 +214,8 @@ class ThreadPoolRunner(LocalRunner):
     upload -> publish), executed on a bounded pool of worker threads so the
     scheduler can keep the cluster full. ``pending``/``step`` mirror the
     virtual runner so ``run_to_completion`` drains either transparently."""
+
+    threaded = True
 
     def __init__(self, registry: JobRegistry, bus: EventBus, *,
                  datalake=None, workroot: str = "/tmp/acai-jobs",

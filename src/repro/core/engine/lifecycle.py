@@ -1,8 +1,12 @@
-"""Job life-cycle state machine (ACAI Fig. 3).
+"""Job life-cycle state machine (ACAI Fig. 3, extended with dataflow).
 
 SUBMITTED -> QUEUED -> LAUNCHING -> RUNNING -> {FINISHED, FAILED}
-KILLED is reachable from any non-terminal state. The (input fileset, job,
-output fileset) triplet is immutable: a job can be submitted/scheduled once.
+KILLED is reachable from any non-terminal state. UPSTREAM_FAILED is the
+terminal outcome of a job that never launched because a declared
+dependency (``JobSpec.depends_on``) ended FAILED/KILLED/UPSTREAM_FAILED —
+only jobs that have not yet launched can cascade, so it is reachable from
+SUBMITTED and QUEUED alone. The (input fileset, job, output fileset)
+triplet is immutable: a job can be submitted/scheduled once.
 """
 from __future__ import annotations
 
@@ -17,20 +21,28 @@ class JobState(str, enum.Enum):
     FINISHED = "FINISHED"
     FAILED = "FAILED"
     KILLED = "KILLED"
+    UPSTREAM_FAILED = "UPSTREAM_FAILED"
 
 
 _TRANSITIONS = {
-    JobState.SUBMITTED: {JobState.QUEUED, JobState.KILLED},
-    JobState.QUEUED: {JobState.LAUNCHING, JobState.KILLED},
+    JobState.SUBMITTED: {JobState.QUEUED, JobState.KILLED,
+                         JobState.UPSTREAM_FAILED},
+    JobState.QUEUED: {JobState.LAUNCHING, JobState.KILLED,
+                      JobState.UPSTREAM_FAILED},
     JobState.LAUNCHING: {JobState.RUNNING, JobState.FAILED, JobState.KILLED},
     JobState.RUNNING: {JobState.FINISHED, JobState.FAILED, JobState.KILLED},
     JobState.FINISHED: set(),
     JobState.FAILED: set(),
     JobState.KILLED: set(),
+    JobState.UPSTREAM_FAILED: set(),
 }
 
 ACTIVE_STATES = {JobState.LAUNCHING, JobState.RUNNING}
-TERMINAL_STATES = {JobState.FINISHED, JobState.FAILED, JobState.KILLED}
+TERMINAL_STATES = {JobState.FINISHED, JobState.FAILED, JobState.KILLED,
+                   JobState.UPSTREAM_FAILED}
+# hoisted for event-path dispatch: publishers put the state *value* on the
+# bus, and handlers must not rebuild this set per event
+TERMINAL_STATUS_VALUES = frozenset(s.value for s in TERMINAL_STATES)
 
 
 class IllegalTransition(RuntimeError):

@@ -5,10 +5,14 @@ also records cluster-utilization snapshots (``scheduler_metrics`` topic),
 so queue pressure and capacity holes are observable over (virtual) time."""
 from __future__ import annotations
 
+import threading
 from collections import defaultdict
+from typing import Optional
 
 from repro.core.engine.events import (EventBus, TOPIC_CONTAINER_STATUS,
                                       TOPIC_JOB_PROGRESS, TOPIC_SCHEDULER)
+from repro.core.engine.lifecycle import TERMINAL_STATUS_VALUES as \
+    _TERMINAL_STATUS
 
 
 class JobMonitor:
@@ -23,6 +27,9 @@ class JobMonitor:
         self._peak: dict[str, float] = {}
         self._util_sum: dict[str, float] = defaultdict(float)
         self._util_n = 0
+        # JobHandle.wait blocks on this instead of polling: any terminal
+        # container_status wakes every waiter, each re-checks its own job
+        self._terminal_cv = threading.Condition()
         bus.subscribe(TOPIC_CONTAINER_STATUS, self._on_status)
         bus.subscribe(TOPIC_JOB_PROGRESS, self._on_progress)
         bus.subscribe(TOPIC_SCHEDULER, self._on_scheduler)
@@ -30,6 +37,21 @@ class JobMonitor:
     def _on_status(self, msg: dict) -> None:
         self.status[msg["job_id"]] = msg.get("status", "")
         self.events[msg["job_id"]].append(msg)
+        if msg.get("status", "") in _TERMINAL_STATUS:
+            with self._terminal_cv:
+                self._terminal_cv.notify_all()
+
+    def is_terminal(self, job_id: str) -> bool:
+        return self.status.get(job_id, "") in _TERMINAL_STATUS
+
+    def wait_terminal(self, job_id: str,
+                      timeout: Optional[float] = None) -> bool:
+        """Block until ``job_id`` publishes a terminal container_status
+        (True) or the timeout elapses (False). Event-driven: used by
+        JobHandle.wait for runners that complete on worker threads."""
+        with self._terminal_cv:
+            return self._terminal_cv.wait_for(
+                lambda: self.is_terminal(job_id), timeout)
 
     def _on_progress(self, msg: dict) -> None:
         self.stage[msg["job_id"]] = msg.get("stage", "")

@@ -2,11 +2,13 @@
 from __future__ import annotations
 
 import dataclasses
+import re
 import threading
 import time
 from typing import Any, Callable, Optional
 
-from repro.core.engine.lifecycle import JobState, check_transition
+from repro.core.engine.lifecycle import (TERMINAL_STATES, JobState,
+                                         check_transition)
 
 
 @dataclasses.dataclass
@@ -27,6 +29,10 @@ class JobSpec:
     duration: Optional[float] = None
     # scheduling priority (added to the queue's priority; higher first)
     priority: int = 0
+    # declared dataflow: job ids that must FINISH before this job launches.
+    # The scheduler holds the job until every parent is FINISHED and
+    # cascades UPSTREAM_FAILED if any parent ends FAILED/KILLED.
+    depends_on: list[str] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -53,6 +59,14 @@ class JobRegistry:
         self._ctr = 0
         self.metadata = metadata
         self._lock = threading.RLock()
+        if metadata is not None:
+            # resume the id counter past persisted jobs so a restarted
+            # engine (e.g. a new CLI invocation over the same root) never
+            # reuses an earlier job's id and overwrites its metadata
+            for aid in metadata.find(kind="job"):
+                m = re.fullmatch(r"job-(\d+)", aid)
+                if m:
+                    self._ctr = max(self._ctr, int(m.group(1)))
 
     def submit(self, spec: JobSpec) -> Job:
         with self._lock:
@@ -66,10 +80,12 @@ class JobRegistry:
         return job
 
     def get(self, job_id: str) -> Job:
-        return self._jobs[job_id]
+        with self._lock:
+            return self._jobs[job_id]
 
     def all_jobs(self) -> list[Job]:
-        return list(self._jobs.values())
+        with self._lock:
+            return list(self._jobs.values())
 
     def set_state(self, job_id: str, new: JobState,
                   error: Optional[str] = None) -> Job:
@@ -79,7 +95,16 @@ class JobRegistry:
             job.state = new
             if new == JobState.RUNNING:
                 job.started_at = time.time()
-            if new in (JobState.FINISHED, JobState.FAILED, JobState.KILLED):
+            if new in TERMINAL_STATES:
                 job.finished_at = time.time()
                 job.error = error
             return job
+
+    def persist_state(self, job_id: str) -> None:
+        """Persist the job's state to the metadata store. The runner's
+        finalize does this for jobs it completes; the scheduler calls it
+        for terminals that never reach a runner (UPSTREAM_FAILED, queued
+        kills, infeasible submits), so cross-process status readers see
+        every outcome."""
+        if self.metadata is not None:
+            self.metadata.put(job_id, state=self.get(job_id).state.value)

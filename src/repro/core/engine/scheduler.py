@@ -20,6 +20,18 @@ into the capacity that remains spare after the blocked job starts. With
 ``policy="fifo"`` the scheduler degrades to a strict global-submission-order
 convoy (the benchmark baseline).
 
+Dependency gating (the pipeline SDK's dataflow layer): a job whose
+``spec.depends_on`` names unfinished parents is *held* — QUEUED in the
+registry but absent from every dispatch queue, so it never enters the
+candidate scan, the quota count, or the backfill shadow-time math. Parent
+terminal events release it (all parents FINISHED -> enqueued) or cascade
+it (any parent FAILED/KILLED -> terminal UPSTREAM_FAILED, published on the
+bus so the cascade propagates transitively and handles/monitors wake).
+
+Fair-share usage optionally decays with a configurable half-life
+(``usage_halflife``, in runner-clock seconds) so past consumption stops
+penalizing a queue forever.
+
 Dispatch is iterative and non-reentrant: runners that publish a terminal
 ``container_status`` synchronously from inside ``launch`` (instant local
 jobs) re-enter the scheduler through the bus; a guard flag folds those
@@ -40,7 +52,8 @@ from typing import Optional
 from repro.core.engine.cluster import Cluster
 from repro.core.engine.events import (EventBus, TOPIC_CONTAINER_STATUS,
                                       TOPIC_SCHEDULER)
-from repro.core.engine.lifecycle import TERMINAL_STATES, JobState
+from repro.core.engine.lifecycle import (TERMINAL_STATES,
+                                         TERMINAL_STATUS_VALUES, JobState)
 from repro.core.engine.registry import Job, JobRegistry
 
 
@@ -56,7 +69,8 @@ class Scheduler:
     def __init__(self, registry: JobRegistry, launcher, bus: EventBus,
                  quota_k: int = 2, *, cluster: Optional[Cluster] = None,
                  policy: str = "fair", backfill: bool = True,
-                 backfill_depth: int = 100):
+                 backfill_depth: int = 100,
+                 usage_halflife: Optional[float] = None):
         if policy not in ("fair", "fifo"):
             raise ValueError(f"unknown policy {policy!r}")
         self.registry = registry
@@ -67,10 +81,16 @@ class Scheduler:
         self.policy = policy
         self.backfill = backfill and policy == "fair"
         self.backfill_depth = backfill_depth
+        self.usage_halflife = usage_halflife
         self._queues: dict[tuple, deque[str]] = defaultdict(deque)
         self._active: dict[tuple, set[str]] = defaultdict(set)
         self._qconf: dict[tuple, QueueConfig] = defaultdict(QueueConfig)
         self._usage: dict[tuple, float] = defaultdict(float)
+        self._usage_t: dict[tuple, float] = {}
+        # dependency gating: held job -> unmet parent ids, and the reverse
+        # index parent -> held children released/cascaded on its terminal
+        self._held: dict[str, set[str]] = {}
+        self._dependents: dict[str, set[str]] = defaultdict(set)
         self._seq_of: dict[str, int] = {}
         self._seq = 0
         # dispatch-scan caches: priority and capacity charge per queued job,
@@ -104,24 +124,53 @@ class Scheduler:
     # ------------------------------------------------------------------
     def submit(self, job: Job) -> None:
         with self._lock:
+            # resolve (and validate) dependencies before any state change:
+            # an unknown parent id must not leave a zombie QUEUED job
+            unmet, failed_parent = self._resolve_deps(job)
             self.registry.set_state(job.job_id, JobState.QUEUED)
             self._seq += 1
             self._seq_of[job.job_id] = self._seq
             self._prio_of[job.job_id] = job.spec.priority
             self._queued_at[job.job_id] = self._now()
-            self._queues[job.queue_key].append(job.job_id)
+            if failed_parent is not None:
+                self._upstream_fail(job.job_id, failed_parent)
+                return
             if self.cluster is not None:
                 charge = self.cluster.charge(job.spec.resources)
                 if any(amt > self.cluster.capacity[n] + 1e-9
                        for n, amt in charge.items()):
                     # can never fit even on an empty cluster: fail fast
-                    self._fail_infeasible(job.queue_key, job)
+                    self._fail_infeasible(job)
                     return
                 self._charge_of[job.job_id] = charge
                 for n, amt in charge.items():
                     self._min_charge[n] = min(
                         self._min_charge.get(n, amt), amt)
+            if unmet:
+                # held: not in any queue, so invisible to the candidate
+                # scan, the quota count and the backfill shadow-time math
+                self._held[job.job_id] = unmet
+                for pid in unmet:
+                    self._dependents[pid].add(job.job_id)
+            else:
+                self._queues[job.queue_key].append(job.job_id)
             self._dispatch()
+
+    def _resolve_deps(self, job: Job) -> tuple[set[str], Optional[str]]:
+        """(unmet parent ids, first already-failed parent or None)."""
+        unmet: set[str] = set()
+        for pid in dict.fromkeys(job.spec.depends_on or ()):
+            try:
+                parent = self.registry.get(pid)
+            except KeyError:
+                raise ValueError(
+                    f"{job.job_id} depends on unknown job {pid!r}") from None
+            if parent.state == JobState.FINISHED:
+                continue
+            if parent.state in TERMINAL_STATES:
+                return set(), pid
+            unmet.add(pid)
+        return unmet, None
 
     def kill(self, job_id: str) -> None:
         with self._lock:
@@ -129,12 +178,69 @@ class Scheduler:
             if job.state in TERMINAL_STATES:
                 return
             key = job.queue_key
+            launched = job_id in self._started_at
             if job_id in self._queues[key]:
                 self._queues[key].remove(job_id)
+            self._unhold(job_id)
             self._active[key].discard(job_id)
             self.registry.set_state(job_id, JobState.KILLED)
-            self._settle(job_id, key)
-            self._dispatch()
+            if launched:
+                # the runner publishes the terminal event when the job
+                # actually stops (virtual-clock pop / worker finalize);
+                # settle capacity now so the slot frees immediately
+                self._settle(job_id, key)
+                self._dispatch()
+            else:
+                # never reached the runner: publish the terminal event
+                # ourselves so handles, monitors and held dependents
+                # observe the kill (the handler settles + dispatches)
+                self.registry.persist_state(job_id)
+                self.bus.publish(TOPIC_CONTAINER_STATUS,
+                                 {"job_id": job_id, "status": "KILLED"})
+
+    def _unhold(self, job_id: str) -> None:
+        """Drop a held job's gating state: O(its parents), using the unmet
+        set as the exact index into _dependents."""
+        unmet = self._held.pop(job_id, None)
+        for pid in unmet or ():
+            deps = self._dependents.get(pid)
+            if deps is not None:
+                deps.discard(job_id)
+
+    def _upstream_fail(self, job_id: str, parent_id: str) -> None:
+        """Cascade-cancel a never-launched job whose parent did not
+        finish; the published event propagates the cascade transitively."""
+        self.registry.set_state(
+            job_id, JobState.UPSTREAM_FAILED,
+            error=f"upstream job {parent_id} did not finish")
+        self.registry.persist_state(job_id)
+        self.bus.publish(TOPIC_CONTAINER_STATUS,
+                         {"job_id": job_id, "status": "UPSTREAM_FAILED",
+                          "upstream": parent_id})
+
+    def _release_dependents(self, parent_id: str, status: str) -> None:
+        """On a parent's terminal event: enqueue held children whose last
+        parent FINISHED, cascade UPSTREAM_FAILED children otherwise."""
+        children = self._dependents.pop(parent_id, None)
+        if not children:
+            return
+        for cid in sorted(children):
+            unmet = self._held.get(cid)
+            if unmet is None:
+                continue
+            if status == JobState.FINISHED.value:
+                unmet.discard(parent_id)
+                if not unmet:
+                    del self._held[cid]
+                    child = self.registry.get(cid)
+                    # queue wait starts at eligibility, not submit: the
+                    # parent-hold time is dataflow latency, not queueing
+                    self._queued_at[cid] = self._now()
+                    self._queues[child.queue_key].append(cid)
+            else:
+                unmet.discard(parent_id)
+                self._unhold(cid)
+                self._upstream_fail(cid, parent_id)
 
     # -- dispatch (non-reentrant) ---------------------------------------
     def _maybe_launch(self, key: Optional[tuple] = None) -> None:
@@ -171,7 +277,7 @@ class Scheduler:
                         + (self.backfill_depth if self.backfill else 0))
             slice_ = list(q)[:depth]
             conf = self._qconf[key]
-            share = self._usage[key] / conf.weight
+            share = self._decayed_usage(key) / conf.weight
             for jid in slice_:
                 prio = conf.priority + self._prio_of.get(jid, 0)
                 out.append((key, jid, prio, share))
@@ -249,12 +355,12 @@ class Scheduler:
         self.registry.set_state(job.job_id, JobState.LAUNCHING)
         self.launcher.launch(job)
 
-    def _fail_infeasible(self, key: tuple, job: Job) -> None:
-        self._queues[key].remove(job.job_id)
+    def _fail_infeasible(self, job: Job) -> None:
         err = (f"resources {job.spec.resources} exceed cluster capacity "
                f"{self.cluster.capacity}")
         self.registry.set_state(job.job_id, JobState.LAUNCHING)
         self.registry.set_state(job.job_id, JobState.FAILED, error=err)
+        self.registry.persist_state(job.job_id)
         self.bus.publish(TOPIC_CONTAINER_STATUS,
                          {"job_id": job.job_id, "status": "FAILED"})
 
@@ -302,13 +408,14 @@ class Scheduler:
     # -- terminal events -------------------------------------------------
     def _on_container_status(self, msg: dict) -> None:
         status = msg.get("status", "")
-        if status not in {s.value for s in TERMINAL_STATES}:
+        if status not in TERMINAL_STATUS_VALUES:
             return
         with self._lock:
             job_id = msg["job_id"]
             job = self.registry.get(job_id)
             key = job.queue_key
             self._active[key].discard(job_id)
+            self._release_dependents(job_id, status)
             self._settle(job_id, key)
             self._dispatch()
 
@@ -334,8 +441,26 @@ class Scheduler:
             runtime = max(0.0, self._now() - started_at)
         share = self.cluster.dominant_share(released or job.spec.resources) \
             if self.cluster is not None else 1.0
-        self._usage[key] += (share if share > 0 else 1.0) * runtime
+        self._charge_usage(key, (share if share > 0 else 1.0) * runtime)
         self.stats["completed"] += 1
+
+    # -- fair-share usage with half-life decay ---------------------------
+    def _decayed_usage(self, key: tuple,
+                       now: Optional[float] = None) -> float:
+        """Accumulated usage decayed since its last update; without a
+        half-life this is plain accumulation (the pre-decay behaviour)."""
+        usage = self._usage[key]
+        if self.usage_halflife and usage:
+            now = self._now() if now is None else now
+            dt = now - self._usage_t.get(key, now)
+            if dt > 0:
+                usage *= 0.5 ** (dt / self.usage_halflife)
+        return usage
+
+    def _charge_usage(self, key: tuple, amount: float) -> None:
+        now = self._now()
+        self._usage[key] = self._decayed_usage(key, now) + amount
+        self._usage_t[key] = now
 
     def _publish_snapshot(self) -> None:
         if self.cluster is None:
@@ -344,6 +469,7 @@ class Scheduler:
             "now": self._now(),
             "utilization": self.cluster.utilization(),
             "queued": sum(len(q) for q in self._queues.values()),
+            "held": len(self._held),
             "active": sum(len(a) for a in self._active.values()),
         })
 
@@ -355,6 +481,11 @@ class Scheduler:
     def active_count(self, project: str, user: str) -> int:
         with self._lock:
             return len(self._active[(project, user)])
+
+    def held_count(self) -> int:
+        """Jobs held out of dispatch on unmet declared dependencies."""
+        with self._lock:
+            return len(self._held)
 
     def utilization(self) -> dict[str, float]:
         return self.cluster.utilization() if self.cluster is not None else {}

@@ -1,0 +1,330 @@
+"""Futures/Pipeline SDK: JobHandle resolution, DAG dependency gating,
+cancel, upstream-failure cascade, fan-out sweeps, fair-share decay."""
+import threading
+
+import pytest
+
+from repro.core.acai import AcaiPlatform
+from repro.core.engine.handle import (JobFailedError, UpstreamFailedError,
+                                      wait_all)
+from repro.core.engine.lifecycle import JobState
+from repro.core.engine.registry import JobSpec
+
+
+def _spec(name, **kw):
+    kw.setdefault("resources", {"vcpu": 1, "mem_mb": 256})
+    return JobSpec(name=name, project="", user="", **kw)
+
+
+@pytest.fixture
+def thread_plat(tmp_path):
+    plat = AcaiPlatform(tmp_path, runner="thread", max_workers=4,
+                        quota_k=100)
+    admin = plat.create_project(plat.admin_token, "proj")
+    return plat, admin
+
+
+@pytest.fixture
+def virtual_plat(tmp_path):
+    plat = AcaiPlatform(tmp_path, virtual=True, quota_k=100)
+    admin = plat.create_project(plat.admin_token, "proj")
+    return plat, admin
+
+
+# -- diamond dependency ordering ----------------------------------------
+
+def test_diamond_order_thread(thread_plat):
+    """A -> {B, C} -> D on real worker threads: every parent finishes
+    before its child starts, and all handles resolve FINISHED."""
+    plat, admin = thread_plat
+    order, lock = [], threading.Lock()
+
+    def step(label):
+        def fn(workdir, job):
+            with lock:
+                order.append(label)
+        return fn
+
+    pipe = plat.pipeline(admin, name="diamond")
+    a = pipe.stage(_spec("A", fn=step("A")))
+    b = pipe.stage(_spec("B", fn=step("B")), after=a)
+    c = pipe.stage(_spec("C", fn=step("C")), after=a)
+    d = pipe.stage(_spec("D", fn=step("D")), after=[b, c])
+    handles = pipe.run()
+    assert pipe.wait(timeout=60) == [JobState.FINISHED] * 4
+    assert order.index("A") < min(order.index("B"), order.index("C"))
+    assert order.index("D") > max(order.index("B"), order.index("C"))
+    assert [h.job_id for h in handles] == \
+        [s.job_id for s in (a, b, c, d)]
+
+
+def test_diamond_virtual_clock(virtual_plat):
+    """Gating on the virtual clock: D launches only at max(end B, end C)."""
+    plat, admin = virtual_plat
+    eng = plat.engine(admin)
+    a = plat.submit_job(admin, _spec("A", duration=1.0))
+    b = plat.submit_job(admin, _spec("B", duration=1.0,
+                                     depends_on=[a.job_id]))
+    c = plat.submit_job(admin, _spec("C", duration=2.0,
+                                     depends_on=[a.job_id]))
+    d = plat.submit_job(admin, _spec("D", duration=1.0,
+                                     depends_on=[b.job_id, c.job_id]))
+    # only A launched; B, C, D are held out of every dispatch queue
+    assert a.status() == JobState.RUNNING
+    assert {b.status(), c.status(), d.status()} == {JobState.QUEUED}
+    assert eng.scheduler.held_count() == 3
+    assert wait_all([a, b, c, d], timeout=30) == [JobState.FINISHED] * 4
+    # A ends t=1; B ends 2, C ends 3; D starts at 3, ends 4
+    assert eng.launcher.now == pytest.approx(4.0)
+    assert eng.scheduler.held_count() == 0
+
+
+def test_fileset_edges_inferred(virtual_plat):
+    """input_fileset == another stage's output_fileset => implicit edge."""
+    plat, admin = virtual_plat
+    pipe = plat.pipeline(admin, name="etl")
+    pipe.stage(_spec("etl", duration=5.0, output_fileset="Clean"))
+    train = pipe.stage(_spec("train", duration=1.0, input_fileset="Clean",
+                             output_fileset="Model"))
+    pipe.run()
+    # no explicit after=, yet train is gated on etl
+    assert train.handle.status() == JobState.QUEUED
+    assert plat.engine(admin).scheduler.held_count() == 1
+    assert pipe.wait(timeout=30) == [JobState.FINISHED] * 2
+    assert plat.engine(admin).launcher.now == pytest.approx(6.0)
+
+
+def test_pipeline_cycle_rejected(virtual_plat):
+    plat, admin = virtual_plat
+    pipe = plat.pipeline(admin)
+    # a consumes what b produces and vice versa: no valid topo order
+    pipe.stage(_spec("a", duration=1.0, input_fileset="X",
+                     output_fileset="Y"))
+    pipe.stage(_spec("b", duration=1.0, input_fileset="Y",
+                     output_fileset="X"))
+    with pytest.raises(ValueError, match="cycle"):
+        pipe.run()
+
+
+# -- cancel ---------------------------------------------------------------
+
+def test_cancel_queued_handle(tmp_path):
+    plat = AcaiPlatform(tmp_path, virtual=True, quota_k=1)
+    admin = plat.create_project(plat.admin_token, "proj")
+    eng = plat.engine(admin)
+    running = plat.submit_job(admin, _spec("long", duration=100.0))
+    queued = plat.submit_job(admin, _spec("victim", duration=1.0))
+    assert queued.status() == JobState.QUEUED
+    assert queued.cancel() == JobState.KILLED
+    # the kill published a terminal event: monitor + waiters observe it
+    assert eng.monitor.status[queued.job_id] == "KILLED"
+    assert queued.wait(timeout=5) == JobState.KILLED
+    assert running.wait(timeout=30) == JobState.FINISHED
+
+
+def test_cancel_held_handle_cascades(virtual_plat):
+    """Cancelling a held job upstream-fails everything declared below."""
+    plat, admin = virtual_plat
+    a = plat.submit_job(admin, _spec("a", duration=50.0))
+    b = plat.submit_job(admin, _spec("b", duration=1.0,
+                                     depends_on=[a.job_id]))
+    c = plat.submit_job(admin, _spec("c", duration=1.0,
+                                     depends_on=[b.job_id]))
+    b.cancel()
+    assert b.status() == JobState.KILLED
+    assert c.status() == JobState.UPSTREAM_FAILED
+    with pytest.raises(UpstreamFailedError):
+        c.result()
+    assert a.wait(timeout=30) == JobState.FINISHED
+
+
+# -- upstream-failure cascade ---------------------------------------------
+
+def test_upstream_failure_cascade_thread(thread_plat):
+    plat, admin = thread_plat
+
+    def boom(workdir, job):
+        raise RuntimeError("etl exploded")
+
+    def never(workdir, job):  # pragma: no cover - must not run
+        raise AssertionError("dependent of a failed job must not run")
+
+    pipe = plat.pipeline(admin, name="cascade")
+    etl = pipe.stage(_spec("etl", fn=boom))
+    trains = pipe.map(lambda p: _spec(f"train-{p['i']}", fn=never),
+                      [{"i": 0}, {"i": 1}], after=etl)
+    report = pipe.stage(_spec("report", fn=never), after=trains)
+    pipe.run()
+    states = [h.wait(timeout=60) for h in pipe.handles]
+    assert states == [JobState.FAILED] + [JobState.UPSTREAM_FAILED] * 3
+    with pytest.raises(JobFailedError):
+        etl.handle.result()
+    with pytest.raises(UpstreamFailedError) as ei:
+        report.handle.result()
+    assert "did not finish" in str(ei.value)
+
+
+def test_upstream_fail_already_terminal_parent(thread_plat):
+    """Submitting after the parent already failed cascades immediately."""
+    plat, admin = thread_plat
+
+    def boom(workdir, job):
+        raise RuntimeError("nope")
+
+    parent = plat.submit_job(admin, _spec("p", fn=boom))
+    assert parent.wait(timeout=30) == JobState.FAILED
+    child = plat.submit_job(admin, _spec("c", fn=lambda w, j: None,
+                                         depends_on=[parent.job_id]))
+    assert child.status() == JobState.UPSTREAM_FAILED
+    # a parent that FINISHED gates nothing
+    ok = plat.submit_job(admin, _spec("ok", fn=lambda w, j: {"x": 1}))
+    assert ok.wait(timeout=30) == JobState.FINISHED
+    dep = plat.submit_job(admin, _spec("dep", fn=lambda w, j: None,
+                                       depends_on=[ok.job_id]))
+    assert dep.wait(timeout=30) == JobState.FINISHED
+
+
+def test_unknown_dependency_rejected(virtual_plat):
+    plat, admin = virtual_plat
+    with pytest.raises(ValueError, match="unknown job"):
+        plat.submit_job(admin, _spec("x", duration=1.0,
+                                     depends_on=["job-999"]))
+
+
+# -- Pipeline.map sweep + metadata + provenance ---------------------------
+
+def test_map_sweep_metadata_and_provenance(thread_plat):
+    """ETL -> map sweep -> report, zero manual sequencing: accuracies are
+    queryable, the report sees every model, and provenance has one
+    declared edge per DAG edge."""
+    plat, admin = thread_plat
+    proj = plat.project(admin)
+    proj.upload("/raw/data.txt", b"3 1 4 1 5", creator="admin")
+    proj.create_file_set("Raw", ["/raw/data.txt"], creator="admin")
+
+    def etl(workdir, job):
+        vals = (workdir / "raw/data.txt").read_text().split()
+        (workdir / "out/clean.txt").write_text(" ".join(sorted(vals)))
+
+    def train(workdir, job):
+        lr = job.spec.args["lr"]
+        n = len((workdir / "Clean/clean.txt").read_text().split())
+        print(f"[[acai:accuracy={lr * n},lr={lr}]]")
+
+    def report(workdir, job):
+        best = proj.metadata.find_max("accuracy", kind="job")
+        (workdir / "out/best.txt").write_text(str(best))
+
+    pipe = plat.pipeline(admin, name="sweep")
+    pipe.stage(_spec("etl", fn=etl, input_fileset="Raw",
+                     output_fileset="Clean"))
+    trains = pipe.map(
+        lambda p: _spec(f"train-lr{p['lr']}", fn=train, args=dict(p),
+                        input_fileset="Clean",
+                        output_fileset=f"model-{p['lr']}"),
+        {"lr": [0.1, 0.2, 0.4]})
+    pipe.stage(_spec("report", fn=report, output_fileset="Report"),
+               after=trains)
+    handles = pipe.run()
+    assert pipe.wait(timeout=120) == [JobState.FINISHED] * 5
+    # sweep metadata is queryable (log parser -> indexed metadata)
+    best = proj.metadata.find_max("accuracy", kind="job")
+    assert best == handles[3].job_id          # lr=0.4
+    assert proj.metadata.get(best)["accuracy"] == pytest.approx(2.0)
+    # one provenance edge per declared DAG edge: 3 etl->train + 3 ->report
+    edges = proj.provenance.dependency_edges(pipeline="sweep")
+    assert len(edges) == 6
+    etl_id = handles[0].job_id
+    assert sorted(v for u, v, _ in edges if u == etl_id) == \
+        sorted(h.job_id for h in handles[1:4])
+    # the declared edges carry the dataflow filesets
+    assert {d["src_fileset"] for _, v, d in edges if v != handles[4].job_id} \
+        == {"Clean"}
+
+
+def test_map_grid_forms(virtual_plat):
+    plat, admin = virtual_plat
+    pipe = plat.pipeline(admin)
+    product = pipe.map(lambda p: _spec(f"a-{p['x']}-{p['y']}", duration=1.0),
+                      {"x": [1, 2], "y": [3, 4]})
+    explicit = pipe.map(lambda p: _spec(f"b-{p['x']}", duration=1.0),
+                        [{"x": 9}])
+    assert len(product) == 4 and len(explicit) == 1
+    assert pipe.run() and pipe.wait(timeout=30) == [JobState.FINISHED] * 5
+
+
+# -- run_all deprecation shim ---------------------------------------------
+
+def test_run_all_deprecated(virtual_plat):
+    plat, admin = virtual_plat
+    h = plat.submit_job(admin, _spec("j", duration=1.0))
+    eng = plat.engine(admin)
+    with pytest.deprecated_call():
+        eng.run_all()
+    assert h.status() == JobState.FINISHED
+
+
+# -- fair-share usage decay ------------------------------------------------
+
+def test_usage_halflife_decay(tmp_path):
+    plat = AcaiPlatform(tmp_path, virtual=True, quota_k=100,
+                        usage_halflife=10.0)
+    admin = plat.create_project(plat.admin_token, "proj")
+    eng = plat.engine(admin)
+    sched = eng.scheduler
+    h = plat.submit_job(admin, _spec("burn", duration=40.0))
+    assert h.wait(timeout=30) == JobState.FINISHED
+    key = ("proj", "proj-admin")
+    charged = sched._usage[key]
+    assert charged > 0
+    # two half-lives later the charge has decayed to a quarter
+    eng.launcher.now += 20.0
+    assert sched._decayed_usage(key) == pytest.approx(charged / 4)
+    # without a half-life, usage accumulates forever (seed behaviour)
+    sched.usage_halflife = None
+    assert sched._decayed_usage(key) == pytest.approx(charged)
+
+
+def test_usage_decay_restores_priority(tmp_path):
+    """After a long idle period, a queue's past burn no longer outranks a
+    fresh competitor: both queues launch on fair-share order again."""
+    plat = AcaiPlatform(tmp_path, virtual=True, quota_k=1,
+                        cluster_nodes=1, usage_halflife=5.0)
+    admin = plat.create_project(plat.admin_token, "proj")
+    alice = plat.create_user(admin, "proj", "alice")
+    eng = plat.engine(admin)
+    # alice burns a lot of capacity early
+    for _ in range(3):
+        plat.submit_job(alice, _spec("a", duration=100.0))
+    eng.wait_all()
+    assert eng.scheduler._decayed_usage(("proj", "alice")) > 0
+    # long idle gap: alice's usage decays below any fresh admin burn
+    eng.launcher.now += 10_000.0
+    a = plat.submit_job(alice, _spec("late-a", duration=1.0))
+    assert eng.scheduler._decayed_usage(("proj", "alice")) < 1e-9
+    assert a.wait(timeout=30) == JobState.FINISHED
+
+
+# -- registry lock (satellite bugfix) -------------------------------------
+
+def test_registry_reads_locked(thread_plat):
+    """get()/all_jobs() under concurrent submit: no lost reads/races."""
+    plat, admin = thread_plat
+    eng = plat.engine(admin)
+    errors = []
+
+    def reader():
+        try:
+            for _ in range(200):
+                for j in eng.registry.all_jobs():
+                    eng.registry.get(j.job_id)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    t = threading.Thread(target=reader)
+    t.start()
+    handles = [plat.submit_job(admin, _spec(f"j{i}", fn=lambda w, j: None))
+               for i in range(30)]
+    t.join()
+    assert not errors
+    assert wait_all(handles, timeout=120) == [JobState.FINISHED] * 30
