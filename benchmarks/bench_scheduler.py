@@ -1,22 +1,36 @@
-"""Scheduler benchmark — throughput, queue wait and makespan of a mixed
-5k-job fleet on finite cluster capacity, FIFO vs fair-share + EASY
-backfill.
+"""Scheduler benchmark — policies and placement on finite cluster capacity.
 
-The fleet mirrors the ACAI workload mix (§3.3, §4.2.2): a large majority
-of small, short profiling jobs (the auto-provisioner's exploration grids)
-sharing capacity with a minority of big, long training jobs. Under strict
-global FIFO a blocked 8-vCPU training job convoys everything behind it
-while capacity sits idle; fair-share + backfill slots profiling jobs into
-the holes. The virtual clock makes both runs deterministic, and an
-auditing cluster proves capacity is never oversubscribed on any dimension.
+Two scenarios, both on the deterministic virtual clock:
 
-Emits ``BENCH_scheduler.json`` so future PRs have a perf trajectory:
-  {policy: {makespan_s, mean_queue_wait_s, throughput_jobs_per_hour,
-            backfilled, oversubscribed, wall_s}}
+1. **Policy** (the PR-1 workload, now open-loop): a mixed fleet — a large
+   majority of small, short profiling jobs (the auto-provisioner's
+   exploration grids) sharing capacity with a minority of big, long
+   training jobs — arrives as a Poisson process (or a replayed trace via
+   ``--trace``) on a 16-vCPU cluster, FIFO vs fair-share + EASY backfill.
+   Reported per policy: makespan, mean queue wait, and bounded-slowdown
+   p50/p95/p99 (slowdown = (wait + runtime) / max(runtime, tau)) — tail
+   latency, not just means.
+
+2. **Heterogeneous pools** (this PR, the in-repo analog of the paper's
+   §4.2 auto-provisioning headline): the same mix on a CPU pool + a TPU
+   pool, where training jobs run ~5x faster on TPU slices (and cheaper
+   per job) while short profiling jobs pay a TPU startup tax. Three
+   placements over identical fleets: ``single`` (everything on a
+   price-equivalent CPU-only cluster — the pre-pools engine), ``random``
+   (both pools, uniform pool choice), and ``placed`` (profiler-fed
+   cost/speed scoring). Profiler-fed placement must beat both baselines
+   on makespan AND total cost; per-pool utilization is recorded.
+
+An auditing cluster proves capacity is never oversubscribed on any
+dimension of any pool. Emits ``BENCH_scheduler.json`` so future PRs have
+a perf trajectory. ``--smoke`` runs tiny fleets (CI regression gate)
+without touching the JSON.
 """
 from __future__ import annotations
 
+import argparse
 import json
+import math
 import time
 
 import numpy as np
@@ -25,13 +39,35 @@ from repro.core.engine.cluster import Cluster
 from repro.core.engine.events import EventBus
 from repro.core.engine.launcher import VirtualRunner
 from repro.core.engine.lifecycle import JobState
+from repro.core.engine.monitor import JobMonitor
+from repro.core.engine.placement import Placement
 from repro.core.engine.registry import JobRegistry, JobSpec
 from repro.core.engine.scheduler import Scheduler
-from repro.core.provision.pricing import CPU_PRICING
+from repro.core.provision.pricing import (CPU_PRICING, ChipScaledPricing,
+                                          ResourceDim)
+from repro.core.provision.profiler import CommandTemplate, Profiler
 
 N_JOBS = 5000
 N_USERS = 8
 NODES = 2               # 16 vCPU / 16 GB total — heavy contention
+ARRIVAL_RATE = 0.04     # Poisson arrivals per second (open-loop overload)
+SLOWDOWN_TAU = 10.0     # bounded-slowdown floor (short-job guard)
+
+# -- heterogeneous fleet ------------------------------------------------
+HETERO_JOBS = 3000
+CPU_NODES = 4           # 32 vCPU / 32 GB
+TPU_CHIPS = 64
+TPU_STARTUP = 60.0      # pod provisioning + compile tax per job, seconds
+TPU_SPEED = 6.0         # speedup of 8 TPU chips over the job's CPU shape
+
+# bench-local TPU slice pricing: small pod slices priced so a training
+# job's faster TPU run is also the cheaper one (the cost/speed frontier
+# the placement layer is supposed to find); profiling jobs still lose on
+# TPU because the startup tax dominates their runtime.
+TPU_BENCH_PRICING = ChipScaledPricing([
+    ResourceDim("chips", 8, TPU_CHIPS, 0.10, (8, 16, 32, 64)),
+    ResourceDim("hbm_gb", 2, 16, 0.005, (2, 4, 8, 16)),
+], family="tpu")
 
 
 class AuditingCluster(Cluster):
@@ -47,7 +83,26 @@ class AuditingCluster(Cluster):
             self.high_water[n] = max(self.high_water[n], self.used[n])
         return req
 
+    @property
+    def oversubscribed(self) -> bool:
+        return any(self.high_water[n] > self.capacity[n] + 1e-9
+                   for n in self.capacity)
 
+
+class RandomPlacement(Placement):
+    """Uniform pool choice among eligible pools — the dumb baseline."""
+
+    def __init__(self, pools, *, seed: int = 0, **kw):
+        super().__init__(pools, **kw)
+        self._rng = np.random.default_rng(seed)
+
+    def rank(self, spec, options, parent_pools=frozenset()):
+        names = sorted(options)
+        self._rng.shuffle(names)
+        return names
+
+
+# -- fleets -------------------------------------------------------------
 def make_fleet(seed: int = 0, n_jobs: int = N_JOBS) -> list[JobSpec]:
     rng = np.random.default_rng(seed)
     fleet = []
@@ -68,59 +123,288 @@ def make_fleet(seed: int = 0, n_jobs: int = N_JOBS) -> list[JobSpec]:
     return fleet
 
 
-def run_policy(fleet: list[JobSpec], policy: str, backfill: bool) -> dict:
+def make_hetero_fleet(seed: int = 0,
+                      n_jobs: int = HETERO_JOBS) -> list[JobSpec]:
+    """Pool-flexible mix: every job declares a CPU and a TPU shape;
+    ``args['work']`` is its runtime on the CPU shape (the oracle and the
+    profiler's ground truth)."""
+    rng = np.random.default_rng(seed)
+    fleet = []
+    for i in range(n_jobs):
+        user = f"u{int(rng.integers(N_USERS))}"
+        if rng.random() < 0.85:      # profiling job: startup tax dominates
+            work = float(rng.uniform(5.0, 60.0))
+            spec = JobSpec(
+                name=f"prof-{i}", project="bench", user=user,
+                template="work", args={"work": work},
+                pool_resources={
+                    "cpu": {"vcpu": float(rng.choice([0.5, 1.0, 2.0])),
+                            "mem_mb": float(rng.choice([512, 1024, 2048]))},
+                    "tpu": {"chips": 8.0, "hbm_gb": 2.0}})
+        else:                        # training job: TPU-friendly
+            work = float(rng.uniform(1200.0, 3600.0))
+            spec = JobSpec(
+                name=f"train-{i}", project="bench", user=user,
+                template="work", args={"work": work},
+                pool_resources={
+                    "cpu": {"vcpu": 8.0, "mem_mb": 8192.0},
+                    "tpu": {"chips": float(rng.choice([8, 16])),
+                            "hbm_gb": 4.0}})
+        fleet.append(spec)
+    return fleet
+
+
+def hetero_oracle(job) -> float:
+    """Ground-truth runtime: CPU runs at the declared work; a TPU slice
+    amortizes a startup tax against a chip-scaled speedup."""
+    work = job.spec.args["work"]
+    if job.pool == "tpu":
+        chips = float(job.spec.resources.get("chips", 8))
+        return TPU_STARTUP + work * 8.0 / (TPU_SPEED * chips)
+    return work
+
+
+def fit_hetero_profiler() -> Profiler:
+    """Per-pool runtime models ('work@cpu' / 'work@tpu') fit offline from
+    the oracle's ground truth — the profiler pathway placement scores
+    through (log-linear, so the TPU model is an approximation; placement
+    only needs the ranking to survive the fit error)."""
+    prof = Profiler(engine=None)
+    works = [5, 10, 20, 40, 60, 120, 600, 1200, 2400, 3600]
+    cpu_t = CommandTemplate(
+        "work@cpu", {"work": works},
+        {"vcpu": [0.5, 1.0, 2.0, 8.0], "mem_mb": [512, 2048, 8192]})
+    grid = cpu_t.grid()
+    prof.fit_offline(cpu_t, grid, [c["work"] for c in grid])
+    tpu_t = CommandTemplate(
+        "work@tpu", {"work": works},
+        {"chips": [8.0, 16.0], "hbm_gb": [2.0, 4.0]})
+    grid = tpu_t.grid()
+    prof.fit_offline(
+        tpu_t, grid,
+        [TPU_STARTUP + c["work"] * 8.0 / (TPU_SPEED * c["chips"])
+         for c in grid])
+    return prof
+
+
+# -- arrival processes --------------------------------------------------
+def poisson_arrivals(fleet: list[JobSpec], rate: float,
+                     seed: int = 0) -> list[tuple[float, JobSpec]]:
+    """Open-loop Poisson arrivals on the virtual clock (None rate =>
+    closed fleet, everything at t=0)."""
+    if not rate:
+        return [(0.0, spec) for spec in fleet]
+    rng = np.random.default_rng(seed + 1000)
+    times = np.cumsum(rng.exponential(1.0 / rate, size=len(fleet)))
+    return list(zip(times.tolist(), fleet))
+
+
+def trace_arrivals(path: str) -> list[tuple[float, JobSpec]]:
+    """Trace-replay hook: JSONL rows
+    ``{"t": sec, "duration": sec, "name"?, "user"?, "resources"?}``
+    become the arrival process instead of the synthetic fleet."""
+    out = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            if not line.strip():
+                continue
+            row = json.loads(line)
+            out.append((float(row["t"]), JobSpec(
+                name=row.get("name", f"trace-{i}"), project="bench",
+                user=row.get("user", "u0"),
+                duration=float(row["duration"]),
+                resources=row.get("resources", {}))))
+    out.sort(key=lambda p: p[0])
+    return out
+
+
+# -- simulation core ----------------------------------------------------
+def simulate(arrivals: list[tuple[float, JobSpec]], *,
+             cluster=None, placement=None, pricing=None, oracle=None,
+             policy: str = "fair", backfill: bool = True,
+             quota_k: int = 16, backfill_depth: int = 50) -> dict:
+    """Drive one scheduler configuration through an arrival process on
+    the virtual clock; returns metrics incl. slowdown percentiles."""
     registry = JobRegistry()
     bus = EventBus()
-    runner = VirtualRunner(registry, bus)
-    cluster = AuditingCluster(
-        {n: max(d.values) * NODES for n, d in CPU_PRICING.dims.items()},
-        {n: d.minimum for n, d in CPU_PRICING.dims.items()})
-    sched = Scheduler(registry, runner, bus, quota_k=16, cluster=cluster,
-                      policy=policy, backfill=backfill, backfill_depth=50)
+    runner = VirtualRunner(registry, bus, oracle=oracle, pricing=pricing)
+    monitor = JobMonitor(bus)
+    sched = Scheduler(registry, runner, bus, quota_k=quota_k,
+                      cluster=cluster, placement=placement,
+                      policy=policy, backfill=backfill,
+                      backfill_depth=backfill_depth)
+    starts: dict[str, float] = {}
+    orig_launch = runner.launch
+
+    def launch(job):
+        starts[job.job_id] = runner.now
+        orig_launch(job)
+    runner.launch = launch
+
+    submitted: dict[str, float] = {}
     t0 = time.perf_counter()
-    for spec in fleet:
-        sched.submit(registry.submit(JobSpec(**spec.__dict__)))
+    for t, spec in arrivals:
+        while True:
+            nc = runner.next_completion()
+            if nc is None or nc > t:
+                break
+            runner.step()
+        runner.advance_to(t)
+        job = registry.submit(JobSpec(**spec.__dict__))
+        submitted[job.job_id] = t
+        sched.submit(job)
     sched.run_to_completion()
     wall = time.perf_counter() - t0
-    finished = sum(1 for j in registry.all_jobs()
-                   if j.state == JobState.FINISHED)
-    assert finished == len(fleet), f"{finished}/{len(fleet)} finished"
-    oversubscribed = any(
-        cluster.high_water[n] > cluster.capacity[n] + 1e-9
-        for n in cluster.capacity)
+
+    jobs = registry.all_jobs()
+    finished = sum(1 for j in jobs if j.state == JobState.FINISHED)
+    assert finished == len(arrivals), f"{finished}/{len(arrivals)} finished"
+    pools = sched.pools
+    oversub = any(getattr(cl, "oversubscribed", False)
+                  for cl in pools.values())
+    slow = []
+    for jid, t_sub in submitted.items():
+        j = registry.get(jid)
+        wait = starts[jid] - t_sub
+        rt = j.runtime or 0.0
+        slow.append(max(1.0, (wait + rt) / max(rt, SLOWDOWN_TAU)))
+    p50, p95, p99 = np.percentile(slow, [50, 95, 99])
     makespan = runner.now
+    total_cost = sum(j.cost or 0.0 for j in jobs)
     return {
         "policy": f"{policy}+backfill" if backfill else policy,
-        "n_jobs": len(fleet),
+        "n_jobs": len(arrivals),
         "makespan_s": makespan,
         "mean_queue_wait_s": sched.mean_queue_wait(),
-        "throughput_jobs_per_hour": len(fleet) / (makespan / 3600.0),
+        "slowdown_p50": float(p50),
+        "slowdown_p95": float(p95),
+        "slowdown_p99": float(p99),
+        "throughput_jobs_per_hour": len(arrivals) / (makespan / 3600.0),
         "backfilled": sched.stats["backfilled"],
-        "oversubscribed": oversubscribed,
-        "peak_vcpu": cluster.high_water["vcpu"],
-        "capacity_vcpu": cluster.capacity["vcpu"],
+        "placed_by_pool": dict(sched.stats["placed_by_pool"]),
+        "pool_utilization": {p: monitor.utilization_by_pool().get(p, {})
+                             for p in pools},
+        "total_cost": total_cost,
+        "oversubscribed": oversub,
         "wall_s": wall,
-        "sched_events_per_s": len(fleet) * 2 / max(wall, 1e-9),
+        "sched_events_per_s": len(arrivals) * 2 / max(wall, 1e-9),
     }
 
 
-def run(n_jobs: int = N_JOBS, seed: int = 0) -> dict:
-    fleet = make_fleet(seed, n_jobs)
-    fifo = run_policy(fleet, "fifo", backfill=False)
-    fair = run_policy(fleet, "fair", backfill=True)
+# -- scenario 1: policies under open-loop arrivals ----------------------
+def run_policy(arrivals, policy: str, backfill: bool) -> dict:
+    cluster = AuditingCluster(
+        {n: max(d.values) * NODES for n, d in CPU_PRICING.dims.items()},
+        {n: d.minimum for n, d in CPU_PRICING.dims.items()})
+    res = simulate(arrivals, cluster=cluster, pricing=CPU_PRICING,
+                   policy=policy, backfill=backfill)
+    res["peak_vcpu"] = cluster.high_water["vcpu"]
+    res["capacity_vcpu"] = cluster.capacity["vcpu"]
+    return res
+
+
+# -- scenario 2: heterogeneous pools ------------------------------------
+def _cpu_pool(nodes: int) -> AuditingCluster:
+    return AuditingCluster(
+        {n: max(d.values) * nodes for n, d in CPU_PRICING.dims.items()},
+        {n: d.minimum for n, d in CPU_PRICING.dims.items()}, name="cpu")
+
+
+def _tpu_pool() -> AuditingCluster:
+    return AuditingCluster(
+        {"chips": float(TPU_CHIPS), "hbm_gb": 4.0 * TPU_CHIPS},
+        {"chips": 8.0, "hbm_gb": 2.0}, name="tpu")
+
+
+def _single_pool_equiv_nodes() -> int:
+    """CPU nodes whose hourly price matches the heterogeneous deployment
+    (CPU pool + TPU pool) — the price-equivalent homogeneous baseline."""
+    cpu_node_rate = CPU_PRICING.hourly_rate(
+        {n: max(d.values) for n, d in CPU_PRICING.dims.items()})
+    tpu_pool_rate = TPU_BENCH_PRICING.hourly_rate(
+        {"chips": float(TPU_CHIPS), "hbm_gb": 2.0})
+    return CPU_NODES + max(1, math.ceil(tpu_pool_rate / cpu_node_rate))
+
+
+def run_hetero(n_jobs: int = HETERO_JOBS, seed: int = 0,
+               quota_k: int = 64) -> dict:
+    fleet = make_hetero_fleet(seed, n_jobs)
+    arrivals = [(0.0, s) for s in fleet]
+    catalog = {"cpu": CPU_PRICING, "tpu": TPU_BENCH_PRICING}
+    prof = fit_hetero_profiler()
+    single_nodes = _single_pool_equiv_nodes()
+
+    # single CPU-only pool, price-equivalent hardware (the old engine)
+    single = simulate(
+        arrivals, pricing=catalog, oracle=hetero_oracle, quota_k=quota_k,
+        placement=Placement({"cpu": _cpu_pool(single_nodes)},
+                            pricing=catalog))
+
+    # both pools, uniform pool choice
+    random_p = simulate(
+        arrivals, pricing=catalog, oracle=hetero_oracle, quota_k=quota_k,
+        placement=RandomPlacement(
+            {"cpu": _cpu_pool(CPU_NODES), "tpu": _tpu_pool()},
+            pricing=catalog, seed=seed))
+
+    # both pools, profiler-fed cost/speed scoring
+    placement = Placement({"cpu": _cpu_pool(CPU_NODES), "tpu": _tpu_pool()},
+                          pricing=catalog, objective="cost")
+    placement.use_profiler(prof)
+    placed = simulate(
+        arrivals, pricing=catalog, oracle=hetero_oracle, quota_k=quota_k,
+        placement=placement)
+
     out = {
-        "fleet": {"n_jobs": n_jobs, "n_users": N_USERS, "nodes": NODES},
+        "fleet": {"n_jobs": n_jobs, "n_users": N_USERS,
+                  "cpu_nodes": CPU_NODES, "tpu_chips": TPU_CHIPS,
+                  "single_pool_cpu_nodes": single_nodes},
+        "single_pool": single,
+        "random_pool": random_p,
+        "profiler_placed": placed,
+        "makespan_speedup_vs_single":
+            single["makespan_s"] / placed["makespan_s"],
+        "makespan_speedup_vs_random":
+            random_p["makespan_s"] / placed["makespan_s"],
+        "cost_saving_vs_single":
+            1.0 - placed["total_cost"] / single["total_cost"],
+        "cost_saving_vs_random":
+            1.0 - placed["total_cost"] / random_p["total_cost"],
+    }
+    for name, r in (("single", single), ("random", random_p),
+                    ("placed", placed)):
+        assert not r["oversubscribed"], f"hetero.{name} oversubscribed"
+    # the headline invariant: profiler-fed placement wins BOTH axes
+    assert placed["makespan_s"] < single["makespan_s"], "no speedup"
+    assert placed["makespan_s"] < random_p["makespan_s"], "random faster"
+    assert placed["total_cost"] < single["total_cost"], "no cost saving"
+    assert placed["total_cost"] < random_p["total_cost"], "random cheaper"
+    return out
+
+
+# -- entry points -------------------------------------------------------
+def run(n_jobs: int = N_JOBS, seed: int = 0,
+        hetero_jobs: int = HETERO_JOBS, trace: str | None = None) -> dict:
+    arrivals = trace_arrivals(trace) if trace else \
+        poisson_arrivals(make_fleet(seed, n_jobs), ARRIVAL_RATE, seed)
+    fifo = run_policy(arrivals, "fifo", backfill=False)
+    fair = run_policy(arrivals, "fair", backfill=True)
+    out = {
+        "fleet": {"n_jobs": len(arrivals), "n_users": N_USERS,
+                  "nodes": NODES, "arrival_rate": ARRIVAL_RATE,
+                  "arrivals": "trace" if trace else "poisson"},
         "fifo": fifo,
         "fair_backfill": fair,
         "makespan_speedup": fifo["makespan_s"] / fair["makespan_s"],
         "queue_wait_reduction":
             1.0 - fair["mean_queue_wait_s"] / fifo["mean_queue_wait_s"],
+        "hetero": run_hetero(hetero_jobs, seed),
     }
     assert not fifo["oversubscribed"] and not fair["oversubscribed"]
     return out
 
 
-def report(res: dict) -> None:
+def report(res: dict, write: bool = True) -> None:
     """Print the CSV contract lines and write BENCH_scheduler.json —
     shared between standalone runs and benchmarks/run.py."""
     for name in ("fifo", "fair_backfill"):
@@ -128,15 +412,47 @@ def report(res: dict) -> None:
         print(f"scheduler.{name},{r['wall_s'] * 1e6:.0f},"
               f"makespan={r['makespan_s']:.0f}s"
               f"_wait={r['mean_queue_wait_s']:.0f}s"
+              f"_slowdown_p50={r['slowdown_p50']:.1f}"
+              f"_p95={r['slowdown_p95']:.1f}"
+              f"_p99={r['slowdown_p99']:.1f}"
               f"_backfilled={r['backfilled']}")
     print(f"scheduler.speedup,0,makespan_x={res['makespan_speedup']:.3f}"
           f"_wait_cut={res['queue_wait_reduction'] * 100:.1f}%")
-    with open("BENCH_scheduler.json", "w") as f:
-        json.dump(res, f, indent=1)
+    h = res["hetero"]
+    for name in ("single_pool", "random_pool", "profiler_placed"):
+        r = h[name]
+        pools = ",".join(f"{p}:{c}" for p, c in
+                         sorted(r["placed_by_pool"].items()))
+        print(f"scheduler.hetero.{name},{r['wall_s'] * 1e6:.0f},"
+              f"makespan={r['makespan_s']:.0f}s"
+              f"_cost=${r['total_cost']:.2f}_pools={pools or '-'}")
+    print(f"scheduler.hetero.placement,0,"
+          f"speedup_vs_single={h['makespan_speedup_vs_single']:.2f}x"
+          f"_vs_random={h['makespan_speedup_vs_random']:.2f}x"
+          f"_cost_cut_vs_single={h['cost_saving_vs_single'] * 100:.1f}%"
+          f"_vs_random={h['cost_saving_vs_random'] * 100:.1f}%")
+    if write:
+        with open("BENCH_scheduler.json", "w") as f:
+            json.dump(res, f, indent=1)
 
 
 def main() -> None:
-    report(run())
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fleets, no JSON — the CI regression gate")
+    ap.add_argument("--trace", default=None,
+                    help="JSONL arrival trace replayed instead of the "
+                         "synthetic Poisson fleet (policy scenario)")
+    ap.add_argument("--n-jobs", type=int, default=None)
+    args = ap.parse_args()
+    if args.smoke:
+        res = run(n_jobs=args.n_jobs or 400, hetero_jobs=400,
+                  trace=args.trace)
+        report(res, write=False)
+        print("scheduler.smoke,0,ok")
+    else:
+        res = run(n_jobs=args.n_jobs or N_JOBS, trace=args.trace)
+        report(res)
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ from repro.core.datalake.provenance import ProvenanceGraph
 from repro.core.datalake.storage import Storage
 from repro.core.engine.cluster import Cluster
 from repro.core.engine.events import EventBus
+from repro.core.engine.placement import Placement
 from repro.core.engine.handle import JobHandle, wait_all
 from repro.core.engine.launcher import (LocalRunner, ThreadPoolRunner,
                                         VirtualRunner)
@@ -71,16 +72,26 @@ class AcaiProject:
 
 
 class AcaiEngine:
-    """Execution engine assembly: registry + scheduler + launcher + monitor."""
+    """Execution engine assembly: registry + scheduler + launcher + monitor.
+
+    ``pricing`` is either one ``Pricing`` (homogeneous deployment, at most
+    one capacity cluster) or a catalog ``{family: Pricing}`` — then
+    ``cluster_nodes`` (an int for every family, or ``{family: nodes}``)
+    builds one ``Cluster`` pool per family and a ``Placement`` layer
+    chooses a pool per job (profiler-fed via :meth:`use_profiler`).
+    """
 
     def __init__(self, *, datalake: Optional[AcaiProject] = None,
-                 pricing: Pricing = CPU_PRICING, quota_k: int = 2,
+                 pricing: Pricing | dict[str, Pricing] = CPU_PRICING,
+                 quota_k: int = 2,
                  virtual: bool = False,
                  oracle: Optional[Callable] = None,
                  workroot: str = "/tmp/acai-jobs",
                  runner: Optional[str] = None, max_workers: int = 4,
                  cluster: Optional[Cluster] = None,
-                 cluster_nodes: Optional[int] = None,
+                 cluster_nodes: Optional[int | dict[str, int]] = None,
+                 placement: Optional[Placement] = None,
+                 placement_objective: str = "cost",
                  policy: str = "fair", backfill: bool = True,
                  usage_halflife: Optional[float] = None):
         self.bus = EventBus()
@@ -103,15 +114,43 @@ class AcaiEngine:
                                         workroot=workroot)
         else:
             raise ValueError(f"unknown runner {runner!r}")
-        if cluster is None and cluster_nodes is not None:
+        catalog = pricing if isinstance(pricing, dict) else None
+        if catalog and placement is None and cluster_nodes is None:
+            # without pools there is no placement and billing would fall
+            # back to an arbitrary catalog entry — refuse loudly
+            raise ValueError(
+                "a pricing catalog needs cluster_nodes (int or "
+                "{family: nodes}) or an explicit placement= to build "
+                "its pools; pass a single Pricing for a pool-less engine")
+        if placement is None and catalog and cluster_nodes is not None:
+            nodes = cluster_nodes if isinstance(cluster_nodes, dict) \
+                else {fam: cluster_nodes for fam in catalog}
+            pools = {fam: Cluster.from_pricing(p, nodes=nodes[fam],
+                                               name=fam)
+                     for fam, p in catalog.items() if nodes.get(fam)}
+            placement = Placement(pools, pricing=catalog,
+                                  objective=placement_objective)
+        if cluster is None and placement is None \
+                and cluster_nodes is not None and not catalog:
             cluster = Cluster.from_pricing(pricing, nodes=cluster_nodes)
         self.scheduler = Scheduler(self.registry, self.launcher, self.bus,
                                    quota_k=quota_k, cluster=cluster,
+                                   placement=placement,
                                    policy=policy, backfill=backfill,
                                    usage_halflife=usage_halflife)
         self.cluster = cluster
         self.monitor = JobMonitor(self.bus)
         self.pricing = pricing
+
+    @property
+    def pools(self) -> dict[str, Cluster]:
+        return self.scheduler.pools
+
+    def use_profiler(self, profiler) -> None:
+        """Feed a profiler's runtime predictions into pool placement
+        (no-op without a placement layer)."""
+        if self.scheduler.placement is not None:
+            self.scheduler.placement.use_profiler(profiler)
 
     def submit(self, spec: JobSpec, *, pipeline: str = "") -> JobHandle:
         """Submit a job; returns a JobHandle future. Declared dependencies
@@ -182,10 +221,11 @@ class _UserEngine:
 class AcaiPlatform:
     """Credential server + project/user management (§3.1, §4.1)."""
 
-    def __init__(self, root: str | Path, *, pricing: Pricing = CPU_PRICING,
+    def __init__(self, root: str | Path, *,
+                 pricing: Pricing | dict[str, Pricing] = CPU_PRICING,
                  virtual: bool = False, oracle=None, quota_k: int = 2,
                  runner: Optional[str] = None, max_workers: int = 4,
-                 cluster_nodes: Optional[int] = None,
+                 cluster_nodes: Optional[int | dict[str, int]] = None,
                  policy: str = "fair", backfill: bool = True,
                  usage_halflife: Optional[float] = None):
         self.root = Path(root)
@@ -269,8 +309,12 @@ class AcaiPlatform:
 
     def make_profiler(self, token: str, quorum: float = 0.95,
                       priority: int = 0) -> Profiler:
-        return Profiler(_UserEngine(self, token), quorum=quorum,
+        prof = Profiler(_UserEngine(self, token), quorum=quorum,
                         priority=priority)
+        # profiler-fed placement: predictions flow into the project's pool
+        # scoring as soon as models are fit (no-op on single-pool engines)
+        self.engine(token).use_profiler(prof)
+        return prof
 
     def make_autoprovisioner(self, token: str,
                              profiler: Profiler) -> AutoProvisioner:

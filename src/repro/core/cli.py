@@ -3,7 +3,9 @@
     python -m repro.core.cli --root /tmp/acai --token <tok> <command> ...
 
 Commands: upload, download, ls, create-file-set, submit, status, wait,
-logs, jobs, cluster, find, trace. State persists under --root
+logs, jobs, cluster, find, trace. ``cluster`` renders the per-pool view
+(capacity/utilization/placement counts per accelerator pool) and
+``submit --pool`` pins a job to one pool. State persists under --root
 (tokens in tokens.json for this local deployment). ``submit`` runs a
 ``module:callable`` through the futures SDK and prints the job id.
 Job state persists to the metadata store and log text to the data lake
@@ -87,6 +89,14 @@ def main(argv=None) -> int:
                     metavar="K=V", help="job arg (JSON values accepted)")
     sp.add_argument("--vcpu", type=float, default=1)
     sp.add_argument("--mem-mb", type=float, default=512)
+    sp.add_argument("--pool", default=None,
+                    help="pin to one accelerator pool (requires a pools "
+                         "deployment; see the `cluster` command)")
+    sp.add_argument("--resource", action="append", default=[],
+                    metavar="DIM=AMOUNT",
+                    help="resource shape overriding --vcpu/--mem-mb "
+                         "(repeatable; e.g. --resource chips=8 for a "
+                         "TPU pool)")
     sp.add_argument("--no-wait", action="store_true",
                     help="print the handle immediately, don't resolve it")
 
@@ -102,7 +112,8 @@ def main(argv=None) -> int:
     sp.add_argument("--sort-by", default="job_id")
 
     sub.add_parser("cluster",
-                   help="capacity/utilization + queue-wait metrics")
+                   help="per-pool capacity/utilization/placement + "
+                        "queue-wait metrics")
 
     sp = sub.add_parser("find")
     sp.add_argument("conditions", nargs="+",
@@ -169,12 +180,30 @@ def main(argv=None) -> int:
                 print(f"refusing submit: parent {pid} ended {past}",
                       file=sys.stderr)
             return 1
+        if args.pool and plat.engine(args.token).scheduler.placement \
+                is None:
+            # silently dropping the pin would run the job anywhere
+            print(f"--pool {args.pool} requires a pools deployment; "
+                  f"this engine has no placement layer", file=sys.stderr)
+            return 2
+        resources = {"vcpu": args.vcpu, "mem_mb": args.mem_mb}
+        if args.resource:
+            resources = {}
+            for kv in args.resource:
+                k, sep, v = kv.partition("=")
+                try:
+                    if not (k and sep):
+                        raise ValueError
+                    resources[k] = float(v)
+                except ValueError:
+                    print(f"--resource expects DIM=AMOUNT with a numeric "
+                          f"amount, got {kv!r}", file=sys.stderr)
+                    return 2
         handle = plat.submit_job(args.token, JobSpec(
             name=args.name, project="", user="", fn=fn,
             input_fileset=args.input_fileset,
             output_fileset=args.output_fileset,
-            args=job_args,
-            resources={"vcpu": args.vcpu, "mem_mb": args.mem_mb}))
+            args=job_args, pool=args.pool, resources=resources))
         state = handle.status() if args.no_wait else handle.wait()
         print(f"{handle.job_id} {state.value}")
     elif args.cmd in ("status", "wait", "logs"):

@@ -27,11 +27,19 @@ class Cluster:
     All mutating calls are thread-safe (the ThreadPoolRunner finalizes jobs
     from worker threads). Missing dimensions in a job's resource dict are
     charged at ``defaults`` (the pricing minimum), matching how
-    ``Pricing.job_cost`` bills them.
+    ``Pricing.job_cost`` bills them. Dimensions the cluster does not have
+    (e.g. ``chips`` on a CPU pool) are kept in the charge with an implicit
+    capacity of zero, so ``fits``/``ever_fits`` reject instead of silently
+    admitting the job as if the request were free.
+
+    ``name`` identifies the pool in a heterogeneous deployment (one
+    Cluster per accelerator family; see ``core/engine/placement.py``).
     """
 
     def __init__(self, capacity: dict[str, float],
-                 defaults: Optional[dict[str, float]] = None):
+                 defaults: Optional[dict[str, float]] = None,
+                 name: str = "default"):
+        self.name = name
         self.capacity = {k: float(v) for k, v in capacity.items()}
         self.defaults = dict(defaults or {})
         self.used: dict[str, float] = {k: 0.0 for k in self.capacity}
@@ -40,19 +48,29 @@ class Cluster:
 
     # -- construction ---------------------------------------------------
     @classmethod
-    def from_pricing(cls, pricing, nodes: int = 8) -> "Cluster":
+    def from_pricing(cls, pricing, nodes: int = 8,
+                     name: str = "default") -> "Cluster":
         """Totals = ``nodes`` x the largest node shape the pricing allocates."""
-        capacity = {name: max(dim.values) * nodes
-                    for name, dim in pricing.dims.items()}
-        defaults = {name: dim.minimum for name, dim in pricing.dims.items()}
-        return cls(capacity, defaults)
+        capacity = {name_: max(dim.values) * nodes
+                    for name_, dim in pricing.dims.items()}
+        defaults = {name_: dim.minimum for name_, dim in pricing.dims.items()}
+        return cls(capacity, defaults, name=name)
 
     # -- normalization --------------------------------------------------
     def charge(self, resources: Optional[dict[str, Any]]) -> dict[str, float]:
-        """The amounts a job is billed against capacity, per dimension."""
+        """The amounts a job is billed against capacity, per dimension.
+
+        Dimensions requested but absent from ``capacity`` are included so
+        admission rejects them (capacity for an unknown dimension is zero);
+        dropping them would admit e.g. a ``tpu=8`` job onto a CPU pool for
+        free."""
         resources = resources or {}
-        return {name: float(resources.get(name, self.defaults.get(name, 0.0)))
-                for name in self.capacity}
+        req = {name: float(resources.get(name, self.defaults.get(name, 0.0)))
+               for name in self.capacity}
+        for name, amt in resources.items():
+            if name not in req:
+                req[name] = float(amt)
+        return req
 
     # -- admission ------------------------------------------------------
     def fits(self, resources: Optional[dict[str, Any]]) -> bool:
@@ -62,13 +80,17 @@ class Cluster:
         """Admission check on a pre-computed charge (the scheduler caches
         charges at submit to keep the dispatch scan cheap)."""
         with self._lock:
-            return all(self.used[n] + amt <= self.capacity[n] + 1e-9
+            return all(self.used.get(n, 0.0) + amt
+                       <= self.capacity.get(n, 0.0) + 1e-9
                        for n, amt in req.items())
 
     def ever_fits(self, resources: Optional[dict[str, Any]]) -> bool:
         """Could this job run on an empty cluster at all?"""
-        req = self.charge(resources)
-        return all(amt <= self.capacity[n] + 1e-9 for n, amt in req.items())
+        return self.ever_fits_charge(self.charge(resources))
+
+    def ever_fits_charge(self, req: dict[str, float]) -> bool:
+        return all(amt <= self.capacity.get(n, 0.0) + 1e-9
+                   for n, amt in req.items())
 
     def reserve(self, job_id: str,
                 resources: Optional[dict[str, Any]]) -> dict[str, float]:
@@ -76,12 +98,14 @@ class Cluster:
         with self._lock:
             if job_id in self._held:
                 return self._held[job_id]
-            if not all(self.used[n] + amt <= self.capacity[n] + 1e-9
+            if not all(self.used.get(n, 0.0) + amt
+                       <= self.capacity.get(n, 0.0) + 1e-9
                        for n, amt in req.items()):
                 raise CapacityError(f"{job_id}: {req} oversubscribes "
-                                    f"{self.free()}")
+                                    f"{self.name}: {self.free()}")
             for n, amt in req.items():
-                self.used[n] += amt
+                if n in self.used:
+                    self.used[n] += amt
             self._held[job_id] = req
             return req
 
@@ -91,7 +115,8 @@ class Cluster:
             req = self._held.pop(job_id, None)
             if req is not None:
                 for n, amt in req.items():
-                    self.used[n] = max(0.0, self.used[n] - amt)
+                    if n in self.used:
+                        self.used[n] = max(0.0, self.used[n] - amt)
             return req
 
     def held(self, job_id: str) -> Optional[dict[str, float]]:
@@ -118,5 +143,5 @@ class Cluster:
         accounting unit (usage = dominant_share x runtime)."""
         req = self.charge(resources)
         shares = [amt / self.capacity[n] for n, amt in req.items()
-                  if self.capacity[n] > 0]
+                  if self.capacity.get(n, 0.0) > 0]
         return max(shares) if shares else 0.0

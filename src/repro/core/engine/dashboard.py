@@ -53,19 +53,26 @@ def job_history(registry: JobRegistry, metadata=None, *,
 
 
 def scheduler_page(scheduler, monitor=None) -> str:
-    """The cluster page: capacity + utilization, per-queue pressure and
-    queue-wait statistics from the capacity scheduler."""
+    """The cluster page: per-pool capacity + utilization + placement
+    counts, per-queue pressure and queue-wait statistics from the
+    capacity scheduler."""
     lines = []
     with scheduler._lock:     # dispatch may be running on a worker thread
-        if scheduler.cluster is not None:
-            cl = scheduler.cluster
-            util = cl.utilization()
-            lines.append("| resource | capacity | used | utilization |")
-            lines.append("|---|---|---|---|")
-            for dim in cl.capacity:
-                lines.append(f"| {dim} | {cl.capacity[dim]:g} "
-                             f"| {cl.used[dim]:g} "
-                             f"| {util[dim] * 100:.1f}% |")
+        pools = getattr(scheduler, "pools", {})
+        if pools:
+            placed = scheduler.stats.get("placed_by_pool", {})
+            lines.append("| pool | resource | capacity | used "
+                         "| utilization | placed |")
+            lines.append("|---|---|---|---|---|---|")
+            for pname in sorted(pools):
+                cl = pools[pname]
+                util = cl.utilization()
+                for dim in cl.capacity:
+                    lines.append(f"| {pname} | {dim} "
+                                 f"| {cl.capacity[dim]:g} "
+                                 f"| {cl.used[dim]:g} "
+                                 f"| {util[dim] * 100:.1f}% "
+                                 f"| {placed.get(pname, 0)} |")
         else:
             lines.append("(no cluster attached — capacity-unconstrained)")
 

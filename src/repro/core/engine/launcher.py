@@ -41,6 +41,19 @@ from repro.core.engine.logparse import parse_log
 from repro.core.engine.registry import Job, JobRegistry
 
 
+def resolve_pricing(pricing, job: Job):
+    """The pricing that bills ``job``: a plain ``Pricing`` applies to every
+    job; a catalog (``{pool_name: Pricing}``, heterogeneous deployments)
+    resolves through the pool placement launched the job on."""
+    if isinstance(pricing, dict):
+        if job.pool and job.pool in pricing:
+            return pricing[job.pool]
+        if "default" in pricing:
+            return pricing["default"]
+        return next(iter(pricing.values()), None) if pricing else None
+    return pricing
+
+
 class Runner:
     # True when jobs complete on worker threads (terminal events arrive
     # asynchronously); JobHandle.wait blocks on the bus instead of stepping
@@ -50,8 +63,10 @@ class Runner:
         raise NotImplementedError
 
     # -- optional hooks the capacity scheduler consults -----------------
-    def expected_duration(self, job: Job) -> Optional[float]:
-        """Best-effort runtime estimate for backfill; None if unknown."""
+    def expected_duration(self, job: Job,
+                          pool: Optional[str] = None) -> Optional[float]:
+        """Best-effort runtime estimate for backfill — on ``pool`` when
+        the scheduler is sizing a specific pool's hole; None if unknown."""
         return job.spec.duration
 
     def expected_end(self, job_id: str) -> Optional[float]:
@@ -158,8 +173,9 @@ class LocalRunner(Runner):
                 self.registry.set_state(job.job_id, state, error=error)
             except IllegalTransition:   # killed between check and set
                 state = self.registry.get(job.job_id).state
-        if self.pricing is not None and job.runtime is not None:
-            job.cost = self.pricing.job_cost(job.spec.resources, job.runtime)
+        pricing = resolve_pricing(self.pricing, job)
+        if pricing is not None and job.runtime is not None:
+            job.cost = pricing.job_cost(job.spec.resources, job.runtime)
         if self.datalake is not None:
             meta = parse_log(log_text)      # intelligent log parser
             if meta:
@@ -292,18 +308,33 @@ class VirtualRunner(Runner):
         self.now = 0.0
         self._heap: list[tuple[float, int, str, float]] = []
         self._ends: dict[str, float] = {}
-        self._dur_cache: dict[str, float] = {}
+        # job_id -> {pool: duration}: pool-dependent oracles (heterogeneous
+        # fleets where a TPU pool runs the same work faster) are re-drawn
+        # when placement assigns a pool, while the pre-launch backfill
+        # estimate and the launch still share one draw per (job, pool)
+        self._dur_cache: dict[str, dict] = {}
         self._seq = 0
 
-    def _draw_duration(self, job: Job) -> float:
-        """One oracle draw per job, shared between the backfill estimate
-        and the actual launch — stochastic oracles stay consistent and the
-        RNG stream does not depend on how often the scheduler peeks."""
+    _UNSET = object()
+
+    def _draw_duration(self, job: Job, pool=_UNSET) -> float:
+        """One oracle draw per (job, pool), shared between the backfill
+        estimate and the actual launch — stochastic oracles stay
+        consistent and the RNG stream does not depend on how often the
+        scheduler peeks. ``pool`` lets the scheduler ask "how long on
+        THIS pool" before placement assigns one; the oracle sees it as
+        ``job.pool`` for the duration of the draw."""
         if job.spec.duration is not None:
             return job.spec.duration
-        if job.job_id not in self._dur_cache:
-            self._dur_cache[job.job_id] = self.oracle(job)
-        return self._dur_cache[job.job_id]
+        key = job.pool if pool is self._UNSET else pool
+        per_pool = self._dur_cache.setdefault(job.job_id, {})
+        if key not in per_pool:
+            prev, job.pool = job.pool, key
+            try:
+                per_pool[key] = self.oracle(job)
+            finally:
+                job.pool = prev
+        return per_pool[key]
 
     def launch(self, job: Job) -> None:
         self.registry.set_state(job.job_id, JobState.RUNNING)
@@ -327,8 +358,9 @@ class VirtualRunner(Runner):
                              {"job_id": job_id, "status": "KILLED"})
             return job_id
         job.runtime = dur
-        if self.pricing is not None:
-            job.cost = self.pricing.job_cost(job.spec.resources, job.runtime)
+        pricing = resolve_pricing(self.pricing, job)
+        if pricing is not None:
+            job.cost = pricing.job_cost(job.spec.resources, job.runtime)
         self.registry.set_state(job_id, JobState.FINISHED)
         self.bus.publish(TOPIC_CONTAINER_STATUS,
                          {"job_id": job_id, "status": "FINISHED"})
@@ -337,11 +369,25 @@ class VirtualRunner(Runner):
     def pending(self) -> int:
         return len(self._heap)
 
+    # -- open-loop arrival processes ------------------------------------
+    def next_completion(self) -> Optional[float]:
+        """When the next running job will complete (None if none are)."""
+        return self._heap[0][0] if self._heap else None
+
+    def advance_to(self, t: float) -> None:
+        """Advance the idle clock to ``t`` (a future arrival instant);
+        never rewinds, never skips scheduled completions — drain those
+        with ``step()`` first."""
+        self.now = max(self.now, t)
+
     # -- capacity-scheduler hooks ---------------------------------------
-    def expected_duration(self, job: Job) -> Optional[float]:
+    def expected_duration(self, job: Job,
+                          pool: Optional[str] = None) -> Optional[float]:
         if job.spec.duration is None and self.oracle is None:
             return None
-        return self._draw_duration(job)
+        if pool is None:
+            return self._draw_duration(job)
+        return self._draw_duration(job, pool)
 
     def expected_end(self, job_id: str) -> Optional[float]:
         return self._ends.get(job_id)

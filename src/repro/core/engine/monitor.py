@@ -79,3 +79,15 @@ class JobMonitor:
         if not self._util_n:
             return {}
         return {d: v / self._util_n for d, v in self._util_sum.items()}
+
+    def utilization_by_pool(self) -> dict[str, dict[str, dict[str, float]]]:
+        """``{pool: {dim: {"mean": m, "peak": p}}}`` — multi-pool
+        snapshots namespace utilization keys as ``"<pool>/<dim>"``; flat
+        keys (single default pool) land under ``"default"``."""
+        mean = self.mean_utilization()
+        out: dict[str, dict[str, dict[str, float]]] = {}
+        for key, peak in self._peak.items():
+            pool, _, dim = key.rpartition("/")
+            out.setdefault(pool or "default", {})[dim or key] = {
+                "mean": mean.get(key, 0.0), "peak": peak}
+        return out

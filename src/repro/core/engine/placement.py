@@ -1,0 +1,177 @@
+"""Placement layer: heterogeneous cluster pools (ACAI §4.2 scaled out).
+
+The paper's auto-provisioner earns its speedup/cost-saving by choosing
+*where* a job runs; this module is the engine-side half of that choice.
+A deployment holds one ``Cluster`` pool per accelerator family (CPU node
+shapes vs TPU pod slices, each with its own pricing catalog), and
+``Placement`` scores each job's eligible pools on the profiler's
+cost/speed frontier plus dataflow locality:
+
+  eligibility  — the pool can ever fit the job's resource shape for that
+                 pool (``JobSpec.pool_resources`` declares per-family
+                 alternatives; a plain ``resources`` dict is tried on
+                 every pool, where unknown dimensions reject).
+  score        — expected runtime (profiler prediction when available,
+                 else the declared duration) x the pool's price =
+                 predicted cost; ``objective`` selects cost, runtime, or
+                 their product ("balanced" — the cost/speed frontier
+                 scalarized).
+  locality     — pools already holding a parent stage's output filesets
+                 (the pools the parents ran on) get their score
+                 discounted, co-placing pipeline stages with their
+                 inputs instead of paying a cross-pool transfer.
+
+The scheduler calls ``eligible`` once per job at submit (failing fast
+when no pool can ever satisfy it) and ``rank`` when the job becomes
+dispatchable — after dependency release, so every parent's pool is
+known. Ties break deterministically on (score, runtime, pool name).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from repro.core.engine.cluster import Cluster
+
+
+@dataclasses.dataclass
+class PoolOption:
+    """One pool a job may run on, with the shape/charge/score it would get."""
+    pool: str
+    resources: dict[str, float]
+    charge: dict[str, float]
+    runtime: Optional[float] = None     # predicted seconds (None = unknown)
+    cost: Optional[float] = None        # predicted $ for the whole run
+    score: float = 0.0
+    local: bool = False                 # a parent stage ran on this pool
+
+
+# predictor(spec, pool_name, resources) -> expected runtime seconds | None
+Predictor = Callable[[Any, str, dict[str, float]], Optional[float]]
+
+
+class Placement:
+    """Scores each job's eligible pools; lower score wins.
+
+    ``pools`` maps pool name -> Cluster; ``pricing`` (optional) maps pool
+    name -> Pricing so scores are dollars instead of normalized
+    resource-time. ``predictor`` supplies expected runtimes — typically
+    the profiler, attached via :meth:`use_profiler`.
+    """
+
+    def __init__(self, pools: dict[str, Cluster], *,
+                 pricing: Optional[dict[str, Any]] = None,
+                 predictor: Optional[Predictor] = None,
+                 objective: str = "cost",
+                 locality_discount: float = 0.75):
+        if objective not in ("cost", "runtime", "balanced"):
+            raise ValueError(f"unknown objective {objective!r}")
+        self.pools = dict(pools)
+        self.pricing = dict(pricing or {})
+        self.predictor = predictor
+        self.objective = objective
+        self.locality_discount = locality_discount
+
+    # -- eligibility -----------------------------------------------------
+    def resources_for(self, spec, pool: str) -> Optional[dict[str, float]]:
+        """The resource shape the job would get on ``pool``: its declared
+        per-pool alternative, or the generic ``resources`` dict when no
+        per-pool menu was declared. None = the job did not declare a shape
+        for this pool (an explicit menu is authoritative)."""
+        if spec.pool_resources:
+            return spec.pool_resources.get(pool)
+        return spec.resources
+
+    def eligible(self, spec) -> dict[str, PoolOption]:
+        """Pools that could ever run this job (empty => fail fast)."""
+        out: dict[str, PoolOption] = {}
+        for name, cl in self.pools.items():
+            if spec.pool and spec.pool != name:
+                continue                      # pinned to another pool
+            res = self.resources_for(spec, name)
+            if res is None:
+                continue
+            charge = cl.charge(res)
+            if cl.ever_fits_charge(charge):
+                out[name] = PoolOption(name, dict(res or {}), charge)
+        return out
+
+    # -- scoring ---------------------------------------------------------
+    def use_profiler(self, profiler) -> None:
+        """Feed the auto-provisioner's profiler into scoring.
+
+        ``spec.template`` names the profiled command template; the
+        profiler's ``predict_for_pool`` resolves the per-pool model
+        (``"<template>@<pool>"``) with fallback to the family-agnostic
+        one. The prediction config is the job's numeric args plus the
+        pool's resource shape, matching what the profiler's grids
+        explore. Missing models / failed predictions degrade to None
+        (placement falls back to declared durations) rather than making
+        the job ineligible."""
+        def predict(spec, pool: str,
+                    resources: dict[str, float]) -> Optional[float]:
+            if not spec.template:
+                return None
+            cfg = {k: v for k, v in (spec.args or {}).items()
+                   if isinstance(v, (int, float))}
+            cfg.update(resources or {})
+            try:
+                return profiler.predict_for_pool(spec.template, pool, cfg)
+            except Exception:              # noqa: BLE001 — stay eligible
+                return None
+        self.predictor = predict
+
+    def _score_one(self, spec, opt: PoolOption,
+                   parent_pools: set[str]) -> None:
+        runtime = None
+        if self.predictor is not None:
+            runtime = self.predictor(spec, opt.pool, opt.resources)
+        if runtime is None:
+            runtime = spec.duration if spec.duration is not None else 1.0
+        pricing = self.pricing.get(opt.pool)
+        if pricing is not None:
+            cost = pricing.job_cost(opt.resources, runtime)
+        else:
+            # no price catalog: dollars degrade to normalized resource-time
+            cl = self.pools[opt.pool]
+            cost = runtime * sum(
+                amt / cl.capacity[n] for n, amt in opt.charge.items()
+                if cl.capacity.get(n, 0.0) > 0)
+        opt.runtime, opt.cost = runtime, cost
+        score = {"cost": cost, "runtime": runtime,
+                 "balanced": cost * runtime}[self.objective]
+        opt.local = opt.pool in parent_pools
+        if opt.local and len(self.pools) > 1:
+            score *= self.locality_discount
+        opt.score = score
+
+    def rank(self, spec, options: dict[str, PoolOption],
+             parent_pools: set[str] = frozenset()) -> list[str]:
+        """Pool names ordered best-first (lowest score)."""
+        for opt in options.values():
+            self._score_one(spec, opt, parent_pools)
+        return sorted(options, key=lambda p: (options[p].score,
+                                              options[p].runtime, p))
+
+    # -- diagnostics -----------------------------------------------------
+    def explain_infeasible(self, spec) -> str:
+        """Why no pool can run this job — surfaced in the submit error."""
+        parts = []
+        for name, cl in self.pools.items():
+            if spec.pool and spec.pool != name:
+                parts.append(f"{name}: pinned to {spec.pool!r}")
+                continue
+            res = self.resources_for(spec, name)
+            if res is None:
+                parts.append(f"{name}: no resource shape declared")
+                continue
+            charge = cl.charge(res)
+            bad = [f"{n}={charge[n]:g}>" +
+                   (f"{cl.capacity[n]:g}" if n in cl.capacity
+                    else "absent")
+                   for n in charge
+                   if charge[n] > cl.capacity.get(n, 0.0) + 1e-9]
+            parts.append(f"{name}: {', '.join(bad) or 'ok'}")
+        if spec.pool and spec.pool not in self.pools:
+            parts.append(f"(pool {spec.pool!r} does not exist)")
+        return "; ".join(parts)

@@ -33,6 +33,15 @@ class JobSpec:
     # The scheduler holds the job until every parent is FINISHED and
     # cascades UPSTREAM_FAILED if any parent ends FAILED/KILLED.
     depends_on: list[str] = dataclasses.field(default_factory=list)
+    # heterogeneous pools: pin to one pool by name; declare per-pool
+    # resource alternatives (an explicit menu placement chooses from —
+    # when set, the job is eligible only on the listed pools); name the
+    # profiled command template whose model predicts this job's runtime
+    # so placement can score pools on the cost/speed frontier.
+    pool: Optional[str] = None
+    pool_resources: dict[str, dict[str, Any]] = \
+        dataclasses.field(default_factory=dict)
+    template: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -45,6 +54,7 @@ class Job:
     finished_at: Optional[float] = None
     runtime: Optional[float] = None          # measured (or virtual) seconds
     cost: Optional[float] = None
+    pool: Optional[str] = None               # the pool placement launched on
     error: Optional[str] = None
     outputs: dict[str, Any] = dataclasses.field(default_factory=dict)
 

@@ -1,24 +1,32 @@
 """Cluster-capacity scheduler (ACAI §3.3.1–§3.3.2, scaled to shared
-capacity).
+heterogeneous capacity).
 
 The seed engine was a per-(project, user) FIFO with a quota of at most
 ``quota_k`` jobs in LAUNCHING|RUNNING per tuple. That quota survives, but
-admission is now gated on a finite ``Cluster``: a job launches only when
-its resource charge fits the remaining capacity, reserved on launch and
-released on terminal events. Across queues the scheduler orders work by
+admission is now gated on finite capacity *pools* — one ``Cluster`` per
+accelerator family, chosen per job by the ``Placement`` layer
+(``core/engine/placement.py``): a job launches only when its resource
+charge fits some eligible pool, reserved on launch and released on
+terminal events. A single ``cluster=`` degenerates to one pool named
+"default" (the homogeneous deployment); a job no pool can ever satisfy
+fails fast at submit instead of queuing forever. Across queues the
+scheduler orders work by
 
   1. priority      — queue priority + per-job priority, higher first;
   2. fair share    — accumulated dominant-share x runtime per queue,
                      divided by the queue's weight, lower first (DRF-style);
   3. submit order  — FIFO tie-break.
 
-When the head candidate does not fit, EASY backfill lets later (smaller)
-jobs launch into the capacity hole as long as they provably do not delay
-the blocked job: either they finish before the blocked job's shadow start
-time (computed from the running jobs' expected completions), or they fit
-into the capacity that remains spare after the blocked job starts. With
-``policy="fifo"`` the scheduler degrades to a strict global-submission-order
-convoy (the benchmark baseline).
+When the head candidate fits none of its pools, EASY backfill lets later
+(smaller) jobs launch into the capacity hole as long as they provably do
+not delay the blocked job *on its preferred pool*: either they finish
+before the blocked job's shadow start time there (computed from that
+pool's running jobs' expected completions), or they fit into the capacity
+that remains spare on that pool after the blocked job starts. Shadow
+state is per pool — a blocked head on the TPU pool never throttles CPU
+dispatch, and a flexible job whose best pool is blocked simply takes its
+next-ranked pool. With ``policy="fifo"`` the scheduler degrades to a
+strict global-submission-order convoy (the benchmark baseline).
 
 Dependency gating (the pipeline SDK's dataflow layer): a job whose
 ``spec.depends_on`` names unfinished parents is *held* — QUEUED in the
@@ -54,6 +62,7 @@ from repro.core.engine.events import (EventBus, TOPIC_CONTAINER_STATUS,
                                       TOPIC_SCHEDULER)
 from repro.core.engine.lifecycle import (TERMINAL_STATES,
                                          TERMINAL_STATUS_VALUES, JobState)
+from repro.core.engine.placement import Placement
 from repro.core.engine.registry import Job, JobRegistry
 
 
@@ -68,16 +77,18 @@ class QueueConfig:
 class Scheduler:
     def __init__(self, registry: JobRegistry, launcher, bus: EventBus,
                  quota_k: int = 2, *, cluster: Optional[Cluster] = None,
+                 placement: Optional[Placement] = None,
                  policy: str = "fair", backfill: bool = True,
                  backfill_depth: int = 100,
                  usage_halflife: Optional[float] = None):
         if policy not in ("fair", "fifo"):
             raise ValueError(f"unknown policy {policy!r}")
+        if cluster is not None and placement is not None:
+            raise ValueError("pass cluster= or placement=, not both")
         self.registry = registry
         self.launcher = launcher
         self.bus = bus
         self.quota_k = quota_k
-        self.cluster = cluster
         self.policy = policy
         self.backfill = backfill and policy == "fair"
         self.backfill_depth = backfill_depth
@@ -93,12 +104,14 @@ class Scheduler:
         self._dependents: dict[str, set[str]] = defaultdict(set)
         self._seq_of: dict[str, int] = {}
         self._seq = 0
-        # dispatch-scan caches: priority and capacity charge per queued job,
-        # plus a per-dim lower bound on any job's charge (monotone min) so a
-        # saturated cluster short-circuits the scan entirely.
+        # dispatch-scan caches: priority, eligible pool options and pool
+        # ranking per queued job, plus per-pool per-dim lower bounds on any
+        # eligible job's charge (monotone min) so a saturated deployment
+        # short-circuits the scan entirely.
         self._prio_of: dict[str, int] = {}
-        self._charge_of: dict[str, dict[str, float]] = {}
-        self._min_charge: dict[str, float] = {}
+        self._opts_of: dict[str, dict] = {}       # job -> {pool: PoolOption}
+        self._rank_of: dict[str, list[str]] = {}  # job -> pools best-first
+        self._min_charge: dict[str, dict[str, float]] = {}  # pool -> dim min
         self._queued_at: dict[str, float] = {}
         self._started_at: dict[str, float] = {}
         self._lock = threading.RLock()
@@ -108,8 +121,41 @@ class Scheduler:
         # schedules millions of jobs, so metrics must stay O(queues)
         self.stats = {"launched": 0, "completed": 0, "backfilled": 0,
                       "wait_count": 0, "wait_sum": 0.0,
-                      "wait_by_key": defaultdict(lambda: [0, 0.0])}
+                      "wait_by_key": defaultdict(lambda: [0, 0.0]),
+                      "placed_by_pool": defaultdict(int)}
+        self.placement: Optional[Placement] = None
+        if placement is not None:
+            self.placement = placement
+        elif cluster is not None:
+            self.placement = Placement({cluster.name or "default": cluster})
         bus.subscribe(TOPIC_CONTAINER_STATUS, self._on_container_status)
+
+    # -- pools ----------------------------------------------------------
+    @property
+    def pools(self) -> dict[str, Cluster]:
+        return self.placement.pools if self.placement is not None else {}
+
+    @property
+    def cluster(self) -> Optional[Cluster]:
+        """The sole pool's cluster in a homogeneous deployment (legacy
+        single-cluster callers); None when capacity-unconstrained or
+        genuinely multi-pool."""
+        pools = self.pools
+        if len(pools) == 1:
+            return next(iter(pools.values()))
+        return None
+
+    @cluster.setter
+    def cluster(self, cl: Optional[Cluster]) -> None:
+        with self._lock:
+            self.placement = None if cl is None else \
+                Placement({cl.name or "default": cl})
+            # the pool set changed: every cached eligibility/ranking is
+            # stale (they name pools that may no longer exist) — drop
+            # them; _ensure_opts re-derives lazily per job
+            self._min_charge = {}
+            self._opts_of = {}
+            self._rank_of = {}
 
     # ------------------------------------------------------------------
     def _now(self) -> float:
@@ -135,17 +181,17 @@ class Scheduler:
             if failed_parent is not None:
                 self._upstream_fail(job.job_id, failed_parent)
                 return
-            if self.cluster is not None:
-                charge = self.cluster.charge(job.spec.resources)
-                if any(amt > self.cluster.capacity[n] + 1e-9
-                       for n, amt in charge.items()):
-                    # can never fit even on an empty cluster: fail fast
+            if self.placement is not None:
+                options = self.placement.eligible(job.spec)
+                if not options:
+                    # no pool can ever fit it: fail fast, don't queue forever
                     self._fail_infeasible(job)
                     return
-                self._charge_of[job.job_id] = charge
-                for n, amt in charge.items():
-                    self._min_charge[n] = min(
-                        self._min_charge.get(n, amt), amt)
+                self._opts_of[job.job_id] = options
+                for pname, opt in options.items():
+                    mc = self._min_charge.setdefault(pname, {})
+                    for n, amt in opt.charge.items():
+                        mc[n] = min(mc.get(n, amt), amt)
             if unmet:
                 # held: not in any queue, so invisible to the candidate
                 # scan, the quota count and the backfill shadow-time math
@@ -153,8 +199,49 @@ class Scheduler:
                 for pid in unmet:
                     self._dependents[pid].add(job.job_id)
             else:
-                self._queues[job.queue_key].append(job.job_id)
+                self._enqueue(job)
             self._dispatch()
+
+    def _ensure_opts(self, job: Job) -> dict:
+        """The job's cached pool options, re-deriving (and re-ranking)
+        them when the pool set changed since submit (legacy ``cluster=``
+        reassignment drops the caches). Empty => nothing fits anymore."""
+        opts = self._opts_of.get(job.job_id)
+        if opts is None:
+            opts = self.placement.eligible(job.spec)
+            if opts:
+                self._opts_of[job.job_id] = opts
+                for pname, opt in opts.items():
+                    mc = self._min_charge.setdefault(pname, {})
+                    for n, amt in opt.charge.items():
+                        mc[n] = min(mc.get(n, amt), amt)
+                self._rank_of[job.job_id] = self.placement.rank(
+                    job.spec, opts, parent_pools=self._parent_pools(job))
+        return opts
+
+    def _enqueue(self, job: Job) -> None:
+        """Queue a dispatchable job, ranking its eligible pools now — all
+        parents are terminal at this point, so dataflow locality (the
+        pools holding the parents' output filesets) is known."""
+        if self.placement is not None:
+            opts = self._ensure_opts(job)
+            if not opts:
+                self._fail_infeasible(job)
+                return              # became infeasible (pool set changed)
+            self._rank_of[job.job_id] = self.placement.rank(
+                job.spec, opts, parent_pools=self._parent_pools(job))
+        self._queues[job.queue_key].append(job.job_id)
+
+    def _parent_pools(self, job: Job) -> set[str]:
+        pools = set()
+        for pid in job.spec.depends_on or ():
+            try:
+                parent = self.registry.get(pid)
+            except KeyError:
+                continue
+            if parent.pool:
+                pools.add(parent.pool)
+        return pools
 
     def _resolve_deps(self, job: Job) -> tuple[set[str], Optional[str]]:
         """(unmet parent ids, first already-failed parent or None)."""
@@ -236,7 +323,7 @@ class Scheduler:
                     # queue wait starts at eligibility, not submit: the
                     # parent-hold time is dataflow latency, not queueing
                     self._queued_at[cid] = self._now()
-                    self._queues[child.queue_key].append(cid)
+                    self._enqueue(child)
             else:
                 unmet.discard(parent_id)
                 self._unhold(cid)
@@ -288,20 +375,28 @@ class Scheduler:
         return [(key, jid) for key, jid, _, _ in out]
 
     def _saturated(self) -> bool:
-        """No queued job can possibly fit: some dimension's free capacity
-        is below the smallest charge any submitted job carries."""
-        if self.cluster is None or not self._min_charge:
+        """No queued job can possibly fit anywhere: on every pool some
+        dimension's free capacity is below the smallest charge any of that
+        pool's eligible jobs carries."""
+        if not self._min_charge:
             return False
-        free = self.cluster.free()
-        return any(free[n] + 1e-9 < amt
-                   for n, amt in self._min_charge.items())
+        for pname, cl in self.pools.items():
+            mc = self._min_charge.get(pname)
+            if not mc:
+                continue        # no job was ever eligible on this pool
+            free = cl.free()
+            if not any(free.get(n, 0.0) + 1e-9 < amt
+                       for n, amt in mc.items()):
+                return False    # this pool can still admit its smallest job
+        return True
 
     def _dispatch_once(self) -> bool:
         if self._saturated():
             return False
         launched = False
-        blocked_req = None
-        shadow = spare = None
+        # EASY shadow state is per pool: pool -> [blocked_req, shadow,
+        # spare]; a blocked head throttles only its own preferred pool
+        blocked: dict[str, list] = {}
         quota_used: dict[tuple, int] = {}
         for key, job_id in self._candidates():
             if job_id not in self._queues[key]:
@@ -310,39 +405,67 @@ class Scheduler:
             if used >= self.quota_k:
                 continue
             job = self.registry.get(job_id)
-            charge = self._charge_of.get(job_id)
-            fits = self.cluster is None or self.cluster.fits_charge(charge)
-            if not fits:
-                if blocked_req is None:
-                    blocked_req = charge
-                    shadow, spare = self._shadow_time(blocked_req)
-                if not self.backfill:
-                    break       # convoy: strict order blocks the rest
-                continue
-            if blocked_req is not None:
-                ok, via_spare = self._can_backfill(job, charge, shadow,
-                                                   spare)
-                if not ok:
+            chosen = None
+            backfilled = False
+            if self.placement is not None:
+                opts = self._ensure_opts(job)
+                if not opts:
+                    # pool set changed under a queued job, nothing fits
+                    self._queues[key].remove(job_id)
+                    self._fail_infeasible(job)
                     continue
-                if via_spare:
-                    # this job may still be running at the shadow time:
-                    # consume its share of the spare so later backfill
-                    # candidates cannot collectively delay the blocked job
-                    for n, amt in charge.items():
-                        spare[n] -= amt
-                self.stats["backfilled"] += 1
-            self._launch(key, job)
+                for pname in self._rank_of.get(job_id, ()):
+                    opt = opts[pname]
+                    if not self.pools[pname].fits_charge(opt.charge):
+                        continue
+                    blk = blocked.get(pname)
+                    if blk is not None:
+                        ok, via_spare = self._can_backfill(
+                            job, pname, opt.charge, blk[1], blk[2])
+                        if not ok:
+                            continue
+                        if via_spare:
+                            # this job may still be running at the shadow
+                            # time: consume its share of the spare so later
+                            # backfill candidates cannot collectively delay
+                            # the blocked job
+                            for n, amt in opt.charge.items():
+                                blk[2][n] = blk[2].get(n, 0.0) - amt
+                        backfilled = True
+                    chosen = pname
+                    break
+                if chosen is None:
+                    # fits no pool right now: reserve a shadow start on
+                    # its best-ranked pool (where placement wants it)
+                    top = self._rank_of[job_id][0]
+                    if top not in blocked:
+                        shadow, spare = self._shadow_time(
+                            top, opts[top].charge)
+                        blocked[top] = [opts[top].charge, shadow, spare]
+                    if not self.backfill:
+                        break   # convoy: strict order blocks the rest
+                    continue
+                if backfilled:
+                    self.stats["backfilled"] += 1
+            self._launch(key, job, chosen)
             quota_used[key] = used + 1
             launched = True
             if self._saturated():
                 break
         return launched
 
-    def _launch(self, key: tuple, job: Job) -> None:
+    def _launch(self, key: tuple, job: Job,
+                pool: Optional[str] = None) -> None:
         self._queues[key].remove(job.job_id)
         self._active[key].add(job.job_id)
-        if self.cluster is not None:
-            self.cluster.reserve(job.job_id, job.spec.resources)
+        if pool is not None:
+            opt = self._opts_of[job.job_id][pool]
+            self.pools[pool].reserve(job.job_id, opt.resources)
+            job.pool = pool
+            # pin the concrete shape the job got (a per-pool menu entry),
+            # so runner billing and observers see what was allocated
+            job.spec.resources = dict(opt.resources)
+            self.stats["placed_by_pool"][pool] += 1
         now = self._now()
         self._started_at[job.job_id] = now
         wait = now - self._queued_at.pop(job.job_id, now)
@@ -356,8 +479,9 @@ class Scheduler:
         self.launcher.launch(job)
 
     def _fail_infeasible(self, job: Job) -> None:
-        err = (f"resources {job.spec.resources} exceed cluster capacity "
-               f"{self.cluster.capacity}")
+        err = (f"resources {job.spec.pool_resources or job.spec.resources} "
+               f"exceed cluster capacity on every pool "
+               f"({self.placement.explain_infeasible(job.spec)})")
         self.registry.set_state(job.job_id, JobState.LAUNCHING)
         self.registry.set_state(job.job_id, JobState.FAILED, error=err)
         self.registry.persist_state(job.job_id)
@@ -365,45 +489,56 @@ class Scheduler:
                          {"job_id": job.job_id, "status": "FAILED"})
 
     # -- EASY backfill ---------------------------------------------------
-    def _shadow_time(self, blocked_req: dict) -> tuple[Optional[float],
-                                                       Optional[dict]]:
-        """Earliest time the blocked job fits (shadow start) and the
-        capacity left spare at that instant after it starts. Requires the
-        launcher to expose expected completion times; otherwise backfill
-        stays conservative (disabled for this round)."""
-        if self.cluster is None or \
-                not hasattr(self.launcher, "expected_end"):
+    def _shadow_time(self, pool: str,
+                     blocked_req: dict) -> tuple[Optional[float],
+                                                 Optional[dict]]:
+        """Earliest time the blocked job fits on ``pool`` (shadow start)
+        and the capacity left spare there at that instant after it starts.
+        Requires the launcher to expose expected completion times;
+        otherwise backfill stays conservative (disabled for this round)."""
+        cl = self.pools.get(pool)
+        if cl is None or not hasattr(self.launcher, "expected_end"):
             return None, None
         ends = []
-        for jid, res in self.cluster.reservations().items():
+        for jid, res in cl.reservations().items():
             end = self.launcher.expected_end(jid)
             if end is None:
                 return None, None
             ends.append((end, res))
         ends.sort(key=lambda e: e[0])
-        free = self.cluster.free()
+        free = cl.free()
         for end, res in ends:
             for n, amt in res.items():
-                free[n] += amt
-            if all(free[n] >= blocked_req[n] - 1e-9 for n in blocked_req):
-                spare = {n: free[n] - blocked_req[n] for n in blocked_req}
+                if n in free:
+                    free[n] += amt
+            if all(free.get(n, 0.0) >= blocked_req[n] - 1e-9
+                   for n in blocked_req):
+                spare = {n: free.get(n, 0.0) - blocked_req[n]
+                         for n in blocked_req}
                 return end, spare
         return None, None
 
-    def _can_backfill(self, job: Job, charge: dict,
+    def _can_backfill(self, job: Job, pool: str, charge: dict,
                       shadow: Optional[float],
                       spare: Optional[dict]) -> tuple[bool, bool]:
         """(admit, via_spare): admit if the job provably cannot delay the
-        blocked head — it ends before the shadow start, or it fits into
-        the capacity still spare once the head starts (``via_spare``)."""
+        blocked head on ``pool`` — it ends before the shadow start, or it
+        fits into the capacity still spare once the head starts
+        (``via_spare``). The duration estimate is for THIS pool: a job
+        that is quick on CPU but pays a TPU startup tax must be sized at
+        its TPU runtime when backfilling the TPU pool's hole."""
         if shadow is None:
             return False, False
         dur = None
         if hasattr(self.launcher, "expected_duration"):
-            dur = self.launcher.expected_duration(job)
+            try:
+                dur = self.launcher.expected_duration(job, pool=pool)
+            except TypeError:   # legacy runner without the pool kwarg
+                dur = self.launcher.expected_duration(job)
         if dur is not None and self._now() + dur <= shadow + 1e-9:
             return True, False  # finishes before the blocked job starts
-        return all(charge[n] <= spare[n] + 1e-9 for n in charge), True
+        return all(amt <= spare.get(n, 0.0) + 1e-9
+                   for n, amt in charge.items()), True
 
     # -- terminal events -------------------------------------------------
     def _on_container_status(self, msg: dict) -> None:
@@ -420,27 +555,28 @@ class Scheduler:
             self._dispatch()
 
     def _settle(self, job_id: str, key: tuple) -> None:
-        """Release capacity, free per-job bookkeeping, and charge
-        fair-share usage. Idempotent (a killed virtual job later pops off
-        the clock and publishes KILLED again), and usage/completed only
-        accrue for jobs that actually launched."""
-        if self.cluster is not None:
-            released = self.cluster.release(job_id)
-        else:
-            released = None
+        """Release capacity on the job's pool, free per-job bookkeeping,
+        and charge fair-share usage. Idempotent (a killed virtual job
+        later pops off the clock and publishes KILLED again), and
+        usage/completed only accrue for jobs that actually launched."""
+        job = self.registry.get(job_id)
+        pool_cl = self.pools.get(job.pool) if job.pool else None
+        released = pool_cl.release(job_id) if pool_cl is not None else None
         started_at = self._started_at.pop(job_id, None)
         self._prio_of.pop(job_id, None)
-        self._charge_of.pop(job_id, None)
+        self._opts_of.pop(job_id, None)
+        self._rank_of.pop(job_id, None)
         self._seq_of.pop(job_id, None)
         self._queued_at.pop(job_id, None)
         if started_at is None:
             return          # never launched (queued kill / infeasible)
-        job = self.registry.get(job_id)
         runtime = job.runtime
         if runtime is None:
             runtime = max(0.0, self._now() - started_at)
-        share = self.cluster.dominant_share(released or job.spec.resources) \
-            if self.cluster is not None else 1.0
+        # fair-share usage is the dominant share on the pool the job ran
+        # on: consuming half the TPU pool weighs like half the CPU pool
+        share = pool_cl.dominant_share(released or job.spec.resources) \
+            if pool_cl is not None else 1.0
         self._charge_usage(key, (share if share > 0 else 1.0) * runtime)
         self.stats["completed"] += 1
 
@@ -463,11 +599,12 @@ class Scheduler:
         self._usage_t[key] = now
 
     def _publish_snapshot(self) -> None:
-        if self.cluster is None:
+        if not self.pools:
             return
         self.bus.publish(TOPIC_SCHEDULER, {
             "now": self._now(),
-            "utilization": self.cluster.utilization(),
+            "utilization": self.utilization(),
+            "pools": sorted(self.pools),
             "queued": sum(len(q) for q in self._queues.values()),
             "held": len(self._held),
             "active": sum(len(a) for a in self._active.values()),
@@ -488,7 +625,21 @@ class Scheduler:
             return len(self._held)
 
     def utilization(self) -> dict[str, float]:
-        return self.cluster.utilization() if self.cluster is not None else {}
+        """Per-dimension utilization; in a multi-pool deployment keys are
+        namespaced ``"<pool>/<dim>"`` (the single default pool keeps the
+        flat legacy keys)."""
+        pools = self.pools
+        if not pools:
+            return {}
+        if len(pools) == 1 and "default" in pools:
+            return pools["default"].utilization()
+        return {f"{pname}/{dim}": u
+                for pname in sorted(pools)
+                for dim, u in pools[pname].utilization().items()}
+
+    def pool_utilization(self) -> dict[str, dict[str, float]]:
+        """{pool: {dim: utilization}} across the deployment."""
+        return {pname: cl.utilization() for pname, cl in self.pools.items()}
 
     def mean_queue_wait(self) -> float:
         n = self.stats["wait_count"]

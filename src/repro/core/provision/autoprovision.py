@@ -4,11 +4,18 @@ discrete resource space using the profiler's predictions.
 Two tasks, exactly as the paper:
   optimize runtime  s.t. predicted cost    <= max_cost
   optimize cost     s.t. predicted runtime <= max_runtime
+
+With a pricing *catalog* (``{pool_name: Pricing}``, one per accelerator
+family) the search spans every pool's grid: each candidate is a
+(pool, resources) pair, runtimes come from the pool's model
+(``"<template>@<pool>"`` when profiled, the family-agnostic template
+otherwise), and the decision records which pool won — the provisioning
+half of the placement layer's cost/speed frontier.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Optional, Union
 
 from repro.core.provision.pricing import Pricing
 from repro.core.provision.profiler import Profiler
@@ -22,6 +29,7 @@ class ProvisionDecision:
     # full search table for Fig.16-style visualization / audits
     table: list[dict[str, Any]]
     objective: str
+    pool: str = "default"           # the accelerator family that won
 
     @property
     def feasible(self) -> bool:
@@ -29,34 +37,49 @@ class ProvisionDecision:
 
 
 class AutoProvisioner:
-    def __init__(self, profiler: Profiler, pricing: Pricing):
+    def __init__(self, profiler: Profiler,
+                 pricing: Union[Pricing, dict[str, Pricing]]):
         self.profiler = profiler
-        self.pricing = pricing
+        self.pricing = pricing      # as given (legacy callers read it)
+        self.catalog: dict[str, Pricing] = \
+            pricing if isinstance(pricing, dict) else {"default": pricing}
+
+    def _template_for(self, template_name: str, pool: str) -> str:
+        """The pool's own profiled model when one exists, else the
+        family-agnostic template."""
+        if pool != "default":
+            cand = Profiler.pool_template(template_name, pool)
+            if getattr(self.profiler, "has_model", lambda n: False)(cand):
+                return cand
+        return template_name
 
     def _search(self, template_name: str, values: dict[str, float],
                 *, max_cost: Optional[float], max_runtime: Optional[float],
                 objective: str) -> ProvisionDecision:
         table = []
         best = None
-        for resources in self.pricing.grid():
-            cfg = dict(values)
-            cfg.update(resources)
-            t = self.profiler.predict(template_name, cfg)
-            c = self.pricing.job_cost(resources, t)
-            ok = ((max_cost is None or c <= max_cost)
-                  and (max_runtime is None or t <= max_runtime))
-            table.append({**resources, "runtime": t, "cost": c,
-                          "feasible": ok})
-            if not ok:
-                continue
-            key = t if objective == "runtime" else c
-            if best is None or key < best[0]:
-                best = (key, resources, t, c)
+        for pool, pricing in self.catalog.items():
+            tname = self._template_for(template_name, pool)
+            for resources in pricing.grid():
+                cfg = dict(values)
+                cfg.update(resources)
+                t = self.profiler.predict(tname, cfg)
+                c = pricing.job_cost(resources, t)
+                ok = ((max_cost is None or c <= max_cost)
+                      and (max_runtime is None or t <= max_runtime))
+                table.append({**resources, "pool": pool, "runtime": t,
+                              "cost": c, "feasible": ok})
+                if not ok:
+                    continue
+                key = t if objective == "runtime" else c
+                if best is None or key < best[0]:
+                    best = (key, pool, resources, t, c)
         if best is None:
             return ProvisionDecision({}, float("nan"), float("nan"),
                                      table, objective)
-        _, resources, t, c = best
-        return ProvisionDecision(dict(resources), t, c, table, objective)
+        _, pool, resources, t, c = best
+        return ProvisionDecision(dict(resources), t, c, table, objective,
+                                 pool=pool)
 
     def optimize_runtime(self, template_name: str,
                          values: dict[str, float],

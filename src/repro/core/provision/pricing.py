@@ -9,6 +9,11 @@ Two concrete pricings ship:
                 512–8192 MB (step 256); GCP N1 us-east1 baselines.
   TPU_PRICING — the TPU-pod adaptation: chips 8–512 (powers of two) and
                 per-chip HBM GB; v5e-class on-demand baseline.
+
+A heterogeneous deployment holds one catalog entry per accelerator
+family (``default_catalog()``): the engine builds one capacity pool per
+family and the placement layer scores jobs across them, so each family's
+node shapes and unit prices stay independent.
 """
 from __future__ import annotations
 
@@ -41,8 +46,9 @@ def _steps(lo: float, hi: float, step: float) -> tuple[float, ...]:
 
 
 class Pricing:
-    def __init__(self, dims: list[ResourceDim]):
+    def __init__(self, dims: list[ResourceDim], family: str = "default"):
         self.dims = {d.name: d for d in dims}
+        self.family = family            # accelerator family (pool name)
 
     def job_cost(self, resources: dict[str, Any], runtime_s: float) -> float:
         """Total_cost = sum_r unit_cost(r) * amount(r) * hours (paper §5.1.2)."""
@@ -67,7 +73,7 @@ CPU_PRICING = Pricing([
     ResourceDim("vcpu", 0.5, 8.0, 0.033174, _steps(0.5, 8.0, 0.5)),
     ResourceDim("mem_mb", 512, 8192, 0.004446 / 1024.0,
                 _steps(512, 8192, 256)),
-])
+], family="cpu")
 
 class ChipScaledPricing(Pricing):
     """TPU pricing: secondary dims (per-chip HBM reservation) scale with the
@@ -90,4 +96,11 @@ TPU_PRICING = ChipScaledPricing([
     ResourceDim("chips", 8, 512, 1.20,
                 (8, 16, 32, 64, 128, 256, 512)),
     ResourceDim("hbm_gb", 2, 16, 0.02, _steps(2, 16, 2)),
-])
+], family="tpu")
+
+
+def default_catalog() -> dict[str, "Pricing"]:
+    """One pricing per accelerator family — the pool catalog the engine
+    turns into a heterogeneous deployment (``pricing=default_catalog()``,
+    one ``Cluster`` per entry, placement choosing among them)."""
+    return {"cpu": CPU_PRICING, "tpu": TPU_PRICING}

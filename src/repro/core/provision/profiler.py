@@ -137,3 +137,22 @@ class Profiler:
     # the "endpoint for querying the runtime of a command template"
     def predict(self, template_name: str, config: dict[str, float]) -> float:
         return self.models[template_name].predict(config)
+
+    def has_model(self, template_name: str) -> bool:
+        return template_name in self.models
+
+    # -- heterogeneous pools ---------------------------------------------
+    # Per-family runtime models are plain templates named
+    # "<template>@<pool>" (fit them with profile()/fit_offline() on that
+    # pool's resource dims); placement and the auto-provisioner fall back
+    # to the family-agnostic model when a pool was never profiled.
+    @staticmethod
+    def pool_template(template_name: str, pool: str) -> str:
+        return f"{template_name}@{pool}"
+
+    def predict_for_pool(self, template_name: str, pool: str,
+                         config: dict[str, float]) -> float:
+        name = self.pool_template(template_name, pool)
+        if name not in self.models:
+            name = template_name
+        return self.models[name].predict(config)

@@ -1,0 +1,395 @@
+"""Placement layer: pool eligibility, profiler-fed cost/speed scoring,
+dataflow-locality co-placement, per-pool EASY backfill, fail-fast
+infeasibility, and the catalog-aware auto-provisioner."""
+import pytest
+
+from repro.core.acai import AcaiEngine
+from repro.core.engine.cluster import Cluster
+from repro.core.engine.dashboard import scheduler_page
+from repro.core.engine.events import EventBus, TOPIC_SCHEDULER
+from repro.core.engine.launcher import VirtualRunner
+from repro.core.engine.lifecycle import JobState
+from repro.core.engine.monitor import JobMonitor
+from repro.core.engine.placement import Placement
+from repro.core.engine.registry import JobRegistry, JobSpec
+from repro.core.engine.scheduler import Scheduler
+from repro.core.provision.autoprovision import AutoProvisioner
+from repro.core.provision.pricing import (CPU_PRICING, TPU_PRICING,
+                                          default_catalog)
+from repro.core.provision.profiler import CommandTemplate, Profiler
+
+
+def _spec(name="j", user="u", duration=1.0, **kw):
+    return JobSpec(name=name, project="p", user=user, duration=duration,
+                   **kw)
+
+
+def _hetero_pools():
+    return {"cpu": Cluster({"vcpu": 8.0, "mem_mb": 8192.0},
+                           {"vcpu": 0.5, "mem_mb": 512.0}, name="cpu"),
+            "tpu": Cluster({"chips": 16.0}, {"chips": 8.0}, name="tpu")}
+
+
+def _engine(placement, quota_k=100, policy="fair", backfill=True,
+            oracle=None):
+    registry = JobRegistry()
+    bus = EventBus()
+    runner = VirtualRunner(registry, bus, oracle=oracle)
+    sched = Scheduler(registry, runner, bus, quota_k=quota_k,
+                      placement=placement, policy=policy, backfill=backfill)
+    return registry, bus, runner, sched
+
+
+def _submit(registry, sched, spec):
+    job = registry.submit(spec)
+    sched.submit(job)
+    return job
+
+
+def _track_starts(runner):
+    starts = {}
+    orig = runner.launch
+
+    def launch(job):
+        starts[job.job_id] = runner.now
+        orig(job)
+    runner.launch = launch
+    return starts
+
+
+# -- eligibility -------------------------------------------------------
+def test_eligibility_resource_dims_select_family():
+    pl = Placement(_hetero_pools())
+    # plain resources tried on every pool; unknown dims reject
+    assert set(pl.eligible(_spec(resources={"vcpu": 2}))) == {"cpu"}
+    assert set(pl.eligible(_spec(resources={"chips": 8}))) == {"tpu"}
+    # an explicit per-pool menu is authoritative
+    both = _spec(pool_resources={"cpu": {"vcpu": 2.0},
+                                 "tpu": {"chips": 8.0}})
+    assert set(pl.eligible(both)) == {"cpu", "tpu"}
+    only = _spec(pool_resources={"tpu": {"chips": 8.0}})
+    assert set(pl.eligible(only)) == {"tpu"}
+    # pool pin restricts further
+    pinned = _spec(resources={"vcpu": 2}, pool="tpu")
+    assert pl.eligible(pinned) == {}
+
+
+# -- profiler-fed pool selection ---------------------------------------
+def _flex_spec(name="flex", work=100.0, duration=1.0, **kw):
+    return _spec(name, duration=duration, template="work",
+                 args={"work": work},
+                 pool_resources={"cpu": {"vcpu": 2.0, "mem_mb": 512.0},
+                                 "tpu": {"chips": 8.0}}, **kw)
+
+
+def _fit_pool_models():
+    """cpu model: runtime = work; tpu model: runtime = work / 4."""
+    prof = Profiler(engine=None)
+    works = [10.0, 50.0, 100.0, 400.0]
+    cpu_t = CommandTemplate("work@cpu", {"work": works},
+                            {"vcpu": [0.5, 2.0], "mem_mb": [512.0, 2048.0]})
+    grid = cpu_t.grid()
+    prof.fit_offline(cpu_t, grid, [c["work"] for c in grid])
+    tpu_t = CommandTemplate("work@tpu", {"work": works},
+                            {"chips": [8.0, 16.0]})
+    grid = tpu_t.grid()
+    prof.fit_offline(tpu_t, grid, [c["work"] / 4.0 for c in grid])
+    return prof
+
+
+def test_pool_selection_follows_profiler_predictions():
+    """objective='runtime' sends the job to the pool the profiler says is
+    faster; flipping the models flips the pool."""
+    pl = Placement(_hetero_pools(), objective="runtime")
+    pl.use_profiler(_fit_pool_models())
+    registry, bus, runner, sched = _engine(pl)
+    j = _submit(registry, sched, _flex_spec())
+    assert registry.get(j.job_id).pool == "tpu"   # 4x faster there
+    # flipped predictor: cpu now predicted faster
+    pl2 = Placement(_hetero_pools(), objective="runtime",
+                    predictor=lambda spec, pool, res:
+                        1.0 if pool == "cpu" else 50.0)
+    registry2, _, _, sched2 = _engine(pl2)
+    j2 = _submit(registry2, sched2, _flex_spec())
+    assert registry2.get(j2.job_id).pool == "cpu"
+
+
+def test_cost_objective_uses_pool_pricing():
+    """With objective='cost', the expensive-but-fast pool loses when the
+    predicted runtime saving does not offset its price."""
+    catalog = {"cpu": CPU_PRICING, "tpu": TPU_PRICING}
+    pl = Placement(_hetero_pools(), pricing=catalog, objective="cost")
+    pl.use_profiler(_fit_pool_models())
+    registry, bus, runner, sched = _engine(pl)
+    # work=100s: cpu cost ~ 100s * ~0.07/hr vs tpu 25s * ~6.6/hr
+    j = _submit(registry, sched, _flex_spec(work=100.0))
+    job = registry.get(j.job_id)
+    assert job.pool == "cpu"
+    assert job.state == JobState.RUNNING
+
+
+# -- dataflow locality -------------------------------------------------
+def test_locality_coplaces_child_with_parent_pool():
+    """Two symmetric pools: the child of a stage that ran on pool 'b' is
+    co-placed there (locality discount breaks the tie)."""
+    pools = {"a": Cluster({"slot": 4.0}, {"slot": 1.0}, name="a"),
+             "b": Cluster({"slot": 4.0}, {"slot": 1.0}, name="b")}
+    registry, bus, runner, sched = _engine(Placement(pools))
+    parent = _submit(registry, sched, _spec(
+        "parent", pool="b", resources={"slot": 1}))
+    child_spec = _spec("child", pool_resources={"a": {"slot": 1.0},
+                                                "b": {"slot": 1.0}})
+    child_spec.depends_on = [parent.job_id]
+    child = _submit(registry, sched, child_spec)
+    sched.run_to_completion()
+    assert registry.get(parent.job_id).pool == "b"
+    assert registry.get(child.job_id).pool == "b"
+    assert registry.get(child.job_id).state == JobState.FINISHED
+
+
+def test_without_parents_tie_breaks_deterministically():
+    pools = {"a": Cluster({"slot": 4.0}, {"slot": 1.0}, name="a"),
+             "b": Cluster({"slot": 4.0}, {"slot": 1.0}, name="b")}
+    registry, bus, runner, sched = _engine(Placement(pools))
+    j = _submit(registry, sched, _spec(
+        "solo", pool_resources={"a": {"slot": 1.0}, "b": {"slot": 1.0}}))
+    assert registry.get(j.job_id).pool == "a"     # name tie-break
+
+
+# -- fail-fast infeasibility -------------------------------------------
+def test_no_pool_fits_fails_fast_with_clear_error():
+    registry, bus, runner, sched = _engine(Placement(_hetero_pools()))
+    j = _submit(registry, sched, _spec(
+        "huge", pool_resources={"cpu": {"vcpu": 64.0},
+                                "tpu": {"chips": 512.0}}))
+    job = registry.get(j.job_id)
+    assert job.state == JobState.FAILED
+    assert "exceed cluster capacity on every pool" in job.error
+    assert "cpu" in job.error and "tpu" in job.error
+    # dependents of the infeasible job cascade instead of hanging
+    child_spec = _spec("child", resources={"vcpu": 1})
+    child_spec.depends_on = [j.job_id]
+    child = _submit(registry, sched, child_spec)
+    assert registry.get(child.job_id).state == JobState.UPSTREAM_FAILED
+
+
+def test_pin_to_unknown_pool_fails_fast():
+    registry, bus, runner, sched = _engine(Placement(_hetero_pools()))
+    j = _submit(registry, sched, _spec(
+        "ghost", resources={"vcpu": 1}, pool="gpu"))
+    job = registry.get(j.job_id)
+    assert job.state == JobState.FAILED
+    assert "gpu" in job.error
+
+
+# -- per-pool EASY backfill --------------------------------------------
+def test_backfill_is_per_pool_and_never_delays_blocked_head():
+    """Pool 'a' has a blocked head with shadow t=10; a short job backfills
+    into 'a', a long 'a' job must wait, and a flexible long job routes to
+    pool 'b' instead of waiting — the blocked head still starts at t=10."""
+    pools = {"a": Cluster({"slot": 4.0}, {"slot": 0.0}, name="a"),
+             "b": Cluster({"slot": 4.0}, {"slot": 0.0}, name="b")}
+    registry, bus, runner, sched = _engine(Placement(pools))
+    starts = _track_starts(runner)
+    _submit(registry, sched, _spec("A", duration=10.0, pool="a",
+                                   resources={"slot": 3}))
+    blocked = _submit(registry, sched, _spec("B", duration=5.0, pool="a",
+                                             resources={"slot": 4}))
+    short = _submit(registry, sched, _spec("C", duration=2.0, pool="a",
+                                           resources={"slot": 1}))
+    long_a = _submit(registry, sched, _spec("D", duration=50.0, pool="a",
+                                            resources={"slot": 1}))
+    flex = _submit(registry, sched, _spec(
+        "E", duration=50.0, pool_resources={"a": {"slot": 1.0},
+                                            "b": {"slot": 1.0}}))
+    assert registry.get(short.job_id).state == JobState.RUNNING
+    assert registry.get(long_a.job_id).state == JobState.QUEUED
+    assert registry.get(flex.job_id).state == JobState.RUNNING
+    assert registry.get(flex.job_id).pool == "b"    # escaped the convoy
+    sched.run_to_completion()
+    assert starts[blocked.job_id] == pytest.approx(10.0)  # not delayed
+    assert starts[short.job_id] == pytest.approx(0.0)
+    assert starts[long_a.job_id] >= 10.0
+    assert starts[flex.job_id] == pytest.approx(0.0)
+    assert sched.stats["backfilled"] == 1
+
+
+def test_backfill_estimate_uses_candidate_pool_runtime():
+    """A job that is quick generically but slow on the blocked pool must
+    be sized at the POOL's runtime — admitting it on the generic estimate
+    would delay the blocked head past its shadow start."""
+    pools = {"a": Cluster({"slot": 4.0}, {"slot": 0.0}, name="a")}
+
+    def oracle(job):
+        return 60.0 if job.pool == "a" else 2.0   # startup tax on 'a'
+    registry, bus, runner, sched = _engine(Placement(pools), oracle=oracle)
+    starts = _track_starts(runner)
+    _submit(registry, sched, _spec("A", duration=10.0,
+                                   resources={"slot": 3}))
+    blocked = _submit(registry, sched, _spec("B", duration=5.0,
+                                             resources={"slot": 4}))
+    tricky = _submit(registry, sched, _spec("C", duration=None,
+                                            resources={"slot": 1}))
+    # 60s on pool 'a' > shadow t=10 and no spare: must NOT backfill
+    assert registry.get(tricky.job_id).state == JobState.QUEUED
+    sched.run_to_completion()
+    assert starts[blocked.job_id] == pytest.approx(10.0)  # not delayed
+    assert registry.get(tricky.job_id).runtime == pytest.approx(60.0)
+
+
+def test_blocked_head_on_one_pool_does_not_throttle_the_other():
+    pools = {"a": Cluster({"slot": 1.0}, {"slot": 0.0}, name="a"),
+             "b": Cluster({"slot": 1.0}, {"slot": 0.0}, name="b")}
+    registry, bus, runner, sched = _engine(Placement(pools))
+    _submit(registry, sched, _spec("hog", duration=100.0, pool="a",
+                                   resources={"slot": 1}))
+    _submit(registry, sched, _spec("blocked", duration=1.0, pool="a",
+                                   resources={"slot": 1}))
+    other = _submit(registry, sched, _spec("other", duration=1.0, pool="b",
+                                           resources={"slot": 1}))
+    assert registry.get(other.job_id).state == JobState.RUNNING
+
+
+# -- pool-aware oracle + billing ---------------------------------------
+def test_pool_dependent_oracle_and_pricing():
+    """The virtual runner re-draws the duration for the pool placement
+    chose, and bills through that pool's catalog entry."""
+    catalog = {"cpu": CPU_PRICING, "tpu": TPU_PRICING}
+
+    def oracle(job):
+        return 40.0 if job.pool == "tpu" else 160.0
+    pl = Placement(_hetero_pools(), pricing=catalog, objective="runtime",
+                   predictor=lambda spec, pool, res:
+                       40.0 if pool == "tpu" else 160.0)
+    registry = JobRegistry()
+    bus = EventBus()
+    runner = VirtualRunner(registry, bus, oracle=oracle, pricing=catalog)
+    sched = Scheduler(registry, runner, bus, quota_k=10, placement=pl)
+    j = _submit(registry, sched, _flex_spec("flex", duration=None))
+    sched.run_to_completion()
+    job = registry.get(j.job_id)
+    assert job.pool == "tpu"
+    assert job.runtime == pytest.approx(40.0)     # the tpu draw, not cpu
+    assert job.cost == pytest.approx(
+        TPU_PRICING.job_cost({"chips": 8.0}, 40.0))
+
+
+# -- observability -----------------------------------------------------
+def test_multi_pool_metrics_and_dashboard():
+    pl = Placement(_hetero_pools())
+    registry, bus, runner, sched = _engine(pl)
+    monitor = JobMonitor(bus)
+    _submit(registry, sched, _spec("c", resources={"vcpu": 4}))
+    _submit(registry, sched, _spec("t", resources={"chips": 8}))
+    sched.run_to_completion()
+    # snapshots namespace dimensions per pool
+    assert any("cpu/vcpu" in msg.get("utilization", {})
+               for t, msg in bus.history if t == TOPIC_SCHEDULER)
+    by_pool = monitor.utilization_by_pool()
+    assert by_pool["cpu"]["vcpu"]["peak"] > 0.0
+    assert by_pool["tpu"]["chips"]["peak"] > 0.0
+    page = scheduler_page(sched, monitor)
+    assert "cpu" in page and "tpu" in page and "placed" in page
+    assert sched.stats["placed_by_pool"] == {"cpu": 1, "tpu": 1}
+
+
+# -- legacy cluster reassignment ---------------------------------------
+def test_cluster_reassignment_invalidates_placement_caches():
+    """Swapping ``scheduler.cluster`` after jobs queued must re-derive
+    their pool options instead of dispatching on stale rankings."""
+    registry = JobRegistry()
+    bus = EventBus()
+    runner = VirtualRunner(registry, bus)
+    sched = Scheduler(registry, runner, bus, quota_k=10,
+                      cluster=Cluster({"vcpu": 1.0}, {"vcpu": 0.5}))
+    _submit(registry, sched, _spec("hog", duration=100.0,
+                                   resources={"vcpu": 1}))
+    waiting = _submit(registry, sched, _spec("w", duration=1.0,
+                                             resources={"vcpu": 1}))
+    assert registry.get(waiting.job_id).state == JobState.QUEUED
+    sched.cluster = Cluster({"vcpu": 4.0}, {"vcpu": 0.5}, name="newpool")
+    sched._maybe_launch()
+    job = registry.get(waiting.job_id)
+    assert job.state == JobState.RUNNING
+    assert job.pool == "newpool"
+
+
+def test_cluster_swap_fails_held_dependent_that_no_longer_fits():
+    registry = JobRegistry()
+    bus = EventBus()
+    runner = VirtualRunner(registry, bus)
+    sched = Scheduler(registry, runner, bus, quota_k=10)   # unconstrained
+    parent = _submit(registry, sched, _spec("parent", duration=5.0))
+    child_spec = _spec("child", resources={"tpu": 8})
+    child_spec.depends_on = [parent.job_id]
+    child = _submit(registry, sched, child_spec)
+    sched.cluster = Cluster({"vcpu": 4.0}, {"vcpu": 0.5})
+    sched.run_to_completion()
+    assert registry.get(parent.job_id).state == JobState.FINISHED
+    child_job = registry.get(child.job_id)
+    assert child_job.state == JobState.FAILED     # not a crash, not a hang
+    assert "tpu" in child_job.error
+
+
+# -- engine assembly ---------------------------------------------------
+def test_acai_engine_builds_pools_from_catalog():
+    eng = AcaiEngine(pricing=default_catalog(), virtual=True,
+                     cluster_nodes={"cpu": 2, "tpu": 1}, quota_k=10)
+    assert set(eng.pools) == {"cpu", "tpu"}
+    h_cpu = eng.submit(JobSpec(name="c", project="p", user="u",
+                               duration=1.0, resources={"vcpu": 2}))
+    h_tpu = eng.submit(JobSpec(name="t", project="p", user="u",
+                               duration=1.0, resources={"chips": 8}))
+    assert h_cpu.wait() == JobState.FINISHED
+    assert h_tpu.wait() == JobState.FINISHED
+    assert h_cpu.job.pool == "cpu" and h_tpu.job.pool == "tpu"
+    # infeasible everywhere -> terminal FAILED handle, not a hang
+    h_bad = eng.submit(JobSpec(name="x", project="p", user="u",
+                               duration=1.0, resources={"gpu": 4}))
+    assert h_bad.wait() == JobState.FAILED
+
+
+def test_catalog_without_nodes_is_refused():
+    """A pricing catalog with no way to build pools must not silently
+    produce an unconstrained engine billing through an arbitrary entry."""
+    with pytest.raises(ValueError, match="cluster_nodes"):
+        AcaiEngine(pricing=default_catalog(), virtual=True)
+
+
+# -- CLI ---------------------------------------------------------------
+def test_cli_pool_pin_requires_placement(tmp_path, capsys):
+    """`submit --pool` on a deployment without a placement layer must
+    refuse instead of silently dropping the pin."""
+    from repro.core import cli
+    assert cli.main(["--root", str(tmp_path), "init", "proj"]) == 0
+    tok = capsys.readouterr().out.strip()
+    rc = cli.main(["--root", str(tmp_path), "--token", tok,
+                   "submit", "j", "--fn", "json:dumps", "--pool", "tpu"])
+    assert rc == 2
+    assert "pools deployment" in capsys.readouterr().err
+    # malformed --resource exits cleanly too (no traceback)
+    rc = cli.main(["--root", str(tmp_path), "--token", tok,
+                   "submit", "j", "--fn", "json:dumps",
+                   "--resource", "chips"])
+    assert rc == 2
+    assert "DIM=AMOUNT" in capsys.readouterr().err
+
+
+# -- catalog-aware auto-provisioner ------------------------------------
+def test_autoprovisioner_searches_across_pools():
+    prof = _fit_pool_models()
+    # alias the per-pool models under the names the provisioner derives
+    prof.models["mnist@cpu"] = prof.models["work@cpu"]
+    prof.models["mnist@tpu"] = prof.models["work@tpu"]
+    prof.models["mnist"] = prof.models["work@cpu"]
+    ap = AutoProvisioner(prof, {"cpu": CPU_PRICING, "tpu": TPU_PRICING})
+    dec = ap.optimize_cost("mnist", {"work": 100.0}, max_runtime=1e6)
+    assert dec.feasible
+    assert dec.pool == "cpu"                   # tpu chips price it out
+    assert {r["pool"] for r in dec.table} == {"cpu", "tpu"}
+    dec_rt = ap.optimize_runtime("mnist", {"work": 100.0}, max_cost=1e6)
+    assert dec_rt.pool == "tpu"                # 4x faster wins runtime
+    # single-pricing callers keep the legacy shape
+    dec_one = AutoProvisioner(prof, CPU_PRICING).optimize_cost(
+        "mnist", {"work": 100.0}, max_runtime=1e6)
+    assert dec_one.pool == "default" and dec_one.feasible

@@ -101,6 +101,31 @@ def test_infeasible_job_fails_fast():
     assert "exceed cluster capacity" in job.error
 
 
+# -- unknown-dimension charge bugfix -----------------------------------
+def test_charge_keeps_unknown_dimensions_and_rejects():
+    """A job requesting a dimension the cluster does not have (tpu on a
+    CPU-only cluster) must not be admitted as if the request were free."""
+    cl = Cluster({"vcpu": 4.0}, {"vcpu": 0.5})
+    charge = cl.charge({"vcpu": 1, "tpu": 8})
+    assert charge["tpu"] == 8.0              # kept, not dropped
+    assert not cl.fits({"vcpu": 1, "tpu": 8})
+    assert not cl.ever_fits({"vcpu": 1, "tpu": 8})
+    with pytest.raises(CapacityError):
+        cl.reserve("a", {"vcpu": 1, "tpu": 8})
+    assert cl.used["vcpu"] == 0.0            # nothing leaked
+    # a zero-amount unknown dimension is harmless
+    assert cl.ever_fits({"vcpu": 1, "tpu": 0})
+
+
+def test_unknown_resource_dim_fails_fast_at_submit():
+    cl = Cluster({"vcpu": 4.0}, {"vcpu": 0.5})
+    registry, bus, runner, sched = _engine(cluster=cl)
+    j = _submit(registry, sched, _spec(resources={"vcpu": 1, "tpu": 8}))
+    job = registry.get(j.job_id)
+    assert job.state == JobState.FAILED
+    assert "tpu" in job.error and "exceed cluster capacity" in job.error
+
+
 # -- EASY backfill -----------------------------------------------------
 def _track_starts(runner):
     starts = {}
