@@ -141,7 +141,12 @@ class Cluster:
     def dominant_share(self, resources: Optional[dict[str, Any]]) -> float:
         """DRF-style dominant share of one job's charge — the fair-share
         accounting unit (usage = dominant_share x runtime)."""
-        req = self.charge(resources)
+        return self.dominant_share_charge(self.charge(resources))
+
+    def dominant_share_charge(self, req: dict[str, float]) -> float:
+        """Dominant share of an already-normalized charge (the scheduler
+        settles with the reservation it released, which *is* a charge —
+        re-normalizing it through ``charge()`` is an identity walk)."""
         shares = [amt / self.capacity[n] for n, amt in req.items()
                   if self.capacity.get(n, 0.0) > 0]
         return max(shares) if shares else 0.0

@@ -85,7 +85,9 @@ def scheduler_page(scheduler, monitor=None) -> str:
         for key in keys:
             count, total = scheduler.stats["wait_by_key"].get(key, (0, 0.0))
             mean_w = total / count if count else 0.0
-            depth = len(scheduler._queues.get(key, ()))
+            # live depth, not raw deque length: launched/killed jobs leave
+            # tombstones in the deque until they are compacted away
+            depth = scheduler._qlen.get(key, 0)
             active = len(scheduler._active.get(key, ()))
             lines.append(f"| {key} | {depth} | {active} | {count} "
                          f"| {mean_w:.2f} |")
@@ -94,6 +96,10 @@ def scheduler_page(scheduler, monitor=None) -> str:
                      f"completed={s['completed']} "
                      f"backfilled={s['backfilled']} "
                      f"mean_queue_wait={scheduler.mean_queue_wait():.2f}s")
+        if s.get("snapshots_skipped"):
+            lines.append(f"snapshots={s['snapshots']} "
+                         f"coalesced={s['snapshots_skipped']} "
+                         f"(interval={scheduler.snapshot_interval:g}s)")
     if monitor is not None and monitor.cluster_samples:
         peak = monitor.peak_utilization()
         mean = monitor.mean_utilization()

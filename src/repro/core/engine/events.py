@@ -7,6 +7,14 @@ utilization / queue-depth snapshots from the capacity scheduler).
 Synchronous delivery keeps the engine deterministic for tests; a real
 deployment swaps this for Redis without changing publishers/subscribers.
 
+``history`` is a bounded ring buffer (``history_limit`` most recent
+messages) — a long-lived engine publishes one event per state transition
+per job, so an unbounded log would grow O(total events) for the life of
+the process. Each publish snapshots the message exactly once; the same
+frozen dict is appended to history and handed to every subscriber, so
+messages must be treated as immutable after publish (subscribers that
+need a private mutable copy make their own).
+
 Publish/subscribe are thread-safe for the ThreadPoolRunner's workers;
 handlers are invoked outside the bus lock (handlers take their own locks,
 and holding the bus lock across them would invert lock order).
@@ -14,18 +22,20 @@ and holding the bus lock across them would invert lock order).
 from __future__ import annotations
 
 import threading
-from collections import defaultdict
+from collections import defaultdict, deque
 from typing import Any, Callable
 
 TOPIC_CONTAINER_STATUS = "container_status"
 TOPIC_JOB_PROGRESS = "job_progress"
 TOPIC_SCHEDULER = "scheduler_metrics"
 
+DEFAULT_HISTORY_LIMIT = 10_000
+
 
 class EventBus:
-    def __init__(self):
+    def __init__(self, history_limit: int = DEFAULT_HISTORY_LIMIT):
         self._subs: dict[str, list[Callable[[dict], None]]] = defaultdict(list)
-        self.history: list[tuple[str, dict]] = []
+        self.history: deque[tuple[str, dict]] = deque(maxlen=history_limit)
         self._lock = threading.RLock()
 
     def subscribe(self, topic: str, fn: Callable[[dict], None]) -> None:
@@ -33,8 +43,12 @@ class EventBus:
             self._subs[topic].append(fn)
 
     def publish(self, topic: str, msg: dict) -> None:
+        # one defensive copy per publish (the caller may reuse/mutate its
+        # dict); history and every subscriber share that copy instead of
+        # re-copying per consumer
+        msg = dict(msg)
         with self._lock:
-            self.history.append((topic, dict(msg)))
+            self.history.append((topic, msg))
             subs = list(self._subs[topic])
         for fn in subs:
-            fn(dict(msg))
+            fn(msg)

@@ -59,6 +59,11 @@ class Runner:
     # asynchronously); JobHandle.wait blocks on the bus instead of stepping
     threaded = False
 
+    # runner-clock time, or None to fall back to wall time: the virtual
+    # runner advances this; schedulers read it for queue-wait accounting,
+    # fair-share decay and backfill math
+    now: Optional[float] = None
+
     def launch(self, job: Job) -> None:
         raise NotImplementedError
 
@@ -66,11 +71,20 @@ class Runner:
     def expected_duration(self, job: Job,
                           pool: Optional[str] = None) -> Optional[float]:
         """Best-effort runtime estimate for backfill — on ``pool`` when
-        the scheduler is sizing a specific pool's hole; None if unknown."""
+        the scheduler is sizing a specific pool's hole; None if unknown.
+        Must be a pure read when ``job.spec.duration`` is declared (the
+        scheduler may then consult it eagerly at enqueue); estimates that
+        draw from an oracle are only requested from inside a dispatch
+        scan, and are drawn once per (job, pool)."""
         return job.spec.duration
 
     def expected_end(self, job_id: str) -> Optional[float]:
-        """Expected completion time of a running job; None if unknown."""
+        """Expected completion time of a running job; None if unknown.
+        The scheduler reads this once, immediately after ``launch``, to
+        feed the pool's incrementally-maintained shadow state — the
+        estimate must therefore be available synchronously at launch (the
+        virtual runner schedules the completion inside ``launch``) and
+        stay fixed for the life of the job."""
         return None
 
 

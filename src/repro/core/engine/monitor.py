@@ -23,10 +23,16 @@ class JobMonitor:
         self.cluster_samples: list[dict] = []
         self.max_samples = max_samples
         # running aggregates at ingest: the sample buffer is trimmed, so
-        # peak/mean must not be recomputed from it
+        # peak/mean must not be recomputed from it. samples_seen counts
+        # every snapshot ever received (the scheduler coalesces them
+        # behind a change gate + snapshot_interval, so cadence is a
+        # deployment knob worth observing), and last_sample_at is the
+        # runner-clock time of the freshest one
         self._peak: dict[str, float] = {}
         self._util_sum: dict[str, float] = defaultdict(float)
         self._util_n = 0
+        self.samples_seen = 0
+        self.last_sample_at: Optional[float] = None
         # JobHandle.wait blocks on this instead of polling: any terminal
         # container_status wakes every waiter, each re-checks its own job
         self._terminal_cv = threading.Condition()
@@ -59,6 +65,8 @@ class JobMonitor:
 
     def _on_scheduler(self, msg: dict) -> None:
         self.cluster_samples.append(msg)
+        self.samples_seen += 1
+        self.last_sample_at = msg.get("now", self.last_sample_at)
         util = msg.get("utilization", {})
         if util:
             self._util_n += 1

@@ -148,6 +148,11 @@ class Placement:
     def rank(self, spec, options: dict[str, PoolOption],
              parent_pools: set[str] = frozenset()) -> list[str]:
         """Pool names ordered best-first (lowest score)."""
+        if len(options) == 1:
+            # a single eligible pool ranks as itself: skip the predictor
+            # and pricing walk entirely (the homogeneous-deployment hot
+            # path — every submit ranks, so this is per-job overhead)
+            return list(options)
         for opt in options.values():
             self._score_one(spec, opt, parent_pools)
         return sorted(options, key=lambda p: (options[p].score,

@@ -28,6 +28,24 @@ dispatch, and a flexible job whose best pool is blocked simply takes its
 next-ranked pool. With ``policy="fifo"`` the scheduler degrades to a
 strict global-submission-order convoy (the benchmark baseline).
 
+Dispatch is *incremental* (see docs/engine.md "Dispatch internals &
+complexity"): the per-event hot path never rebuilds the world. Per-queue
+candidate slices are cached sorted by ``(-priority, seq)`` and merged
+lazily through a heap keyed by ``(-priority, decayed_share, seq)``, so a
+pass only pays for the candidates it actually examines and only queues
+whose contents/headroom changed re-sort. Queue deletion is tombstoned
+(``kill``/launch are O(1) amortized instead of ``deque.remove``'s O(n)).
+Per-pool EASY shadow state — the sorted expected-end list and the free
+capacity it walks — is maintained incrementally on launch/terminal
+instead of re-copying and re-sorting every reservation each round, and
+the ``_min_charge`` saturation bound is a set of per-pool per-dimension
+min-heaps over *live* queued charges (lazily pruned), so it tightens as
+small jobs drain instead of going monotonically stale. Scheduler
+snapshots are coalesced behind a change gate plus an optional
+``snapshot_interval``. All of this is decision-preserving: the replay
+equivalence tests assert bit-identical launch order and pool assignment
+against traces recorded before the incremental core landed.
+
 Dependency gating (the pipeline SDK's dataflow layer): a job whose
 ``spec.depends_on`` names unfinished parents is *held* — QUEUED in the
 registry but absent from every dispatch queue, so it never enters the
@@ -52,8 +70,11 @@ straggler-mitigation policy.
 """
 from __future__ import annotations
 
+import heapq
+import inspect
 import threading
 import time
+from bisect import bisect_left, insort
 from collections import defaultdict, deque
 from typing import Optional
 
@@ -74,13 +95,60 @@ class QueueConfig:
         self.weight = max(weight, 1e-9)
 
 
+class _Window:
+    """A queue's candidate window, maintained incrementally.
+
+    ``rows`` always holds the queue's first ``min(live, maxdepth)`` live
+    jobs in arrival order as sort-keyed tuples (``(-priority, seq, jid,
+    dispatch-records)`` under fair, ``(seq, jid, records)`` under fifo);
+    jobs beyond it wait in the queue's tail deque and are promoted as the
+    window drains, so a dispatch pass slices instead of rescanning the
+    queue. ``fast`` means arrival order already equals candidate sort
+    order (uniform priority, monotone seqs — the common case), making
+    the slice the sorted window.
+
+    ``agg``/``pdurs`` are the window-level rejection certificate (see
+    ``_dispatch_once``). Minima are updated exactly on insert and left
+    stale-but-conservative on removal (a too-small minimum only makes
+    the certificate *less* willing to skip, never wrong); a full
+    recompute runs every 64 mutations to restore tightness.
+    """
+
+    __slots__ = ("rows", "ids", "fast", "per_depth",
+                 "muts", "stale", "agg", "pdurs", "pdur_of")
+
+    def __init__(self):
+        self.rows: list = []
+        self.ids: set = set()
+        self.fast = True
+        self.per_depth: Optional[dict] = None
+        self.muts = 0
+        self.stale = False
+        # per-pool window certificate: {pool: [per-dim minimum charge,
+        # minimum expected duration, unprobed count, live member count]}
+        # — when a pool is blocked and both backfill paths are provably
+        # dead for every member, candidates eligible only there reject
+        # wholesale. Durations fold in eagerly only when declared
+        # statically (oracle draws must stay at the launcher's own probe
+        # points); unknown estimates keep duration certificates off via
+        # the unprobed count, and member counts drop a pool the moment
+        # no live member references it. None = voided (unknown member).
+        self.agg: Optional[dict] = {}
+        # per-pool duration index: {pool: [(dur, -prio, seq, jid, recs)]}
+        # sorted by dur, so a spare-dead pass enumerates only the
+        # candidates that could still backfill by finishing early
+        self.pdurs: dict = {}
+        self.pdur_of: dict = {}
+
+
 class Scheduler:
     def __init__(self, registry: JobRegistry, launcher, bus: EventBus,
                  quota_k: int = 2, *, cluster: Optional[Cluster] = None,
                  placement: Optional[Placement] = None,
                  policy: str = "fair", backfill: bool = True,
                  backfill_depth: int = 100,
-                 usage_halflife: Optional[float] = None):
+                 usage_halflife: Optional[float] = None,
+                 snapshot_interval: float = 0.0):
         if policy not in ("fair", "fifo"):
             raise ValueError(f"unknown policy {policy!r}")
         if cluster is not None and placement is not None:
@@ -93,6 +161,9 @@ class Scheduler:
         self.backfill = backfill and policy == "fair"
         self.backfill_depth = backfill_depth
         self.usage_halflife = usage_halflife
+        # snapshot coalescing: 0.0 publishes on every state change; > 0
+        # rate-limits to one snapshot per interval of runner-clock seconds
+        self.snapshot_interval = snapshot_interval
         self._queues: dict[tuple, deque[str]] = defaultdict(deque)
         self._active: dict[tuple, set[str]] = defaultdict(set)
         self._qconf: dict[tuple, QueueConfig] = defaultdict(QueueConfig)
@@ -104,25 +175,74 @@ class Scheduler:
         self._dependents: dict[str, set[str]] = defaultdict(set)
         self._seq_of: dict[str, int] = {}
         self._seq = 0
-        # dispatch-scan caches: priority, eligible pool options and pool
-        # ranking per queued job, plus per-pool per-dim lower bounds on any
-        # eligible job's charge (monotone min) so a saturated deployment
-        # short-circuits the scan entirely.
+        # -- incremental dispatch state --------------------------------
+        # tombstoned queues: _queued_set holds the ids that are *live*;
+        # deque entries absent from it are tombstones skipped (and
+        # compacted) lazily, making launch/kill removal O(1) amortized
+        self._queued_set: set[str] = set()
+        self._qlen: dict[tuple, int] = {}          # live length per queue
+        self._tombs: dict[tuple, int] = {}         # tombstones per queue
+        # per-queue candidate windows (see _Window): the first
+        # quota_k + backfill_depth live jobs stay materialized in sort
+        # order and mutate incrementally; _queues holds only each
+        # queue's tail beyond its window
+        self._qwin: dict[tuple, _Window] = {}
+        # per-job dispatch-scan caches
         self._prio_of: dict[str, int] = {}
         self._opts_of: dict[str, dict] = {}       # job -> {pool: PoolOption}
         self._rank_of: dict[str, list[str]] = {}  # job -> pools best-first
-        self._min_charge: dict[str, dict[str, float]] = {}  # pool -> dim min
+        self._job_of: dict[str, Job] = {}         # skip registry lock
+        # pre-flattened per-job dispatch records in rank order:
+        # [pool, pool.used, ((dim, amt, cap+eps), ...), charge.items(),
+        #  charge, memoized-expected-duration] — everything the admission
+        # hot loop touches, resolved once per job instead of per visit
+        self._dinfo: dict[str, list] = {}
+        self._dur_takes_pool: Optional[bool] = None
+        # submit fast path: when nothing changed since the last completed
+        # (and therefore futile-ending) dispatch except new arrivals, and
+        # none of them fits any of its pools right now (plus the blocked
+        # registration certificate below), a full scan provably launches
+        # nothing and is skipped entirely
+        self._dirty_full = True
+        self._new_cands: list[str] = []
+        # futile-pass certificate: {pool: sort key of the candidate that
+        # registered its blocked entry} plus how many candidates fit some
+        # pool but were backfill-rejected; None = no valid certificate
+        self._futile_blocked: Optional[dict] = None
+        self._futile_fit_rejects = 0
+        # saturation bound: pool -> dim -> min-heap of (charge, jid) over
+        # live queued jobs, pruned lazily — replaces the old write-only
+        # monotone _min_charge dict, so the bound tightens on settle
+        self._min_charge: dict[str, dict[str, list]] = {}
+        # per-pool EASY shadow state, maintained on launch/terminal:
+        # sorted [(end, launch_seq, jid, reservation)], plus the count of
+        # running jobs whose end the launcher could not estimate (any > 0
+        # disables backfill on that pool, as the full rescan used to)
+        self._pool_ends: dict[str, list] = {}
+        self._end_key: dict[str, tuple] = {}      # jid -> (pool, sort key)
+        self._unknown_ends: dict[str, int] = {}
+        self._lseq = 0
+        self._has_end = callable(getattr(launcher, "expected_end", None))
+        self._has_dur = callable(getattr(launcher, "expected_duration",
+                                         None))
         self._queued_at: dict[str, float] = {}
         self._started_at: dict[str, float] = {}
         self._lock = threading.RLock()
         self._dispatching = False
         self._dispatch_pending = False
+        # snapshot gate: publish only when the revision moved (and the
+        # interval elapsed); every state mutation bumps _state_rev
+        self._state_rev = 0
+        self._pub_rev = -1
+        self._pub_t = float("-inf")
+        self._settles = 0
         # running aggregates (not per-job lists): a long-lived platform
         # schedules millions of jobs, so metrics must stay O(queues)
         self.stats = {"launched": 0, "completed": 0, "backfilled": 0,
                       "wait_count": 0, "wait_sum": 0.0,
                       "wait_by_key": defaultdict(lambda: [0, 0.0]),
-                      "placed_by_pool": defaultdict(int)}
+                      "placed_by_pool": defaultdict(int),
+                      "snapshots": 0, "snapshots_skipped": 0}
         self.placement: Optional[Placement] = None
         if placement is not None:
             self.placement = placement
@@ -152,10 +272,21 @@ class Scheduler:
                 Placement({cl.name or "default": cl})
             # the pool set changed: every cached eligibility/ranking is
             # stale (they name pools that may no longer exist) — drop
-            # them; _ensure_opts re-derives lazily per job
+            # them; _ensure_opts re-derives lazily per job. Shadow state
+            # and the saturation bound belong to the old pools too; jobs
+            # still running there release against the old Cluster object
+            # (settle guards make the removal a no-op).
             self._min_charge = {}
             self._opts_of = {}
             self._rank_of = {}
+            self._dinfo = {}
+            self._pool_ends = {}
+            self._end_key = {}
+            self._unknown_ends = {}
+            for w in self._qwin.values():
+                w.stale = True      # window certificates name old pools
+            self._dirty_full = True
+            self._state_rev += 1
 
     # ------------------------------------------------------------------
     def _now(self) -> float:
@@ -166,6 +297,10 @@ class Scheduler:
                         priority: int = 0, weight: float = 1.0) -> None:
         with self._lock:
             self._qconf[(project, user)] = QueueConfig(priority, weight)
+            w = self._qwin.get((project, user))
+            if w is not None:
+                w.stale = True      # row priorities embed the old config
+            self._dirty_full = True
 
     # ------------------------------------------------------------------
     def submit(self, job: Job) -> None:
@@ -188,19 +323,18 @@ class Scheduler:
                     self._fail_infeasible(job)
                     return
                 self._opts_of[job.job_id] = options
-                for pname, opt in options.items():
-                    mc = self._min_charge.setdefault(pname, {})
-                    for n, amt in opt.charge.items():
-                        mc[n] = min(mc.get(n, amt), amt)
             if unmet:
                 # held: not in any queue, so invisible to the candidate
                 # scan, the quota count and the backfill shadow-time math
                 self._held[job.job_id] = unmet
                 for pid in unmet:
                     self._dependents[pid].add(job.job_id)
+                self._state_rev += 1
             else:
                 self._enqueue(job)
             self._dispatch()
+
+    _MISS = object()        # "duration not probed yet" sentinel
 
     def _ensure_opts(self, job: Job) -> dict:
         """The job's cached pool options, re-deriving (and re-ranking)
@@ -211,13 +345,41 @@ class Scheduler:
             opts = self.placement.eligible(job.spec)
             if opts:
                 self._opts_of[job.job_id] = opts
-                for pname, opt in opts.items():
-                    mc = self._min_charge.setdefault(pname, {})
-                    for n, amt in opt.charge.items():
-                        mc[n] = min(mc.get(n, amt), amt)
                 self._rank_of[job.job_id] = self.placement.rank(
                     job.spec, opts, parent_pools=self._parent_pools(job))
+                self._build_dinfo(job.job_id)
+                if job.job_id in self._queued_set:
+                    self._push_min_charge(job.job_id, opts)
         return opts
+
+    def _build_dinfo(self, job_id: str) -> None:
+        """Flatten the job's ranked pool options into the records the
+        admission loop iterates: per pool, the live ``used`` dict and
+        pre-resolved ``(dim, amount, capacity + eps)`` fit thresholds
+        (capacity is immutable, so the epsilon addition happens once per
+        job instead of once per candidate visit), the charge item tuple
+        the backfill spare check walks, and a memoized runtime slot."""
+        opts = self._opts_of[job_id]
+        pools = self.pools
+        recs = []
+        for pname in self._rank_of[job_id]:
+            opt = opts[pname]
+            cl = pools[pname]
+            cap = cl.capacity
+            recs.append([pname, cl.used,
+                         tuple((n, amt, cap.get(n, 0.0) + 1e-9)
+                               for n, amt in opt.charge.items()),
+                         tuple(opt.charge.items()), opt.charge, self._MISS])
+        self._dinfo[job_id] = recs
+
+    def _push_min_charge(self, job_id: str, opts: dict) -> None:
+        """Feed a live queued job's charges into the per-pool per-dim
+        saturation heaps; entries are pruned lazily once the job leaves
+        the queues (launched / killed / settled)."""
+        for pname, opt in opts.items():
+            heaps = self._min_charge.setdefault(pname, {})
+            for n, amt in opt.charge.items():
+                heapq.heappush(heaps.setdefault(n, []), (amt, job_id))
 
     def _enqueue(self, job: Job) -> None:
         """Queue a dispatchable job, ranking its eligible pools now — all
@@ -230,7 +392,186 @@ class Scheduler:
                 return              # became infeasible (pool set changed)
             self._rank_of[job.job_id] = self.placement.rank(
                 job.spec, opts, parent_pools=self._parent_pools(job))
-        self._queues[job.queue_key].append(job.job_id)
+            self._build_dinfo(job.job_id)
+        jid = job.job_id
+        key = job.queue_key
+        self._queued_set.add(jid)
+        self._qlen[key] = self._qlen.get(key, 0) + 1
+        self._job_of[jid] = job
+        w = self._qwin.get(key)
+        if w is None:
+            w = self._qwin[key] = _Window()
+        if w.stale:
+            self._win_refresh(key, w)
+        if len(w.rows) < self._maxdepth():
+            # normally the tail is empty here (promotion refills the
+            # window on every removal); promote defensively in case
+            # quota/backfill knobs grew the window since
+            self._win_promote(key, w)
+            if len(w.rows) < self._maxdepth():
+                self._win_append(key, w, jid)
+            else:
+                self._queues[key].append(jid)
+        else:
+            self._queues[key].append(jid)       # beyond the window: tail
+        self._new_cands.append(jid)
+        if self.placement is not None:
+            self._push_min_charge(jid, self._opts_of[jid])
+        self._state_rev += 1
+
+    def _maxdepth(self) -> int:
+        """Window capacity: the deepest any pass can scan one queue."""
+        return self.quota_k + (self.backfill_depth if self.backfill else 0)
+
+    def _remove_queued(self, key: tuple, job_id: str) -> None:
+        """Remove a job from its queue: an O(window) in-place delete plus
+        tail promotion when it sat in the candidate window (the common
+        case — launches come from the window), an O(1) tombstone in the
+        tail deque otherwise (compacted once the dead outnumber the
+        living)."""
+        self._queued_set.discard(job_id)
+        self._qlen[key] -= 1
+        w = self._qwin.get(key)
+        if w is not None and job_id in w.ids:
+            w.ids.discard(job_id)
+            rows = w.rows
+            jpos = 2 if self.policy != "fifo" else 1
+            removed = None
+            for i, row in enumerate(rows):
+                if row[jpos] == job_id:
+                    removed = row
+                    del rows[i]
+                    break
+            w.per_depth = None
+            if w.agg is not None and removed is not None and \
+                    removed[jpos + 1] is not None:
+                # exact per-pool member counts: a pool no live member is
+                # eligible for must stop gating the window certificate
+                # (its minima would otherwise suppress skips forever)
+                for r in removed[jpos + 1]:
+                    ent = w.agg.get(r[0])
+                    if ent is not None:
+                        ent[3] -= 1
+                        if r[5] is self._MISS and ent[2] > 0:
+                            ent[2] -= 1
+                        if ent[3] <= 0:
+                            del w.agg[r[0]]
+            dkeys = w.pdur_of.pop(job_id, None)
+            if dkeys:
+                for pname, dkey in dkeys.items():
+                    lst_d = w.pdurs.get(pname)
+                    if lst_d:
+                        di = bisect_left(lst_d, dkey)
+                        if di < len(lst_d) and lst_d[di][3] == job_id:
+                            lst_d.pop(di)
+            w.muts += 1         # removals only: they stale the minima
+            if w.muts >= 64:
+                w.stale = True      # restore certificate tightness
+            self._win_promote(key, w)
+        else:
+            tombs = self._tombs.get(key, 0) + 1
+            if tombs > 8 and tombs > self._qlen[key]:
+                live = self._queued_set
+                self._queues[key] = deque(
+                    j for j in self._queues[key] if j in live)
+                tombs = 0
+            self._tombs[key] = tombs
+        self._state_rev += 1
+
+    def _win_promote(self, key: tuple, w: _Window) -> None:
+        """Refill the window from the queue's tail (skipping tombstones)
+        so it again holds the first ``min(live, maxdepth)`` live jobs."""
+        tail = self._queues.get(key)
+        if not tail:
+            return
+        live = self._queued_set
+        maxdepth = self._maxdepth()
+        while len(w.rows) < maxdepth and tail:
+            jid = tail.popleft()
+            if jid in live:
+                self._win_append(key, w, jid)
+            else:
+                self._tombs[key] = self._tombs.get(key, 0) - 1
+
+    def _win_append(self, key: tuple, w: _Window, jid: str) -> None:
+        """Append one job to the window, updating sort-order fastness and
+        the single-pool rejection certificate incrementally (minima only
+        ever tighten downward here — exact; removals leave them stale
+        low, which is the conservative direction)."""
+        seq = self._seq_of[jid]
+        rows = w.rows
+        recs = self._dinfo.get(jid)
+        if self.policy == "fifo":
+            if rows and rows[-1][0] > seq:
+                w.fast = False
+            rows.append((seq, jid, recs))
+            w.ids.add(jid)
+            w.per_depth = None
+            return      # certificates are a fair-policy device
+        np_ = -(self._qconf[key].priority + self._prio_of.get(jid, 0))
+        if rows and (rows[-1][0] != np_ or rows[-1][1] > seq):
+            w.fast = False
+        rows.append((np_, seq, jid, recs))
+        w.ids.add(jid)
+        w.per_depth = None
+        if recs is None:
+            w.agg = None        # unknown member: certificates void
+            return
+        if w.agg is not None:
+            # per-pool certificate minima over every pool any member is
+            # eligible for (see the window skips in _dispatch_once).
+            # Probe eagerly only when the duration is declared statically
+            # (then every shipped launcher's estimate is a pure read);
+            # oracle-backed estimates must be drawn at the launcher's own
+            # probe points or the draw would see unpinned resources
+            static_dur = self._job_of[jid].spec.duration is not None
+            dkeys = None
+            for r in recs:
+                ent = w.agg.get(r[0])
+                if ent is None:
+                    ent = w.agg[r[0]] = [{}, None, 0, 0]
+                ent[3] += 1         # live members eligible on this pool
+                mins = ent[0]
+                for nm, amt, thr in r[2]:
+                    cur = mins.get(nm)
+                    if cur is None or amt < cur[0]:
+                        mins[nm] = (amt, thr)
+                d = r[5]
+                if d is self._MISS and static_dur:
+                    d = self._probe_duration(jid, r[0])
+                    r[5] = d
+                if d is self._MISS:
+                    ent[2] += 1     # unknown: duration certificates off
+                elif d is not None:
+                    if ent[1] is None or d < ent[1]:
+                        ent[1] = d
+                    dkey = (d, np_, seq)
+                    insort(w.pdurs.setdefault(r[0], []),
+                           dkey + (jid, recs))
+                    if dkeys is None:
+                        dkeys = {}
+                    dkeys[r[0]] = dkey
+            if dkeys is not None:
+                w.pdur_of[jid] = dkeys
+
+    def _win_refresh(self, key: tuple, w: _Window) -> None:
+        """Full rebuild of a window's rows and certificate from its own
+        job order (plus tail promotion): runs after config/pool changes
+        and periodically to re-tighten removal-staled minima."""
+        jpos = 2 if self.policy != "fifo" else 1
+        jids = [row[jpos] for row in w.rows]
+        w.rows = []
+        w.ids = set()
+        w.fast = True
+        w.per_depth = None
+        w.agg = {}
+        w.pdurs = {}
+        w.pdur_of = {}
+        w.stale = False
+        for jid in jids:
+            self._win_append(key, w, jid)
+        self._win_promote(key, w)
+        w.muts = 0
 
     def _parent_pools(self, job: Job) -> set[str]:
         pools = set()
@@ -266,8 +607,8 @@ class Scheduler:
                 return
             key = job.queue_key
             launched = job_id in self._started_at
-            if job_id in self._queues[key]:
-                self._queues[key].remove(job_id)
+            if job_id in self._queued_set:
+                self._remove_queued(key, job_id)
             self._unhold(job_id)
             self._active[key].discard(job_id)
             self.registry.set_state(job_id, JobState.KILLED)
@@ -301,6 +642,7 @@ class Scheduler:
             job_id, JobState.UPSTREAM_FAILED,
             error=f"upstream job {parent_id} did not finish")
         self.registry.persist_state(job_id)
+        self._state_rev += 1
         self.bus.publish(TOPIC_CONTAINER_STATUS,
                          {"job_id": job_id, "status": "UPSTREAM_FAILED",
                           "upstream": parent_id})
@@ -341,142 +683,619 @@ class Scheduler:
             # fold into the outer loop instead of recursing.
             self._dispatch_pending = True
             return
+        if not self._dirty_full and self._new_arrivals_unfit():
+            # nothing changed since the last (futile-ending) full scan
+            # except arrivals that fit no pool right now: a full pass
+            # would reject every candidate again — skip it. Safe because
+            # rejections are stable under pure arrivals: capacity only
+            # changes on launch/terminal (which set _dirty_full), the
+            # passage of time only *hardens* the backfill duration test,
+            # and fair-share order changes cannot create admissions when
+            # there are none to reorder.
+            self._publish_snapshot()
+            return
         self._dispatching = True
         try:
             progress = True
             while progress or self._dispatch_pending:
                 self._dispatch_pending = False
                 progress = self._dispatch_once()
+            self._dirty_full = False
+            del self._new_cands[:]
         finally:
             self._dispatching = False
         self._publish_snapshot()
 
-    def _candidates(self) -> list[str]:
-        """Queue-head slices ordered by (priority, fair share, FIFO)."""
-        out = []
-        for key, q in self._queues.items():
-            if not q:
+    def _new_arrivals_unfit(self) -> bool:
+        """True when skipping a full dispatch pass is provably
+        decision-identical to running it: every not-yet-scanned arrival
+        (a) fails the capacity fit check on all of its pools, and (b)
+        cannot perturb the blocked-entry registrations old fit-but-
+        backfill-rejected candidates were judged against — either no such
+        candidate exists (``_futile_fit_rejects == 0``; rejections of
+        never-fitting candidates are immune to blocked-entry changes), or
+        the arrival's top-ranked pool was already registered strictly
+        before the arrival's own position in the global order, making its
+        visit a pure no-op. Checked arrivals are dropped: with no launch
+        or terminal in between, capacity cannot have changed under them."""
+        if self.placement is None:
+            return not self._new_cands   # unconstrained: anything launches
+        fb = self._futile_blocked
+        if fb is None:
+            return False                 # no futile certificate yet
+        strict = self._futile_fit_rejects > 0
+        if strict and (self.usage_halflife or self.policy == "fifo"):
+            # decaying shares shift sort keys between passes (and fifo
+            # never records fair keys): the positional check is unsound
+            return False
+        cands = self._new_cands
+        live = self._queued_set
+        while cands:
+            jid = cands[-1]
+            if jid in live:
+                recs = self._dinfo.get(jid)
+                if not recs:
+                    return False
+                for rec in recs:
+                    used = rec[1]
+                    fits = True
+                    for n, amt, thr in rec[2]:
+                        if used.get(n, 0.0) + amt > thr:
+                            fits = False
+                            break
+                    if fits:
+                        return False    # could launch: run the full scan
+                if strict:
+                    reg = fb.get(recs[0][0])
+                    if reg is None:
+                        return False    # would register a new blocked pool
+                    key = self._job_of[jid].queue_key
+                    conf = self._qconf[key]
+                    gkey = (-(conf.priority + self._prio_of.get(jid, 0)),
+                            self._usage[key] / conf.weight,
+                            self._seq_of[jid])
+                    if not reg < gkey:
+                        return False    # would re-register it earlier
+            cands.pop()
+        return True
+
+    def _queue_cands(self, w: _Window, depth: int) -> list:
+        """The queue's first ``depth`` live entries in candidate sort
+        order — a snapshot slice of the incrementally-maintained window
+        when queue order equals sort order, a per-depth memoized sort
+        otherwise. Always a copy: the window mutates under the pass as
+        candidates launch, while a pass iterates its start-of-pass list
+        (the pre-incremental semantics)."""
+        rows = w.rows
+        if w.fast:      # queue order == sort order
+            return rows[:depth]
+        per = w.per_depth
+        if per is None:
+            per = w.per_depth = {}
+        d = depth if depth < len(rows) else -1   # -1 = full window
+        got = per.get(d)
+        if got is None:
+            got = per[d] = sorted(rows if d < 0 else rows[:depth])
+        return got
+
+    def _candidate_heap(self, now: float) -> list:
+        """One heap entry per non-empty, non-quota-full queue, keyed so a
+        lazy pop-and-refill merge yields candidates in exactly the order
+        the old full sort produced: ``(-priority, share, seq)`` under fair
+        (share is constant per queue within a pass, so each queue's cached
+        ``(-priority, seq)`` list is already globally sorted) and
+        ``(seq,)`` under fifo. Entries carry (list, index) so only
+        examined candidates are ever materialized; when a queue's
+        remaining window is priority-uniform and strictly precedes every
+        other stream, the whole window is consumed with no per-item heap
+        traffic at all."""
+        fifo = self.policy == "fifo"
+        bdepth = self.backfill_depth if self.backfill else 0
+        quota_k = self.quota_k
+        heap = []
+        for key, w in list(self._qwin.items()):
+            live = self._qlen.get(key, 0)
+            if live <= 0:
                 continue
-            headroom = self.quota_k - len(self._active[key])
+            headroom = quota_k - len(self._active[key])
             if headroom <= 0:
                 continue
-            depth = min(len(q), max(headroom, 0)
-                        + (self.backfill_depth if self.backfill else 0))
-            slice_ = list(q)[:depth]
-            conf = self._qconf[key]
-            share = self._decayed_usage(key) / conf.weight
-            for jid in slice_:
-                prio = conf.priority + self._prio_of.get(jid, 0)
-                out.append((key, jid, prio, share))
-        if self.policy == "fifo":
-            out.sort(key=lambda c: self._seq_of[c[1]])
-        else:
-            out.sort(key=lambda c: (-c[2], c[3], self._seq_of[c[1]]))
-        return [(key, jid) for key, jid, _, _ in out]
+            if w.stale:
+                self._win_refresh(key, w)
+            depth = min(live, headroom + bdepth)
+            if not w.rows:
+                continue
+            if fifo:
+                lst = self._queue_cands(w, depth)
+                if not lst:
+                    continue
+                heap.append((lst[0][0], key, lst, 0))
+                continue
+            share = self._decayed_usage(key, now) / \
+                self._qconf[key].weight
+            if w.fast:
+                # lazy: the payload is the window itself — the slice is
+                # only materialized if the pass actually scans it (until
+                # a window is first iterated, its rows can only gain
+                # appends at the end, so a later rows[:depth] slice is
+                # identical to one taken now)
+                r0 = w.rows[0]
+                heap.append((r0[0], share, r0[1], key, w, depth, 0))
+            else:
+                lst = self._queue_cands(w, depth)
+                if not lst:
+                    continue
+                heap.append((lst[0][0], share, lst[0][1], key, lst,
+                             depth, 0))
+        heapq.heapify(heap)
+        return heap
 
     def _saturated(self) -> bool:
         """No queued job can possibly fit anywhere: on every pool some
         dimension's free capacity is below the smallest charge any of that
-        pool's eligible jobs carries."""
+        pool's *live* queued jobs carries. The per-dim min-heaps are
+        pruned lazily (launched/killed entries pop off the top), so the
+        bound tightens as small jobs drain instead of going stale."""
         if not self._min_charge:
             return False
+        live = self._queued_set
         for pname, cl in self.pools.items():
-            mc = self._min_charge.get(pname)
-            if not mc:
-                continue        # no job was ever eligible on this pool
-            free = cl.free()
-            if not any(free.get(n, 0.0) + 1e-9 < amt
-                       for n, amt in mc.items()):
+            heaps = self._min_charge.get(pname)
+            if not heaps:
+                continue        # no live job is eligible on this pool
+            used = cl.used
+            cap = cl.capacity
+            blocked_dim = False
+            any_live = False
+            for n, h in heaps.items():
+                while h and h[0][1] not in live:
+                    heapq.heappop(h)
+                if not h:
+                    continue
+                any_live = True
+                if cap.get(n, 0.0) - used.get(n, 0.0) + 1e-9 < h[0][0]:
+                    blocked_dim = True
+                    break
+            if any_live and not blocked_dim:
                 return False    # this pool can still admit its smallest job
         return True
 
-    def _dispatch_once(self) -> bool:
-        if self._saturated():
-            return False
-        launched = False
-        # EASY shadow state is per pool: pool -> [blocked_req, shadow,
-        # spare]; a blocked head throttles only its own preferred pool
-        blocked: dict[str, list] = {}
-        quota_used: dict[tuple, int] = {}
-        for key, job_id in self._candidates():
-            if job_id not in self._queues[key]:
-                continue        # launched/killed by a nested event
-            used = quota_used.get(key, len(self._active[key]))
-            if used >= self.quota_k:
-                continue
-            job = self.registry.get(job_id)
-            chosen = None
-            backfilled = False
-            if self.placement is not None:
-                opts = self._ensure_opts(job)
+    def _visit(self, key: tuple, jid: str, blocked: dict,
+               quota_used: dict, now: float, regkey) -> int:
+        """Examine one candidate: 0 = rejected without fitting any pool
+        (quota / capacity), 4 = fit some pool but was backfill-rejected,
+        1 = launched, -1 = launched and the deployment saturated (stop
+        the pass), -2 = convoy (head blocked under backfill-less strict
+        ordering, stop the pass). ``regkey`` is the candidate's global
+        sort key, recorded on the blocked entry it registers — the futile
+        certificate the submit fast path checks new arrivals against.
+        Mirrors the pre-incremental scan body decision-for-decision."""
+        quota_k = self.quota_k
+        used = quota_used.get(key, -1)
+        if used < 0:
+            used = len(self._active[key])
+        if used >= quota_k:
+            return 0
+        chosen = None
+        backfilled = False
+        fit_any = False
+        if self.placement is not None:
+            recs = self._dinfo.get(jid)
+            if recs is None:
+                # pool set changed under a queued job: re-derive
+                opts = self._ensure_opts(self._job_of[jid])
                 if not opts:
-                    # pool set changed under a queued job, nothing fits
-                    self._queues[key].remove(job_id)
+                    job = self._job_of[jid]
+                    self._remove_queued(key, jid)
                     self._fail_infeasible(job)
+                    return 0
+                recs = self._dinfo[jid]
+            for rec in recs:
+                used_d = rec[1]
+                fits = True
+                for n, amt, thr in rec[2]:
+                    if used_d.get(n, 0.0) + amt > thr:
+                        fits = False
+                        break
+                if not fits:
                     continue
-                for pname in self._rank_of.get(job_id, ()):
-                    opt = opts[pname]
-                    if not self.pools[pname].fits_charge(opt.charge):
-                        continue
-                    blk = blocked.get(pname)
-                    if blk is not None:
-                        ok, via_spare = self._can_backfill(
-                            job, pname, opt.charge, blk[1], blk[2])
+                fit_any = True
+                pname = rec[0]
+                blk = blocked.get(pname)
+                if blk is not None:
+                    shadow_eps = blk[3]
+                    if shadow_eps is None:
+                        continue    # no shadow estimate: stay conservative
+                    dur = rec[5]
+                    if dur is self._MISS:
+                        dur = self._probe_duration(jid, pname)
+                        rec[5] = dur
+                    if dur is not None and now + dur <= shadow_eps:
+                        backfilled = True   # ends before the blocked start
+                    else:
+                        spare = blk[2]
+                        ok = True
+                        citems = rec[3]
+                        for n, amt in citems:
+                            if amt > spare.get(n, 0.0) + 1e-9:
+                                ok = False
+                                break
                         if not ok:
                             continue
-                        if via_spare:
-                            # this job may still be running at the shadow
-                            # time: consume its share of the spare so later
-                            # backfill candidates cannot collectively delay
-                            # the blocked job
-                            for n, amt in opt.charge.items():
-                                blk[2][n] = blk[2].get(n, 0.0) - amt
+                        # this job may still be running at the shadow
+                        # time: consume its share of the spare so later
+                        # backfill candidates cannot collectively delay
+                        # the blocked job
+                        for n, amt in citems:
+                            spare[n] = spare.get(n, 0.0) - amt
                         backfilled = True
-                    chosen = pname
-                    break
-                if chosen is None:
-                    # fits no pool right now: reserve a shadow start on
-                    # its best-ranked pool (where placement wants it)
-                    top = self._rank_of[job_id][0]
-                    if top not in blocked:
-                        shadow, spare = self._shadow_time(
-                            top, opts[top].charge)
-                        blocked[top] = [opts[top].charge, shadow, spare]
-                    if not self.backfill:
-                        break   # convoy: strict order blocks the rest
-                    continue
-                if backfilled:
-                    self.stats["backfilled"] += 1
-            self._launch(key, job, chosen)
-            quota_used[key] = used + 1
-            launched = True
-            if self._saturated():
+                chosen = pname
                 break
+            if chosen is None:
+                # fits no pool right now: reserve a shadow start on its
+                # best-ranked pool (where placement wants it)
+                top = recs[0][0]
+                if top not in blocked:
+                    shadow, spare = self._shadow_time(top, recs[0][4])
+                    blocked[top] = [
+                        recs[0][4], shadow, spare,
+                        shadow + 1e-9 if shadow is not None else None,
+                        regkey]
+                if not self.backfill:
+                    return -2
+                return 4 if fit_any else 0
+            if backfilled:
+                self.stats["backfilled"] += 1
+        self._launch(key, self._job_of[jid], chosen, now)
+        quota_used[key] = used + 1
+        return -1 if self._saturated() else 1
+
+    def _dispatch_once(self) -> bool:
+        if self._saturated():
+            # nothing fits anywhere: a futile pass with no fit-rejected
+            # candidates — a trivially valid certificate for the fast path
+            self._futile_blocked = {}
+            self._futile_fit_rejects = 0
+            return False
+        now = self._now()       # one clock read per pass: decay math and
+        launched = False        # backfill estimates stay consistent
+        # EASY shadow state is per pool: pool -> [blocked_req, shadow,
+        # spare, shadow+eps, registrant sort key]; a blocked head
+        # throttles only its own preferred pool
+        blocked: dict[str, list] = {}
+        quota_used: dict[tuple, int] = {}
+        heap = self._candidate_heap(now)
+        fifo = self.policy == "fifo"
+        quota_k = self.quota_k
+        live = self._queued_set
+        visit = self._visit
+        pop = heapq.heappop
+        push = heapq.heappush
+        fit_rejects = 0
+        placement = self.placement
+        bf_on = self.backfill
+        active = self._active
+        MISS = self._MISS
+        while heap:
+            ent = pop(heap)
+            if fifo:
+                seq, key, lst, i = ent
+                end = len(lst)
+                rows_src = lst
+            else:
+                negprio, share, _, key, payload, depth, i = ent
+                if type(payload) is list:
+                    lst = payload
+                    end = len(lst)
+                    rows_src = lst
+                else:
+                    # lazy fast window: rows gained at most appends since
+                    # the heap was built, so rows[:depth] now equals the
+                    # pass-start slice — defer the copy until (unless)
+                    # the window is actually scanned
+                    lst = None
+                    end = depth
+                    rows_src = payload.rows
+            # bulk window: under fair ordering a queue's candidates are
+            # consecutive whenever its (priority, share) strictly precedes
+            # every other stream — consume the rest of the window with no
+            # per-item heap traffic (the common case: shares rarely tie)
+            if not fifo and rows_src[end - 1][0] == negprio and \
+                    (not heap or (negprio, share) < (heap[0][0],
+                                                     heap[0][1])):
+                # window-level rejection certificate: for a pure
+                # single-pool window, one aggregate check against the
+                # blocked head's shadow/spare (or against free capacity)
+                # can prove every candidate would be rejected — the
+                # minimum charge / minimum duration proofs are monotone
+                # in exactly the comparisons each visit would make
+                w = self._qwin.get(key)
+                if w is not None and bf_on and w.agg:
+                    # evaluate the certificate per pool; verdicts:
+                    #   1 — some pool could admit a member: scan normally
+                    #   2 — every member provably rejected, but an
+                    #       unregistered pool remains: the next live
+                    #       candidate is visited (it registers its top
+                    #       exactly as a full scan would), then the
+                    #       certificate is re-evaluated — bounded, since
+                    #       each round consumes a candidate
+                    #   0 — every pool dead: the window rejects at once,
+                    #       modulo duration-qualifiers
+                    pools_d = self.pools
+                    skip_mode = False
+                    while True:
+                        dur_alive = None
+                        verdict = 0
+                        for pname, (mins2, md2, unp2, _c) in \
+                                w.agg.items():
+                            used2 = pools_d[pname].used
+                            fdead = False
+                            for nm, (mn, thr) in mins2.items():
+                                if used2.get(nm, 0.0) + mn > thr:
+                                    fdead = True
+                                    break
+                            blk = blocked.get(pname)
+                            if blk is None:
+                                if fdead:
+                                    verdict = 2     # rejected; may still
+                                    continue        # register this pool
+                                verdict = 1         # could admit here
+                                break
+                            if fdead:
+                                continue    # blocked + unfittable: dead
+                            se2 = blk[3]
+                            if se2 is None:
+                                continue    # pool conservatively dead
+                            spare2 = blk[2]
+                            sdead = False
+                            for nm, (mn, _t) in mins2.items():
+                                if mn > spare2.get(nm, 0.0) + 1e-9:
+                                    sdead = True
+                                    break
+                            if not sdead:
+                                verdict = 1         # spare-path alive
+                                break
+                            if unp2:
+                                verdict = 1         # unknown durations
+                                break
+                            if md2 is not None and now + md2 <= se2:
+                                if dur_alive is None:
+                                    dur_alive = []
+                                dur_alive.append((pname, se2))
+                        if verdict == 1:
+                            break           # genuine full scan
+                        if verdict == 2:
+                            if lst is None:
+                                # a visit can launch (and thus mutate
+                                # the live window): snapshot first
+                                lst = rows_src[:end]
+                                rows_src = lst
+                            r = None
+                            while i < end:
+                                row = rows_src[i]
+                                jid = row[2]
+                                i += 1
+                                if jid in live:
+                                    r = visit(key, jid, blocked,
+                                              quota_used, now,
+                                              (row[0], share, row[1]))
+                                    break
+                            if r == 1 or r == -1:
+                                # a duration-qualifier on a still-alive
+                                # pool launched (the certificate only
+                                # proves non-qualifiers rejected)
+                                launched = True
+                                if r == -1:
+                                    return True     # saturated: stop
+                            if r is not None and i < end:
+                                continue    # re-evaluate post-register
+                            skip_mode = True    # window exhausted
+                            dur_alive = None
+                            break
+                        skip_mode = True
+                        break
+                    if skip_mode:
+                        # may hide fit-but-rejected candidates: keep the
+                        # futile certificate conservative
+                        fit_rejects += 1
+                        if dur_alive is None:
+                            continue        # whole window rejects
+                        if w.fast:
+                            lo = rows_src[i][1]
+                            hi = rows_src[end - 1][1]
+                            quals = {}
+                            for pname, se2 in dur_alive:
+                                for dq in w.pdurs.get(pname, ()):
+                                    if now + dq[0] > se2:
+                                        break       # sorted: rest fail
+                                    s2 = dq[2]
+                                    if lo <= s2 <= hi and dq[3] in live:
+                                        quals[dq[3]] = (dq[1], s2,
+                                                        dq[3], dq[4])
+                            lst = sorted(quals.values())
+                            i = 0
+                            end = len(lst)
+                if lst is None:
+                    lst = rows_src[:end]    # == the pass-start slice
+                stop = False
+                while i < end:
+                    row = lst[i]
+                    jid = row[2]
+                    i += 1
+                    if jid not in live:
+                        continue
+                    recs = row[3]
+                    if recs is None and placement is not None:
+                        # pool set changed under the job: slow path
+                        r = visit(key, jid, blocked, quota_used, now,
+                                  (row[0], share, row[1]))
+                        if r == 1:
+                            launched = True
+                        elif r == 4:
+                            fit_rejects += 1
+                        elif r == -1:
+                            launched = True
+                            stop = True
+                            break
+                        elif r == -2:
+                            stop = True
+                            break
+                        elif quota_used.get(key, 0) >= quota_k:
+                            break
+                        continue
+                    # inlined _visit hot path (same decisions, no call /
+                    # dinfo lookup per candidate — recs ride on the row)
+                    used = quota_used.get(key, -1)
+                    if used < 0:
+                        used = len(active[key])
+                    if used >= quota_k:
+                        if key in quota_used:
+                            break   # quota pinned: rest of window skipped
+                        continue
+                    chosen = None
+                    backfilled = False
+                    fit_any = False
+                    if placement is not None:
+                        for rec in recs:
+                            used_d = rec[1]
+                            fits = True
+                            for n, amt, thr in rec[2]:
+                                if used_d.get(n, 0.0) + amt > thr:
+                                    fits = False
+                                    break
+                            if not fits:
+                                continue
+                            fit_any = True
+                            pname = rec[0]
+                            blk = blocked.get(pname)
+                            if blk is not None:
+                                shadow_eps = blk[3]
+                                if shadow_eps is None:
+                                    continue
+                                dur = rec[5]
+                                if dur is MISS:
+                                    dur = self._probe_duration(jid, pname)
+                                    rec[5] = dur
+                                if dur is not None and \
+                                        now + dur <= shadow_eps:
+                                    backfilled = True
+                                else:
+                                    spare = blk[2]
+                                    ok = True
+                                    for n, amt in rec[3]:
+                                        if amt > spare.get(n, 0.0) + 1e-9:
+                                            ok = False
+                                            break
+                                    if not ok:
+                                        continue
+                                    for n, amt in rec[3]:
+                                        spare[n] = spare.get(n, 0.0) - amt
+                                    backfilled = True
+                            chosen = pname
+                            break
+                        if chosen is None:
+                            top = recs[0][0]
+                            if top not in blocked:
+                                shadow, spare0 = self._shadow_time(
+                                    top, recs[0][4])
+                                blocked[top] = [
+                                    recs[0][4], shadow, spare0,
+                                    shadow + 1e-9 if shadow is not None
+                                    else None,
+                                    (row[0], share, row[1])]
+                            if not bf_on:
+                                stop = True     # convoy
+                                break
+                            if fit_any:
+                                fit_rejects += 1
+                            if key in quota_used and \
+                                    quota_used[key] >= quota_k:
+                                break
+                            continue
+                        if backfilled:
+                            self.stats["backfilled"] += 1
+                    self._launch(key, self._job_of[jid], chosen, now)
+                    quota_used[key] = used + 1
+                    launched = True
+                    if self._saturated():
+                        stop = True
+                        break
+                if stop:
+                    break
+                continue
+            # item-level merge (fifo, priority-mixed windows, share ties)
+            if lst is None:
+                lst = rows_src[:end]        # == the pass-start slice
+            row = lst[i]
+            jid = row[2] if not fifo else row[1]
+            i += 1
+            if i < end and quota_used.get(key, -1) < quota_k:
+                nxt = lst[i]
+                if fifo:
+                    push(heap, (nxt[0], key, lst, i))
+                else:
+                    push(heap, (nxt[0], share, nxt[1], key, lst, end, i))
+            if jid not in live:
+                continue        # launched/killed by a nested event
+            r = visit(key, jid, blocked, quota_used, now,
+                      None if fifo else (row[0], share, row[1]))
+            if r == 1:
+                launched = True
+            elif r == 4:
+                fit_rejects += 1
+            elif r == -1:
+                launched = True
+                break
+            elif r == -2:
+                break           # convoy: strict order blocks the rest
+        if not launched:
+            # record the futile certificate: which pools got blocked
+            # entries and where in the global order they were registered
+            self._futile_blocked = {p: blk[4] for p, blk in blocked.items()}
+            self._futile_fit_rejects = fit_rejects
         return launched
 
-    def _launch(self, key: tuple, job: Job,
-                pool: Optional[str] = None) -> None:
-        self._queues[key].remove(job.job_id)
-        self._active[key].add(job.job_id)
+    def _launch(self, key: tuple, job: Job, pool: Optional[str] = None,
+                now: Optional[float] = None) -> None:
+        jid = job.job_id
+        self._remove_queued(key, jid)
+        self._active[key].add(jid)
+        reserved = None
         if pool is not None:
-            opt = self._opts_of[job.job_id][pool]
-            self.pools[pool].reserve(job.job_id, opt.resources)
+            opt = self._opts_of[jid][pool]
+            reserved = self.pools[pool].reserve(jid, opt.resources)
             job.pool = pool
             # pin the concrete shape the job got (a per-pool menu entry),
             # so runner billing and observers see what was allocated
             job.spec.resources = dict(opt.resources)
             self.stats["placed_by_pool"][pool] += 1
-        now = self._now()
-        self._started_at[job.job_id] = now
-        wait = now - self._queued_at.pop(job.job_id, now)
+        if now is None:
+            now = self._now()
+        self._started_at[jid] = now
+        wait = now - self._queued_at.pop(jid, now)
         self.stats["launched"] += 1
         self.stats["wait_count"] += 1
         self.stats["wait_sum"] += wait
         by_key = self.stats["wait_by_key"][key]
         by_key[0] += 1
         by_key[1] += wait
-        self.registry.set_state(job.job_id, JobState.LAUNCHING)
+        self.registry.set_state(jid, JobState.LAUNCHING)
         self.launcher.launch(job)
+        # feed the pool's incremental shadow state with the runner's
+        # expected completion — available only after launch. A runner that
+        # completed the job synchronously already settled it (the nested
+        # event popped _started_at), so there is nothing to track.
+        if pool is not None and jid in self._started_at:
+            end = self.launcher.expected_end(jid) if self._has_end else None
+            if end is None:
+                self._unknown_ends[pool] = \
+                    self._unknown_ends.get(pool, 0) + 1
+                self._end_key[jid] = (pool, None)
+            else:
+                self._lseq += 1
+                insort(self._pool_ends.setdefault(pool, []),
+                       (end, self._lseq, jid, reserved))
+                self._end_key[jid] = (pool, (end, self._lseq))
 
     def _fail_infeasible(self, job: Job) -> None:
         err = (f"resources {job.spec.pool_resources or job.spec.resources} "
@@ -485,6 +1304,7 @@ class Scheduler:
         self.registry.set_state(job.job_id, JobState.LAUNCHING)
         self.registry.set_state(job.job_id, JobState.FAILED, error=err)
         self.registry.persist_state(job.job_id)
+        self._state_rev += 1
         self.bus.publish(TOPIC_CONTAINER_STATUS,
                          {"job_id": job.job_id, "status": "FAILED"})
 
@@ -494,51 +1314,56 @@ class Scheduler:
                                                  Optional[dict]]:
         """Earliest time the blocked job fits on ``pool`` (shadow start)
         and the capacity left spare there at that instant after it starts.
-        Requires the launcher to expose expected completion times;
-        otherwise backfill stays conservative (disabled for this round)."""
+        Walks the pool's incrementally-maintained sorted expected-end list
+        instead of re-copying and re-sorting every reservation; if any
+        running job's end is unknown (the launcher could not estimate it)
+        backfill stays conservative (disabled for this round)."""
         cl = self.pools.get(pool)
-        if cl is None or not hasattr(self.launcher, "expected_end"):
+        if cl is None or self._unknown_ends.get(pool, 0):
             return None, None
-        ends = []
-        for jid, res in cl.reservations().items():
-            end = self.launcher.expected_end(jid)
-            if end is None:
-                return None, None
-            ends.append((end, res))
-        ends.sort(key=lambda e: e[0])
-        free = cl.free()
-        for end, res in ends:
+        used = cl.used
+        free = {n: cap - used[n] for n, cap in cl.capacity.items()}
+        for end, _, _, res in self._pool_ends.get(pool, ()):
             for n, amt in res.items():
                 if n in free:
                     free[n] += amt
-            if all(free.get(n, 0.0) >= blocked_req[n] - 1e-9
-                   for n in blocked_req):
+            fits = True
+            for n in blocked_req:
+                if free.get(n, 0.0) < blocked_req[n] - 1e-9:
+                    fits = False
+                    break
+            if fits:
                 spare = {n: free.get(n, 0.0) - blocked_req[n]
                          for n in blocked_req}
                 return end, spare
         return None, None
 
-    def _can_backfill(self, job: Job, pool: str, charge: dict,
-                      shadow: Optional[float],
-                      spare: Optional[dict]) -> tuple[bool, bool]:
-        """(admit, via_spare): admit if the job provably cannot delay the
-        blocked head on ``pool`` — it ends before the shadow start, or it
-        fits into the capacity still spare once the head starts
-        (``via_spare``). The duration estimate is for THIS pool: a job
-        that is quick on CPU but pays a TPU startup tax must be sized at
-        its TPU runtime when backfilling the TPU pool's hole."""
-        if shadow is None:
-            return False, False
-        dur = None
-        if hasattr(self.launcher, "expected_duration"):
+    def _probe_duration(self, jid: str, pool: str) -> Optional[float]:
+        """Launcher runtime estimate for the backfill test, memoized into
+        the job's dispatch record by the caller (the value is drawn once
+        per (job, pool), so the hot path skips the launcher's
+        getattr/try-except plumbing on every probe). The estimate is for
+        THIS pool: a job that is quick on CPU but pays a TPU startup tax
+        must be sized at its TPU runtime when backfilling the TPU pool's
+        hole."""
+        if not self._has_dur:
+            return None
+        job = self._job_of[jid]
+        if self._dur_takes_pool is None:
+            # classify the launcher's signature once, by inspection — a
+            # TypeError raised *inside* a pool-aware estimator must not
+            # silently demote every future probe to pool-less sizing
             try:
-                dur = self.launcher.expected_duration(job, pool=pool)
-            except TypeError:   # legacy runner without the pool kwarg
-                dur = self.launcher.expected_duration(job)
-        if dur is not None and self._now() + dur <= shadow + 1e-9:
-            return True, False  # finishes before the blocked job starts
-        return all(amt <= spare.get(n, 0.0) + 1e-9
-                   for n, amt in charge.items()), True
+                params = inspect.signature(
+                    self.launcher.expected_duration).parameters
+                self._dur_takes_pool = "pool" in params or any(
+                    p.kind is inspect.Parameter.VAR_KEYWORD
+                    for p in params.values())
+            except (TypeError, ValueError):
+                self._dur_takes_pool = True     # builtins: assume modern
+        if self._dur_takes_pool:
+            return self.launcher.expected_duration(job, pool=pool)
+        return self.launcher.expected_duration(job)
 
     # -- terminal events -------------------------------------------------
     def _on_container_status(self, msg: dict) -> None:
@@ -566,8 +1391,28 @@ class Scheduler:
         self._prio_of.pop(job_id, None)
         self._opts_of.pop(job_id, None)
         self._rank_of.pop(job_id, None)
+        self._dinfo.pop(job_id, None)
+        self._job_of.pop(job_id, None)
         self._seq_of.pop(job_id, None)
         self._queued_at.pop(job_id, None)
+        self._dirty_full = True
+        # drop the job from its pool's shadow state (O(log n) locate)
+        ek = self._end_key.pop(job_id, None)
+        if ek is not None:
+            pool_name, sort_key = ek
+            if sort_key is None:
+                self._unknown_ends[pool_name] = \
+                    max(0, self._unknown_ends.get(pool_name, 0) - 1)
+            else:
+                ends = self._pool_ends.get(pool_name)
+                if ends:
+                    i = bisect_left(ends, sort_key)
+                    if i < len(ends) and ends[i][2] == job_id:
+                        ends.pop(i)
+        self._settles += 1
+        if self._settles % 256 == 0:
+            self._compact_min_charge()
+        self._state_rev += 1
         if started_at is None:
             return          # never launched (queued kill / infeasible)
         runtime = job.runtime
@@ -575,10 +1420,27 @@ class Scheduler:
             runtime = max(0.0, self._now() - started_at)
         # fair-share usage is the dominant share on the pool the job ran
         # on: consuming half the TPU pool weighs like half the CPU pool
-        share = pool_cl.dominant_share(released or job.spec.resources) \
-            if pool_cl is not None else 1.0
+        if pool_cl is None:
+            share = 1.0
+        elif released is not None:
+            share = pool_cl.dominant_share_charge(released)
+        else:
+            share = pool_cl.dominant_share(job.spec.resources)
         self._charge_usage(key, (share if share > 0 else 1.0) * runtime)
         self.stats["completed"] += 1
+
+    def _compact_min_charge(self) -> None:
+        """Periodic sweep of the saturation heaps: lazy pruning only
+        removes dead entries when they surface at the top, so a long-lived
+        engine occasionally rebuilds heaps that are mostly tombstones."""
+        live = self._queued_set
+        bound = max(64, 4 * len(live))
+        for heaps in self._min_charge.values():
+            for n, h in heaps.items():
+                if len(h) > bound:
+                    kept = [e for e in h if e[1] in live]
+                    heapq.heapify(kept)
+                    heaps[n] = kept
 
     # -- fair-share usage with half-life decay ---------------------------
     def _decayed_usage(self, key: tuple,
@@ -599,13 +1461,26 @@ class Scheduler:
         self._usage_t[key] = now
 
     def _publish_snapshot(self) -> None:
+        """Coalesced scheduler snapshot: skipped when nothing changed
+        since the last publish, and rate-limited to one per
+        ``snapshot_interval`` runner-clock seconds when configured."""
         if not self.pools:
             return
+        if self._state_rev == self._pub_rev:
+            return
+        now = self._now()
+        if self.snapshot_interval and \
+                now - self._pub_t < self.snapshot_interval:
+            self.stats["snapshots_skipped"] += 1
+            return
+        self._pub_rev = self._state_rev
+        self._pub_t = now
+        self.stats["snapshots"] += 1
         self.bus.publish(TOPIC_SCHEDULER, {
-            "now": self._now(),
+            "now": now,
             "utilization": self.utilization(),
             "pools": sorted(self.pools),
-            "queued": sum(len(q) for q in self._queues.values()),
+            "queued": sum(self._qlen.values()),
             "held": len(self._held),
             "active": sum(len(a) for a in self._active.values()),
         })
@@ -613,7 +1488,7 @@ class Scheduler:
     # ------------------------------------------------------------------
     def queue_depth(self, project: str, user: str) -> int:
         with self._lock:
-            return len(self._queues[(project, user)])
+            return self._qlen.get((project, user), 0)
 
     def active_count(self, project: str, user: str) -> int:
         with self._lock:
