@@ -44,8 +44,10 @@ from repro.core.engine.monitor import JobMonitor
 from repro.core.engine.placement import Placement
 from repro.core.engine.registry import JobRegistry, JobSpec
 from repro.core.engine.scheduler import Scheduler
+from repro.core.provision.elastic import ElasticController, PoolPolicy
 from repro.core.provision.pricing import (CPU_PRICING, ChipScaledPricing,
-                                          Pricing, ResourceDim)
+                                          Pricing, ResourceDim,
+                                          spot_pricing)
 from repro.core.provision.profiler import CommandTemplate, Profiler
 
 N_JOBS = 5000
@@ -70,6 +72,21 @@ TPU_BENCH_PRICING = ChipScaledPricing([
     ResourceDim("hbm_gb", 2, 16, 0.005, (2, 4, 8, 16)),
 ], family="tpu")
 
+# -- elastic + spot scenario ---------------------------------------------
+ELASTIC_JOBS = 1500
+ELASTIC_RATE = 0.009        # ~115% of the static config's capacity: the
+                            # static pool builds a backlog it must drain
+                            # past the last arrival, while the elastic
+                            # deployment's spot capacity absorbs it
+ELASTIC_MAX_NODES = 4       # on-demand pool: controller range [1, 4]
+SPOT_NODES = 4              # spot pool: fixed capacity, reclaimable
+SPOT_DISCOUNT = 0.6         # spot price = 40% of on-demand
+ELASTIC_CKPT = 60.0         # checkpoint interval: the lost-work bound
+ELASTIC_RECLAIM_MEAN = 1800.0   # mean seconds between spot reclamations
+SPOT_OUTAGE = 900.0         # a reclaimed spot node stays gone this long
+ELASTIC_STARVE = 300.0      # preempt for a head starved past this
+ELASTIC_CTL_EVERY = 120.0   # provisioning-controller cadence
+
 # -- scale scenario (50k jobs / 64 users / 3 pools) ----------------------
 SCALE_JOBS = 50_000
 SCALE_USERS = 64
@@ -81,16 +98,23 @@ GPU_BENCH_PRICING = Pricing([
 
 
 class AuditingCluster(Cluster):
-    """Records the reservation high-water mark per dimension."""
+    """Records the reservation high-water mark per dimension, plus
+    reservations that oversubscribed capacity *at reserve time* — the
+    invariant that stays meaningful on an elastic pool, where comparing
+    an old high-water mark against a post-shrink capacity would flag
+    legitimate (drained) over-commit as a bug."""
 
     def __init__(self, *a, **kw):
         super().__init__(*a, **kw)
         self.high_water = {n: 0.0 for n in self.capacity}
+        self.reserve_violations = 0
 
     def reserve(self, job_id, resources):
         req = super().reserve(job_id, resources)
         for n in self.capacity:
             self.high_water[n] = max(self.high_water[n], self.used[n])
+            if self.used[n] > self.capacity[n] + 1e-9:
+                self.reserve_violations += 1
         return req
 
     @property
@@ -201,7 +225,10 @@ def fit_hetero_profiler() -> Profiler:
 def decision_trace(n_jobs: int = 500, seed: int = 7, *,
                    policy: str = "fair", backfill: bool = True,
                    hetero: bool = False, kill_every: int = 0,
-                   quota_k: int = 16) -> list[list]:
+                   quota_k: int = 16, preemption: bool = False,
+                   starvation_threshold: float = 300.0,
+                   checkpoint_interval: float | None = None,
+                   priority_every: int = 0) -> list[list]:
     """The scheduler's decision sequence on a fixed-seed fleet:
     ``[[job name, pool], ...]`` in launch order. A perf refactor of the
     dispatch core must reproduce this trace bit-identically (same launch
@@ -209,7 +236,11 @@ def decision_trace(n_jobs: int = 500, seed: int = 7, *,
     against ``tests/data/golden_trace_*.json`` recorded before the
     refactor. ``kill_every=k`` kills the job that arrived 15 submissions
     earlier at every k-th arrival (if not yet terminal), so the trace
-    also pins kill-path bookkeeping."""
+    also pins kill-path bookkeeping. With ``preemption=True`` (plus
+    ``priority_every=p`` stamping every p-th job high priority so heads
+    actually starve) a preempted job's relaunch appears as a second
+    trace entry — the preemption-policy golden pins victim selection and
+    checkpoint-resume scheduling too."""
     registry = JobRegistry()
     bus = EventBus()
     if hetero:
@@ -223,17 +254,24 @@ def decision_trace(n_jobs: int = 500, seed: int = 7, *,
         cluster = None
         oracle = hetero_oracle
     else:
-        arrivals = poisson_arrivals(make_fleet(seed, n_jobs),
-                                    ARRIVAL_RATE, seed)
+        fleet = make_fleet(seed, n_jobs)
+        if priority_every:
+            for i, spec in enumerate(fleet):
+                if i % priority_every == 0:
+                    spec.priority = 10
+        arrivals = poisson_arrivals(fleet, ARRIVAL_RATE, seed)
         placement = None
         cluster = AuditingCluster(
             {n: max(d.values) * NODES for n, d in CPU_PRICING.dims.items()},
             {n: d.minimum for n, d in CPU_PRICING.dims.items()})
         oracle = None
-    runner = VirtualRunner(registry, bus, oracle=oracle)
+    runner = VirtualRunner(registry, bus, oracle=oracle,
+                           checkpoint_interval=checkpoint_interval)
     sched = Scheduler(registry, runner, bus, quota_k=quota_k,
                       cluster=cluster, placement=placement,
-                      policy=policy, backfill=backfill)
+                      policy=policy, backfill=backfill,
+                      preemption=preemption,
+                      starvation_threshold=starvation_threshold)
     trace: list[list] = []
     orig_launch = runner.launch
 
@@ -540,6 +578,258 @@ def run_scale(n_jobs: int = SCALE_JOBS, seed: int = 0) -> dict:
     return res
 
 
+# -- scenario 4: elastic spot pools + checkpoint-aware preemption --------
+def make_elastic_fleet(seed: int = 0,
+                       n_jobs: int = ELASTIC_JOBS) -> list[JobSpec]:
+    """Two-class fleet: 85% whole-node batch training jobs (priority 0,
+    5–15 min) that pack the pools solid, and 15% small high-priority
+    interactive jobs (priority 10, 20–90 s) that starve behind them
+    unless the scheduler preempts."""
+    rng = np.random.default_rng(seed + 42)
+    fleet = []
+    for i in range(n_jobs):
+        user = f"u{int(rng.integers(N_USERS))}"
+        if rng.random() < 0.15:
+            fleet.append(JobSpec(
+                name=f"int-{i}", project="bench", user=user, priority=10,
+                duration=float(rng.uniform(20.0, 90.0)),
+                resources={"vcpu": 1.0, "mem_mb": 1024.0}))
+        else:
+            fleet.append(JobSpec(
+                name=f"batch-{i}", project="bench", user=user,
+                duration=float(rng.uniform(300.0, 900.0)),
+                resources={"vcpu": 8.0, "mem_mb": 8192.0}))
+    return fleet
+
+
+def _node_shape() -> dict[str, float]:
+    return {n: float(max(d.values)) for n, d in CPU_PRICING.dims.items()}
+
+
+def _elastic_pool(nodes: int, name: str, *, spot: bool = False,
+                  reclaim_rate: float = 0.0) -> AuditingCluster:
+    return AuditingCluster(
+        {n: amt * nodes for n, amt in _node_shape().items()},
+        {n: d.minimum for n, d in CPU_PRICING.dims.items()}, name=name,
+        spot=spot, reclaim_rate=reclaim_rate)
+
+
+def _wait_stats(registry, submitted, starts):
+    """Per-class queue-wait stats: interactive p95 is the starvation
+    signal (a preempted job's wait is its first-launch wait)."""
+    int_w, batch_w = [], []
+    for jid, t_sub in submitted.items():
+        if jid not in starts:
+            continue
+        wait = starts[jid] - t_sub
+        name = registry.get(jid).spec.name
+        (int_w if name.startswith("int-") else batch_w).append(wait)
+    return {
+        "interactive_wait_p95_s":
+            float(np.percentile(int_w, 95)) if int_w else 0.0,
+        "batch_wait_p95_s":
+            float(np.percentile(batch_w, 95)) if batch_w else 0.0,
+    }
+
+
+def simulate_elastic(arrivals, *, quota_k: int = 64,
+                     seed: int = 0) -> dict:
+    """The elastic configuration: an on-demand pool the provisioning
+    controller grows/shrinks in [1, ELASTIC_MAX_NODES] nodes, plus a
+    spot pool at 40% of the on-demand price whose capacity the cloud
+    *takes away* at exponential intervals — a reclamation shrinks the
+    pool by one node for SPOT_OUTAGE seconds (the node really is gone:
+    displaced jobs cannot relaunch onto it), draining the displaced
+    reservations through the checkpoint-aware preemption path; the same
+    preemption policy un-starves high-priority heads. Spot provisioned
+    cost integrates the *live* node count, so outages are not billed.
+    The virtual-clock loop interleaves arrivals, completions,
+    reclamations, node restores and controller rounds in timestamp
+    order."""
+    registry = JobRegistry()
+    bus = EventBus()
+    node_shape = _node_shape()
+    spot_pr = spot_pricing(CPU_PRICING, SPOT_DISCOUNT, family="spot")
+    catalog = {"ondemand": CPU_PRICING, "spot": spot_pr}
+    runner = VirtualRunner(registry, bus, pricing=catalog,
+                           checkpoint_interval=ELASTIC_CKPT)
+    ond = _elastic_pool(1, "ondemand")      # the controller grows it
+    spot = _elastic_pool(SPOT_NODES, "spot", spot=True,
+                         reclaim_rate=1.0 / ELASTIC_RECLAIM_MEAN)
+    placement = Placement({"ondemand": ond, "spot": spot},
+                          pricing=catalog, objective="cost")
+    sched = Scheduler(registry, runner, bus, quota_k=quota_k,
+                      placement=placement, policy="fair", backfill=True,
+                      preemption=True,
+                      starvation_threshold=ELASTIC_STARVE,
+                      snapshot_interval=3600.0)
+    ctl = ElasticController(sched, {"ondemand": PoolPolicy(
+        node_shape=node_shape, min_nodes=1, max_nodes=ELASTIC_MAX_NODES,
+        grow_at=0.85, shrink_at=0.25, cooldown_s=ELASTIC_CTL_EVERY)})
+    rng = np.random.default_rng(seed + 777)
+    next_reclaim = float(rng.exponential(ELASTIC_RECLAIM_MEAN))
+    next_ctl = ELASTIC_CTL_EVERY
+    spot_nodes = SPOT_NODES
+    restores: list[float] = []      # pending node-return times
+    # (t, nodes) change-points for the spot node-hour integral
+    spot_segments: list[tuple[float, int]] = [(0.0, spot_nodes)]
+    reclaim_events = 0
+
+    def set_spot_nodes(n: int) -> None:
+        nonlocal spot_nodes
+        spot_nodes = n
+        sched.resize_pool(
+            "spot", {d: amt * n for d, amt in node_shape.items()})
+        spot_segments.append((runner.now, n))
+
+    starts: dict[str, float] = {}
+    orig_launch = runner.launch
+
+    def launch(job):
+        starts.setdefault(job.job_id, runner.now)   # first launch = wait
+        orig_launch(job)
+    runner.launch = launch
+
+    submitted: dict[str, float] = {}
+    queued = lambda: sum(sched._qlen.values())
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(arrivals) or runner.pending() > 0 or queued() > 0:
+        t_arr = arrivals[i][0] if i < len(arrivals) else float("inf")
+        t_res = restores[0] if restores else float("inf")
+        t_ext = min(t_arr, next_reclaim, next_ctl, t_res)
+        while True:     # drain completions due before the next event
+            nc = runner.next_completion()
+            if nc is None or nc > t_ext:
+                break
+            runner.step()
+        runner.advance_to(t_ext)
+        if t_arr <= t_ext and i < len(arrivals):
+            job = registry.submit(copy.copy(arrivals[i][1]))
+            submitted[job.job_id] = t_arr
+            sched.submit(job)
+            i += 1
+        if next_reclaim <= t_ext:
+            # the cloud takes a node back for SPOT_OUTAGE seconds: the
+            # capacity really shrinks, and the displaced reservations
+            # drain through the checkpoint-aware preemption path —
+            # victims cannot simply relaunch onto the reclaimed node
+            if spot_nodes > 0:
+                reclaim_events += 1
+                set_spot_nodes(spot_nodes - 1)
+                restores.append(runner.now + SPOT_OUTAGE)
+                restores.sort()
+            next_reclaim = runner.now + \
+                float(rng.exponential(ELASTIC_RECLAIM_MEAN))
+        while restores and restores[0] <= t_ext:
+            restores.pop(0)
+            set_spot_nodes(min(SPOT_NODES, spot_nodes + 1))
+        if next_ctl <= t_ext:
+            ctl.step(runner.now)
+            next_ctl = runner.now + ELASTIC_CTL_EVERY
+    wall = time.perf_counter() - t0
+
+    jobs = registry.all_jobs()
+    finished = sum(1 for j in jobs if j.state == JobState.FINISHED)
+    assert finished == len(arrivals), f"{finished}/{len(arrivals)} finished"
+    # capacity invariant on elastic pools: no reserve ever oversubscribed
+    # the capacity in force at that moment (post-shrink over-commit is
+    # legitimate and drains through preemption)
+    assert not any(getattr(cl, "reserve_violations", 0)
+                   for cl in sched.pools.values())
+    makespan = runner.now
+    node_rate = CPU_PRICING.hourly_rate(node_shape)
+    spot_rate = spot_pr.hourly_rate(node_shape)
+    # spot node-hours integrate the live node count across outages
+    spot_hours = 0.0
+    for k, (t_a, n_a) in enumerate(spot_segments):
+        t_b = spot_segments[k + 1][0] if k + 1 < len(spot_segments) \
+            else makespan
+        spot_hours += n_a * max(0.0, t_b - t_a)
+    spot_hours /= 3600.0
+    provisioned = ctl.provisioned_cost(makespan,
+                                       {"ondemand": node_rate}) + \
+        spot_hours * spot_rate
+    res = {
+        "n_jobs": len(arrivals),
+        "makespan_s": makespan,
+        "mean_queue_wait_s": sched.mean_queue_wait(),
+        "total_cost": sum(j.cost or 0.0 for j in jobs),
+        "provisioned_cost": provisioned,
+        "ondemand_node_hours": ctl.node_hours(makespan)["ondemand"],
+        "spot_node_hours": spot_hours,
+        "preempted": sched.stats["preempted"],
+        "spot_reclaims": reclaim_events,
+        "reclaim_drained": sched.stats["drained"],
+        "scale_ops": len(ctl.decisions),
+        "lost_work_s": runner.preempt_stats["lost_work_s"],
+        "max_lost_work_s": runner.preempt_stats["max_lost_s"],
+        "resumed_work_s": runner.preempt_stats["resumed_s"],
+        "placed_by_pool": dict(sched.stats["placed_by_pool"]),
+        "wall_s": wall,
+    }
+    res.update(_wait_stats(registry, submitted, starts))
+    return res
+
+
+def run_elastic(n_jobs: int = ELASTIC_JOBS, seed: int = 0,
+                quota_k: int = 64) -> dict:
+    """Static on-demand vs elastic(spot + preemption) on identical
+    fleets. The acceptance gate: the elastic configuration must win on
+    billed AND provisioned cost at equal-or-better makespan, preempted
+    work must resume from checkpoints (lost work bounded by the
+    checkpoint interval), and high-priority jobs must stop starving."""
+    fleet = make_elastic_fleet(seed, n_jobs)
+    arrivals = poisson_arrivals(fleet, ELASTIC_RATE, seed)
+    node_shape = _node_shape()
+    node_rate = CPU_PRICING.hourly_rate(node_shape)
+    catalog = {"ondemand": CPU_PRICING}
+
+    # static: the on-demand pool at max size, no elasticity, no spot,
+    # no preemption — the pre-PR engine on price-equivalent hardware
+    static = simulate(
+        arrivals, pricing=catalog, quota_k=quota_k,
+        placement=Placement(
+            {"ondemand": _elastic_pool(ELASTIC_MAX_NODES, "ondemand")},
+            pricing=catalog))
+    static["provisioned_cost"] = \
+        ELASTIC_MAX_NODES * node_rate * static["makespan_s"] / 3600.0
+
+    elastic = simulate_elastic(arrivals, quota_k=quota_k, seed=seed)
+
+    out = {
+        "fleet": {"n_jobs": n_jobs, "n_users": N_USERS,
+                  "ondemand_nodes_static": ELASTIC_MAX_NODES,
+                  "ondemand_nodes_elastic":
+                      f"1..{ELASTIC_MAX_NODES} (controller)",
+                  "spot_nodes": SPOT_NODES,
+                  "spot_discount": SPOT_DISCOUNT,
+                  "checkpoint_interval_s": ELASTIC_CKPT,
+                  "reclaim_mean_s": ELASTIC_RECLAIM_MEAN,
+                  "starvation_threshold_s": ELASTIC_STARVE},
+        "static_ondemand": static,
+        "elastic_spot": elastic,
+        "cost_saving_billed":
+            1.0 - elastic["total_cost"] / static["total_cost"],
+        "cost_saving_provisioned":
+            1.0 - elastic["provisioned_cost"] / static["provisioned_cost"],
+        "makespan_ratio": elastic["makespan_s"] / static["makespan_s"],
+    }
+    # the acceptance gate (ISSUE 5): cheaper on both cost axes at
+    # equal-or-better makespan, checkpoint-bounded lost work, real resumes
+    assert elastic["makespan_s"] <= static["makespan_s"] + 1e-6, \
+        "elastic makespan regressed"
+    assert elastic["total_cost"] < static["total_cost"], \
+        "no billed-cost saving"
+    assert elastic["provisioned_cost"] < static["provisioned_cost"], \
+        "no provisioned-cost saving"
+    assert elastic["preempted"] > 0, "preemption never exercised"
+    assert elastic["resumed_work_s"] > 0, "no checkpoint resume happened"
+    assert elastic["max_lost_work_s"] <= ELASTIC_CKPT + 1e-6, \
+        "lost work exceeds the checkpoint interval"
+    return out
+
+
 # -- smoke regression gate -----------------------------------------------
 def check_throughput_regression(measured: dict, path: str,
                                 threshold: float = 0.7) -> list[str]:
@@ -565,7 +855,8 @@ def check_throughput_regression(measured: dict, path: str,
 # -- entry points -------------------------------------------------------
 def run(n_jobs: int = N_JOBS, seed: int = 0,
         hetero_jobs: int = HETERO_JOBS, trace: str | None = None,
-        scale_jobs: int = SCALE_JOBS, policy_repeats: int = 3) -> dict:
+        scale_jobs: int = SCALE_JOBS, policy_repeats: int = 3,
+        elastic_jobs: int = ELASTIC_JOBS) -> dict:
     arrivals = trace_arrivals(trace) if trace else \
         poisson_arrivals(make_fleet(seed, n_jobs), ARRIVAL_RATE, seed)
     fifo = run_policy(arrivals, "fifo", backfill=False,
@@ -583,6 +874,8 @@ def run(n_jobs: int = N_JOBS, seed: int = 0,
             1.0 - fair["mean_queue_wait_s"] / fifo["mean_queue_wait_s"],
         "hetero": run_hetero(hetero_jobs, seed),
     }
+    if elastic_jobs:
+        out["elastic"] = run_elastic(elastic_jobs, seed)
     if scale_jobs:
         out["scale"] = run_scale(scale_jobs, seed)
     assert not fifo["oversubscribed"] and not fair["oversubscribed"]
@@ -619,6 +912,27 @@ def report(res: dict, write: bool = True) -> None:
     print(f"scheduler.throughput,0,"
           f"fifo={res['fifo']['sched_events_per_s']:.0f}/s"
           f"_fair={res['fair_backfill']['sched_events_per_s']:.0f}/s")
+    if "elastic" in res:
+        e = res["elastic"]
+        el, st = e["elastic_spot"], e["static_ondemand"]
+        print(f"scheduler.elastic.static,{st['wall_s'] * 1e6:.0f},"
+              f"makespan={st['makespan_s']:.0f}s"
+              f"_billed=${st['total_cost']:.2f}"
+              f"_provisioned=${st['provisioned_cost']:.2f}")
+        print(f"scheduler.elastic.spot,{el['wall_s'] * 1e6:.0f},"
+              f"makespan={el['makespan_s']:.0f}s"
+              f"_billed=${el['total_cost']:.2f}"
+              f"_provisioned=${el['provisioned_cost']:.2f}"
+              f"_preempted={el['preempted']}"
+              f"_reclaims={el['spot_reclaims']}"
+              f"_scale_ops={el['scale_ops']}"
+              f"_max_lost={el['max_lost_work_s']:.0f}s")
+        print(f"scheduler.elastic.saving,0,"
+              f"billed_cut={e['cost_saving_billed'] * 100:.1f}%"
+              f"_provisioned_cut="
+              f"{e['cost_saving_provisioned'] * 100:.1f}%"
+              f"_makespan_ratio={e['makespan_ratio']:.3f}"
+              f"_int_wait_p95={el['interactive_wait_p95_s']:.0f}s")
     if "scale" in res:
         sc = res["scale"]
         pools = ",".join(f"{p}:{c}" for p, c in
@@ -671,7 +985,7 @@ def main() -> None:
         # runner noise (the 400-job fleet makes repeats cheap)
         res = run(n_jobs=args.n_jobs or 400, hetero_jobs=400,
                   trace=args.trace, scale_jobs=args.scale or 0,
-                  policy_repeats=5)
+                  policy_repeats=5, elastic_jobs=300)
         report(res, write=False)
         failures = check_throughput_regression(res, "BENCH_scheduler.json")
         if failures:

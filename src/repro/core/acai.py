@@ -93,15 +93,19 @@ class AcaiEngine:
                  placement: Optional[Placement] = None,
                  placement_objective: str = "cost",
                  policy: str = "fair", backfill: bool = True,
-                 usage_halflife: Optional[float] = None):
+                 usage_halflife: Optional[float] = None,
+                 preemption: bool = False,
+                 starvation_threshold: float = 300.0,
+                 checkpoint_interval: Optional[float] = None):
         self.bus = EventBus()
         self.datalake = datalake
         self.registry = JobRegistry(
             metadata=datalake.metadata if datalake else None)
         runner = runner or ("virtual" if virtual else "local")
         if runner == "virtual":
-            self.launcher = VirtualRunner(self.registry, self.bus,
-                                          oracle=oracle, pricing=pricing)
+            self.launcher = VirtualRunner(
+                self.registry, self.bus, oracle=oracle, pricing=pricing,
+                checkpoint_interval=checkpoint_interval)
         elif runner == "thread":
             self.launcher = ThreadPoolRunner(self.registry, self.bus,
                                              datalake=datalake,
@@ -137,7 +141,9 @@ class AcaiEngine:
                                    quota_k=quota_k, cluster=cluster,
                                    placement=placement,
                                    policy=policy, backfill=backfill,
-                                   usage_halflife=usage_halflife)
+                                   usage_halflife=usage_halflife,
+                                   preemption=preemption,
+                                   starvation_threshold=starvation_threshold)
         self.cluster = cluster
         self.monitor = JobMonitor(self.bus)
         self.pricing = pricing

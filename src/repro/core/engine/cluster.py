@@ -34,16 +34,28 @@ class Cluster:
 
     ``name`` identifies the pool in a heterogeneous deployment (one
     Cluster per accelerator family; see ``core/engine/placement.py``).
+    ``spot`` marks a preemptible pool (priced below on-demand, capacity
+    reclaimable at any time — the scheduler models a reclamation as a
+    forced preemption) and ``reclaim_rate`` is its expected reclamations
+    per second, which the placement layer prices into spot scores.
     """
 
     def __init__(self, capacity: dict[str, float],
                  defaults: Optional[dict[str, float]] = None,
-                 name: str = "default"):
+                 name: str = "default", *, spot: bool = False,
+                 reclaim_rate: float = 0.0):
         self.name = name
+        self.spot = spot
+        self.reclaim_rate = reclaim_rate
         self.capacity = {k: float(v) for k, v in capacity.items()}
         self.defaults = dict(defaults or {})
         self.used: dict[str, float] = {k: 0.0 for k in self.capacity}
         self._held: dict[str, dict[str, float]] = {}   # job_id -> resources
+        # accounting-drift counters: a release that would drive ``used``
+        # negative is clamped but *counted* (see ``release``), so a
+        # double-release bug surfaces in stats instead of silently
+        # vanishing into the clamp
+        self.stats = {"release_underflow": 0, "release_underflow_amount": 0.0}
         self._lock = threading.RLock()
 
     # -- construction ---------------------------------------------------
@@ -110,14 +122,45 @@ class Cluster:
             return req
 
     def release(self, job_id: str) -> Optional[dict[str, float]]:
-        """Idempotent: releasing an unknown/already-released job is a no-op."""
+        """Idempotent: releasing an unknown/already-released job is a no-op.
+
+        A release that would drive ``used`` below zero means the books
+        drifted (a double-release or an externally-mutated ``used``); the
+        value is still clamped to keep the pool usable, but the drift is
+        counted in ``stats`` so it cannot silently mask an accounting bug.
+        """
         with self._lock:
             req = self._held.pop(job_id, None)
             if req is not None:
                 for n, amt in req.items():
                     if n in self.used:
-                        self.used[n] = max(0.0, self.used[n] - amt)
+                        left = self.used[n] - amt
+                        if left < -1e-9:
+                            self.stats["release_underflow"] += 1
+                            self.stats["release_underflow_amount"] += -left
+                            left = 0.0
+                        self.used[n] = max(0.0, left)
             return req
+
+    # -- elasticity -----------------------------------------------------
+    def resize(self, capacity: dict[str, float]) -> dict[str, float]:
+        """Set new totals for the given dimensions (others keep theirs).
+
+        Reservations are untouched: shrinking below live usage leaves the
+        pool *over-committed* (``used > capacity``) until the scheduler
+        drains the overage — via the preemption path, or by letting the
+        outliving jobs finish naturally. Returns the per-dimension
+        overage (``used - capacity`` where positive) so the caller knows
+        what must drain; new admissions are rejected meanwhile because
+        ``fits`` already fails on an over-committed dimension.
+        """
+        with self._lock:
+            for n, v in capacity.items():
+                self.capacity[n] = float(v)
+                self.used.setdefault(n, 0.0)
+            return {n: self.used[n] - self.capacity[n]
+                    for n in capacity
+                    if self.used[n] > self.capacity[n] + 1e-9}
 
     def held(self, job_id: str) -> Optional[dict[str, float]]:
         with self._lock:
@@ -133,10 +176,19 @@ class Cluster:
             return {n: self.capacity[n] - self.used[n] for n in self.capacity}
 
     def utilization(self) -> dict[str, float]:
+        """Per-dimension used/capacity. A zero-capacity dimension with
+        live usage (a pool shrunk to nothing under running reservations)
+        reports ``inf`` — a flagged over-commit, not a silent 0% — and
+        never divides by zero."""
         with self._lock:
-            return {n: (self.used[n] / self.capacity[n]
-                        if self.capacity[n] > 0 else 0.0)
-                    for n in self.capacity}
+            out = {}
+            for n in self.capacity:
+                cap = self.capacity[n]
+                if cap > 0:
+                    out[n] = self.used[n] / cap
+                else:
+                    out[n] = float("inf") if self.used[n] > 1e-9 else 0.0
+            return out
 
     def dominant_share(self, resources: Optional[dict[str, Any]]) -> float:
         """DRF-style dominant share of one job's charge — the fair-share

@@ -52,10 +52,19 @@ def job_history(registry: JobRegistry, metadata=None, *,
     return "\n".join(lines)
 
 
+def _pct(u: float) -> str:
+    """Render a utilization fraction; an over-committed dimension (a pool
+    shrunk below its live reservations reports ``inf``) is flagged
+    instead of fed to arithmetic that would print garbage."""
+    if u == float("inf"):
+        return "OVERCOMMIT"
+    return f"{u * 100:.1f}%"
+
+
 def scheduler_page(scheduler, monitor=None) -> str:
     """The cluster page: per-pool capacity + utilization + placement
-    counts, per-queue pressure and queue-wait statistics from the
-    capacity scheduler."""
+    counts (spot pools tagged), per-queue pressure and queue-wait
+    statistics from the capacity scheduler."""
     lines = []
     with scheduler._lock:     # dispatch may be running on a worker thread
         pools = getattr(scheduler, "pools", {})
@@ -67,11 +76,13 @@ def scheduler_page(scheduler, monitor=None) -> str:
             for pname in sorted(pools):
                 cl = pools[pname]
                 util = cl.utilization()
+                tag = f"{pname} (spot)" if getattr(cl, "spot", False) \
+                    else pname
                 for dim in cl.capacity:
-                    lines.append(f"| {pname} | {dim} "
+                    lines.append(f"| {tag} | {dim} "
                                  f"| {cl.capacity[dim]:g} "
                                  f"| {cl.used[dim]:g} "
-                                 f"| {util[dim] * 100:.1f}% "
+                                 f"| {_pct(util[dim])} "
                                  f"| {placed.get(pname, 0)} |")
         else:
             lines.append("(no cluster attached — capacity-unconstrained)")
@@ -96,6 +107,15 @@ def scheduler_page(scheduler, monitor=None) -> str:
                      f"completed={s['completed']} "
                      f"backfilled={s['backfilled']} "
                      f"mean_queue_wait={scheduler.mean_queue_wait():.2f}s")
+        if s.get("preempted") or s.get("reclaimed") or s.get("drained"):
+            lines.append(f"preempted={s['preempted']} "
+                         f"spot_reclaimed={s['reclaimed']} "
+                         f"shrink_drained={s['drained']}")
+        drift = sum(cl.stats.get("release_underflow", 0)
+                    for cl in pools.values() if hasattr(cl, "stats"))
+        if drift:
+            lines.append(f"release_underflow={drift}  "
+                         "(capacity accounting drift — investigate)")
         if s.get("snapshots_skipped"):
             lines.append(f"snapshots={s['snapshots']} "
                          f"coalesced={s['snapshots_skipped']} "
@@ -104,8 +124,8 @@ def scheduler_page(scheduler, monitor=None) -> str:
         peak = monitor.peak_utilization()
         mean = monitor.mean_utilization()
         for dim in peak:
-            lines.append(f"utilization.{dim}: mean={mean[dim] * 100:.1f}% "
-                         f"peak={peak[dim] * 100:.1f}%")
+            lines.append(f"utilization.{dim}: mean={_pct(mean[dim])} "
+                         f"peak={_pct(peak[dim])}")
     return "\n".join(lines)
 
 

@@ -35,10 +35,25 @@ from typing import Callable, Optional
 
 from repro.core.engine.events import (EventBus, TOPIC_CONTAINER_STATUS,
                                       TOPIC_JOB_PROGRESS)
-from repro.core.engine.lifecycle import (IllegalTransition, JobState,
-                                         TERMINAL_STATES)
+from repro.core.engine.lifecycle import (IllegalTransition, JobPreempted,
+                                         JobState, TERMINAL_STATES)
 from repro.core.engine.logparse import parse_log
 from repro.core.engine.registry import Job, JobRegistry
+
+
+# per-segment billing accumulates into job.cost from worker threads — a
+# zombie (superseded) worker and the live incarnation's finalize can
+# race the read-modify-write and silently drop a segment without this
+_billing_lock = threading.Lock()
+
+
+def _bill_segment(pricing, job: Job, seconds: float) -> None:
+    """Accumulate one segment's cost onto the job, thread-safely."""
+    if pricing is None:
+        return
+    cost = pricing.job_cost(job.spec.resources, seconds)
+    with _billing_lock:
+        job.cost = (job.cost or 0.0) + cost
 
 
 def resolve_pricing(pricing, job: Job):
@@ -87,6 +102,13 @@ class Runner:
         stay fixed for the life of the job."""
         return None
 
+    # Runners that can deliver a checkpoint signal to a RUNNING job
+    # implement ``preempt(job) -> bool`` (True = signal delivered, the
+    # job will stop; False = the job is not running here). The scheduler
+    # only enables its preemption policy when the launcher has it; the
+    # base Runner and the synchronous LocalRunner deliberately do not
+    # (a synchronous agent cannot be signalled mid-run).
+
 
 class LocalRunner(Runner):
     """Synchronous agent: download -> run -> upload -> publish."""
@@ -106,6 +128,7 @@ class LocalRunner(Runner):
 
     def launch(self, job: Job) -> None:
         bus, reg = self.bus, self.registry
+        epoch = job.epoch        # incarnation this launch belongs to
         try:
             reg.set_state(job.job_id, JobState.RUNNING)
         except IllegalTransition:
@@ -113,7 +136,7 @@ class LocalRunner(Runner):
             # terminal status so waiters and dependents still observe it
             reg.persist_state(job.job_id)
             bus.publish(TOPIC_CONTAINER_STATUS,
-                        {"job_id": job.job_id,
+                        {"job_id": job.job_id, "epoch": epoch,
                          "status": reg.get(job.job_id).state.value})
             return
         bus.publish(TOPIC_CONTAINER_STATUS,
@@ -132,22 +155,67 @@ class LocalRunner(Runner):
                         {"job_id": job.job_id, "stage": "running"})
             with self._capture(log_buf):
                 result = job.spec.fn(workdir, job) if job.spec.fn else None
-            if isinstance(result, dict):
-                job.outputs.update(result)
+            if job.epoch != epoch:
+                # superseded while the fn ran (preempted, but it never
+                # observed the signal): the live incarnation owns the
+                # job's outputs and state — discard this zombie segment
+                # without uploading or finalizing, but bill the compute
+                # it really consumed (same as the cooperative path)
+                _bill_segment(resolve_pricing(self.pricing, job), job,
+                              time.perf_counter() - t0)
+                bus.publish(TOPIC_JOB_PROGRESS,
+                            {"job_id": job.job_id, "stage": "superseded",
+                             "epoch": epoch})
+                return
+            # stage result/fileset mutations instead of applying them:
+            # they commit in _finalize only after the epoch-guarded
+            # terminal write succeeds, so a worker superseded *during*
+            # the (slow) upload cannot clobber the live incarnation's
+            # outputs — its staged delta is simply dropped
+            delta = dict(result) if isinstance(result, dict) else {}
             runtime = time.perf_counter() - t0
             job.runtime = job.spec.duration if job.spec.duration is not None \
                 else runtime
-            self._upload_outputs(job, workdir, bus)
-            self._finalize(job, log_buf.getvalue(), JobState.FINISHED)
+            ref = self._upload_outputs(job, workdir, bus)
+            if ref is not None:
+                delta["fileset"] = ref
+            self._finalize(job, log_buf.getvalue(), JobState.FINISHED,
+                           epoch=epoch, outputs=delta)
+        except JobPreempted:
+            # the checkpoint signal reached the fn. A *real* preemption
+            # bumped the job's epoch (and settled/re-queued it — possibly
+            # already relaunched as a new RUNNING incarnation): bill the
+            # partial segment and hand back with no terminal publish. A
+            # spurious JobPreempted (same epoch, still RUNNING: nobody
+            # preempted this job) fails like any other exception, or the
+            # job would hang non-terminal forever.
+            if job.epoch == epoch and \
+                    reg.get(job.job_id).state == JobState.RUNNING:
+                job.runtime = time.perf_counter() - t0
+                self._finalize(job, log_buf.getvalue()
+                               + "\nJobPreempted without a scheduler "
+                               "preemption", JobState.FAILED,
+                               error="JobPreempted outside a preemption",
+                               epoch=epoch)
+                return
+            _bill_segment(resolve_pricing(self.pricing, job), job,
+                          time.perf_counter() - t0)
+            bus.publish(TOPIC_JOB_PROGRESS,
+                        {"job_id": job.job_id, "stage": "preempted",
+                         "epoch": epoch})
         except Exception:  # noqa: BLE001 — user code failure => FAILED
             job.runtime = time.perf_counter() - t0
             self._finalize(job, log_buf.getvalue()
                            + "\n" + traceback.format_exc(), JobState.FAILED,
-                           error=traceback.format_exc())
+                           error=traceback.format_exc(), epoch=epoch)
 
-    def _upload_outputs(self, job: Job, workdir: Path, bus: EventBus) -> None:
+    def _upload_outputs(self, job: Job, workdir: Path,
+                        bus: EventBus) -> Optional[str]:
+        """Upload the job's output fileset; returns its versioned ref
+        (committed onto ``job.outputs`` by the caller only once the
+        epoch-guarded terminal write lands)."""
         if not (job.spec.output_fileset and self.datalake is not None):
-            return
+            return None
         bus.publish(TOPIC_JOB_PROGRESS,
                     {"job_id": job.job_id, "stage": "uploading"})
         lake = self.datalake
@@ -174,22 +242,45 @@ class LocalRunner(Runner):
         lake.provenance.add_job_edge(src=src_ref, dst=fsv.ref,
                                      job_id=job.job_id,
                                      creator=job.spec.user)
-        job.outputs["fileset"] = fsv.ref
+        return fsv.ref
 
     def _finalize(self, job: Job, log_text: str, state: JobState,
-                  error: Optional[str] = None) -> None:
+                  error: Optional[str] = None,
+                  epoch: Optional[int] = None,
+                  outputs: Optional[dict] = None) -> None:
+        if epoch is not None and job.epoch != epoch:
+            # a superseded incarnation must not write the registry, bill,
+            # or publish: the job is live again (re-queued or relaunched)
+            # and a FINISHED/FAILED here would terminal-ize it under the
+            # new incarnation's feet
+            return
         # the job may have been killed while the fn ran (thread workers):
         # keep the registry's terminal state, don't overwrite it
         if self.registry.get(job.job_id).state in TERMINAL_STATES:
             state = self.registry.get(job.job_id).state
         else:
             try:
-                self.registry.set_state(job.job_id, state, error=error)
+                # epoch-guarded write: the check above is advisory (the
+                # preemption can land between it and here), but the
+                # registry re-checks the epoch under its own lock — a
+                # zombie can never terminal-ize the live incarnation
+                if self.registry.set_state(job.job_id, state, error=error,
+                                           expect_epoch=epoch) is None:
+                    return              # superseded mid-flight: hands off
             except IllegalTransition:   # killed between check and set
                 state = self.registry.get(job.job_id).state
-        pricing = resolve_pricing(self.pricing, job)
-        if pricing is not None and job.runtime is not None:
-            job.cost = pricing.job_cost(job.spec.resources, job.runtime)
+        if epoch is not None and job.epoch != epoch:
+            return      # superseded on the IllegalTransition path: the
+                        # job re-queued under us — no billing/publish
+        if outputs:
+            # commit the staged result/fileset delta only now, with the
+            # terminal state claimed: a zombie never reaches this line
+            job.outputs.update(outputs)
+        if job.runtime is not None:
+            # accumulate, not overwrite: preempted incarnations already
+            # billed their partial segments
+            _bill_segment(resolve_pricing(self.pricing, job), job,
+                          job.runtime)
         if self.datalake is not None:
             meta = parse_log(log_text)      # intelligent log parser
             if meta:
@@ -203,8 +294,14 @@ class LocalRunner(Runner):
                                          log_text.encode(),
                                          creator=job.spec.user)
         job.outputs["log"] = log_text
-        self.bus.publish(TOPIC_CONTAINER_STATUS,
-                         {"job_id": job.job_id, "status": state.value})
+        msg = {"job_id": job.job_id, "status": state.value}
+        if epoch is not None:
+            # stamp the incarnation: the scheduler drops terminal events
+            # whose epoch predates the job's current one (a worker that
+            # finished after its job was preempted and relaunched must
+            # not settle the new incarnation's reservation)
+            msg["epoch"] = epoch
+        self.bus.publish(TOPIC_CONTAINER_STATUS, msg)
 
 
 class _ThreadLocalStdout(io.TextIOBase):
@@ -256,7 +353,11 @@ class ThreadPoolRunner(LocalRunner):
         self._executor = ThreadPoolExecutor(
             max_workers=max_workers, thread_name_prefix="acai-agent")
         self._cv = threading.Condition()
-        self._inflight: set[str] = set()
+        # job_id -> number of in-flight runs: a preempted job's relaunch
+        # can overlap its superseded worker, and a plain set would let
+        # the zombie's exit erase the live incarnation from the books
+        # (pending() -> 0 while the job still runs)
+        self._inflight: dict[str, int] = {}
         self._completions = 0
 
     @contextmanager
@@ -272,16 +373,39 @@ class ThreadPoolRunner(LocalRunner):
             proxy.pop()
 
     def launch(self, job: Job) -> None:
+        # fresh checkpoint signal per incarnation: a relaunched preempted
+        # job must not see the previous incarnation's set flag
+        job.preempt_flag = threading.Event()
         with self._cv:
-            self._inflight.add(job.job_id)
+            self._inflight[job.job_id] = \
+                self._inflight.get(job.job_id, 0) + 1
         self._executor.submit(self._run, job)
+
+    def preempt(self, job: Job) -> bool:
+        """Cooperative checkpoint signal: sets the job's ``preempt_flag``.
+        The job fn is expected to poll it (e.g. via
+        ``train.fault.preemption_hook``) and raise ``JobPreempted`` at
+        its next checkpoint; capacity is handed back immediately (the
+        same early-release semantics as ``kill`` on a running worker)."""
+        with self._cv:
+            if job.job_id not in self._inflight:
+                return False
+        flag = job.preempt_flag
+        if flag is None:
+            return False
+        flag.set()
+        return True
 
     def _run(self, job: Job) -> None:
         try:
             LocalRunner.launch(self, job)
         finally:
             with self._cv:
-                self._inflight.discard(job.job_id)
+                left = self._inflight.get(job.job_id, 0) - 1
+                if left > 0:
+                    self._inflight[job.job_id] = left
+                else:
+                    self._inflight.pop(job.job_id, None)
                 self._completions += 1
                 self._cv.notify_all()
 
@@ -310,15 +434,29 @@ class VirtualRunner(Runner):
     expected completion time is exposed for EASY backfill. KILLED jobs
     publish their terminal ``container_status`` exactly like FINISHED ones,
     so monitors/dashboards observe kills on the virtual clock.
+
+    Checkpoint-aware preemption: ``preempt(job)`` cancels the scheduled
+    completion and records the job's checkpointed progress — work done
+    this segment rounds *down* to the last multiple of the checkpoint
+    interval (``checkpoint_interval`` here, or a per-job
+    ``spec.args["checkpoint_interval"]`` override), so the work lost to a
+    preemption is bounded by one interval; with no interval configured
+    the job restarts from zero (there was never a checkpoint to restore).
+    Progress is kept as a *fraction* of the job, so a relaunch on a
+    different (faster/slower) pool resumes from the same logical step.
+    A preempted launch's stale heap entry is suppressed by sequence
+    number — it can neither complete the new incarnation nor advance the
+    clock.
     """
 
     def __init__(self, registry: JobRegistry, bus: EventBus, *,
                  oracle: Optional[Callable[[Job], float]] = None,
-                 pricing=None):
+                 pricing=None, checkpoint_interval: Optional[float] = None):
         self.registry = registry
         self.bus = bus
         self.oracle = oracle
         self.pricing = pricing
+        self.checkpoint_interval = checkpoint_interval
         self.now = 0.0
         self._heap: list[tuple[float, int, str, float]] = []
         self._ends: dict[str, float] = {}
@@ -328,6 +466,15 @@ class VirtualRunner(Runner):
         # estimate and the launch still share one draw per (job, pool)
         self._dur_cache: dict[str, dict] = {}
         self._seq = 0
+        # preemption bookkeeping: the live heap-entry seq per running job
+        # (mismatched pops are stale), this segment's launch time and full
+        # duration on its pool, and checkpointed progress as a fraction
+        self._live_seq: dict[str, int] = {}
+        self._launch_t: dict[str, float] = {}
+        self._full_dur: dict[str, float] = {}
+        self._done_frac: dict[str, float] = {}
+        self.preempt_stats = {"preemptions": 0, "lost_work_s": 0.0,
+                              "max_lost_s": 0.0, "resumed_s": 0.0}
 
     _UNSET = object()
 
@@ -352,41 +499,119 @@ class VirtualRunner(Runner):
 
     def launch(self, job: Job) -> None:
         self.registry.set_state(job.job_id, JobState.RUNNING)
-        dur = self._draw_duration(job)
+        full = self._draw_duration(job)
+        done = self._done_frac.get(job.job_id, 0.0)
+        # resume from the last checkpoint: only the un-checkpointed
+        # remainder of the job runs this segment
+        dur = max(full * (1.0 - done), 0.0)
+        if done:
+            self.preempt_stats["resumed_s"] += full * done
         self._seq += 1
+        self._live_seq[job.job_id] = self._seq
+        self._launch_t[job.job_id] = self.now
+        self._full_dur[job.job_id] = full
         self._ends[job.job_id] = self.now + dur
         heapq.heappush(self._heap, (self.now + dur, self._seq, job.job_id,
                                     dur))
 
     def step(self) -> Optional[str]:
         """Advance to the next completion; returns the finished job id."""
-        if not self._heap:
-            return None
-        t, _, job_id, dur = heapq.heappop(self._heap)
-        self.now = max(self.now, t)
-        self._ends.pop(job_id, None)
-        self._dur_cache.pop(job_id, None)
-        job = self.registry.get(job_id)
-        if job.state == JobState.KILLED:
+        while self._heap:
+            t, seq, job_id, dur = heapq.heappop(self._heap)
+            if self._live_seq.get(job_id) != seq:
+                continue    # stale entry from a preempted incarnation:
+                            # must not complete the job or move the clock
+            self.now = max(self.now, t)
+            self._ends.pop(job_id, None)
+            self._dur_cache.pop(job_id, None)
+            self._live_seq.pop(job_id, None)
+            self._launch_t.pop(job_id, None)
+            self._full_dur.pop(job_id, None)
+            self._done_frac.pop(job_id, None)
+            job = self.registry.get(job_id)
+            # no epoch stamp needed here: stale incarnations were already
+            # filtered by the seq check above, so every published event
+            # is for the job's current epoch
+            if job.state == JobState.KILLED:
+                self.bus.publish(TOPIC_CONTAINER_STATUS,
+                                 {"job_id": job_id, "status": "KILLED"})
+                return job_id
+            job.runtime = dur
+            pricing = resolve_pricing(self.pricing, job)
+            if pricing is not None:
+                # accumulate: preempted segments already billed theirs
+                job.cost = (job.cost or 0.0) + \
+                    pricing.job_cost(job.spec.resources, dur)
+            self.registry.set_state(job_id, JobState.FINISHED)
             self.bus.publish(TOPIC_CONTAINER_STATUS,
-                             {"job_id": job_id, "status": "KILLED"})
+                             {"job_id": job_id, "status": "FINISHED"})
             return job_id
-        job.runtime = dur
-        pricing = resolve_pricing(self.pricing, job)
-        if pricing is not None:
-            job.cost = pricing.job_cost(job.spec.resources, job.runtime)
-        self.registry.set_state(job_id, JobState.FINISHED)
-        self.bus.publish(TOPIC_CONTAINER_STATUS,
-                         {"job_id": job_id, "status": "FINISHED"})
-        return job_id
+        return None
 
     def pending(self) -> int:
         return len(self._heap)
 
+    # -- checkpoint-aware preemption ------------------------------------
+    def preempt(self, job: Job) -> bool:
+        """Deliver the checkpoint signal: cancel the scheduled completion
+        and bank the segment's checkpointed progress. Returns False when
+        the job is not running here (already completed or never launched).
+        """
+        jid = job.job_id
+        if jid not in self._ends or jid not in self._live_seq:
+            return False
+        full = self._full_dur.get(jid, 0.0)
+        elapsed = max(0.0, self.now - self._launch_t.get(jid, self.now))
+        done0 = self._done_frac.get(jid, 0.0)
+        interval = self.checkpoint_interval
+        if isinstance(job.spec.args, dict):
+            interval = job.spec.args.get("checkpoint_interval", interval)
+        progressed = done0 * full + elapsed     # work done, in this
+        if interval and interval > 0:           # pool's runtime seconds
+            saved = min(int(progressed / interval + 1e-9) * interval,
+                        progressed)
+        else:
+            saved = 0.0     # never checkpointed: restart from step 0
+        lost = progressed - saved
+        self.preempt_stats["preemptions"] += 1
+        self.preempt_stats["lost_work_s"] += lost
+        self.preempt_stats["max_lost_s"] = max(
+            self.preempt_stats["max_lost_s"], lost)
+        self._done_frac[jid] = saved / full if full > 0 else 0.0
+        pricing = resolve_pricing(self.pricing, job)
+        if pricing is not None:
+            job.cost = (job.cost or 0.0) + \
+                pricing.job_cost(job.spec.resources, elapsed)
+        # drop the live entry; the heap row becomes a stale tombstone
+        # (suppressed by seq in step/next_completion)
+        self._ends.pop(jid, None)
+        self._live_seq.pop(jid, None)
+        self._launch_t.pop(jid, None)
+        self._full_dur.pop(jid, None)
+        return True
+
+    def forget(self, job_id: str) -> None:
+        """Drop restore/duration state for a job that went terminal with
+        no live run here (killed while preempted-queued): nothing will
+        ever pop its entries off the completion heap, so a long-lived
+        engine would otherwise leak its checkpoint progress and draws.
+        A job with a live heap entry keeps everything — its own pop does
+        this cleanup (and must still publish the KILLED event)."""
+        if job_id in self._live_seq:
+            return
+        self._done_frac.pop(job_id, None)
+        self._dur_cache.pop(job_id, None)
+        self._launch_t.pop(job_id, None)
+        self._full_dur.pop(job_id, None)
+        self._ends.pop(job_id, None)
+
     # -- open-loop arrival processes ------------------------------------
     def next_completion(self) -> Optional[float]:
         """When the next running job will complete (None if none are)."""
-        return self._heap[0][0] if self._heap else None
+        heap = self._heap
+        while heap and self._live_seq.get(heap[0][2]) != heap[0][1]:
+            heapq.heappop(heap)     # prune stale preempted entries
+        return heap[0][0] if heap else None
 
     def advance_to(self, t: float) -> None:
         """Advance the idle clock to ``t`` (a future arrival instant);
@@ -399,9 +624,12 @@ class VirtualRunner(Runner):
                           pool: Optional[str] = None) -> Optional[float]:
         if job.spec.duration is None and self.oracle is None:
             return None
-        if pool is None:
-            return self._draw_duration(job)
-        return self._draw_duration(job, pool)
+        full = self._draw_duration(job) if pool is None \
+            else self._draw_duration(job, pool)
+        # a preempted job resumes from its checkpoint: size backfill (and
+        # relaunch) at the remaining work, not the full duration
+        done = self._done_frac.get(job.job_id, 0.0)
+        return full * (1.0 - done) if done else full
 
     def expected_end(self, job_id: str) -> Optional[float]:
         return self._ends.get(job_id)

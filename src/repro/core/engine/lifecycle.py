@@ -1,12 +1,22 @@
-"""Job life-cycle state machine (ACAI Fig. 3, extended with dataflow).
+"""Job life-cycle state machine (ACAI Fig. 3, extended with dataflow
+and checkpoint-aware preemption).
 
 SUBMITTED -> QUEUED -> LAUNCHING -> RUNNING -> {FINISHED, FAILED}
 KILLED is reachable from any non-terminal state. UPSTREAM_FAILED is the
 terminal outcome of a job that never launched because a declared
 dependency (``JobSpec.depends_on``) ended FAILED/KILLED/UPSTREAM_FAILED —
 only jobs that have not yet launched can cascade, so it is reachable from
-SUBMITTED and QUEUED alone. The (input fileset, job, output fileset)
-triplet is immutable: a job can be submitted/scheduled once.
+SUBMITTED and QUEUED alone.
+
+PREEMPTED is the one *non-terminal* exit from RUNNING: the scheduler
+revoked the job's reservation (priority starvation, a spot reclamation,
+or a pool shrink), the runner delivered a checkpoint signal, and the job
+re-enters QUEUED for a fresh launch that resumes from its last
+checkpoint. This relaxes the original submit-once invariant: the
+(input fileset, job, output fileset) triplet is still immutable and the
+job id never changes, but a job may now be *scheduled* more than once —
+each requeue bumps ``Job.epoch`` so terminal events from a superseded
+incarnation are recognizably stale.
 """
 from __future__ import annotations
 
@@ -18,6 +28,7 @@ class JobState(str, enum.Enum):
     QUEUED = "QUEUED"
     LAUNCHING = "LAUNCHING"
     RUNNING = "RUNNING"
+    PREEMPTED = "PREEMPTED"
     FINISHED = "FINISHED"
     FAILED = "FAILED"
     KILLED = "KILLED"
@@ -30,7 +41,9 @@ _TRANSITIONS = {
     JobState.QUEUED: {JobState.LAUNCHING, JobState.KILLED,
                       JobState.UPSTREAM_FAILED},
     JobState.LAUNCHING: {JobState.RUNNING, JobState.FAILED, JobState.KILLED},
-    JobState.RUNNING: {JobState.FINISHED, JobState.FAILED, JobState.KILLED},
+    JobState.RUNNING: {JobState.FINISHED, JobState.FAILED, JobState.KILLED,
+                       JobState.PREEMPTED},
+    JobState.PREEMPTED: {JobState.QUEUED, JobState.KILLED},
     JobState.FINISHED: set(),
     JobState.FAILED: set(),
     JobState.KILLED: set(),
@@ -47,6 +60,13 @@ TERMINAL_STATUS_VALUES = frozenset(s.value for s in TERMINAL_STATES)
 
 class IllegalTransition(RuntimeError):
     pass
+
+
+class JobPreempted(RuntimeError):
+    """The scheduler's checkpoint signal reached the job: save state and
+    stop. Raised by cooperative job functions (see ``train/fault.py``,
+    which re-exports it for ``TrainSupervisor``); the preemption-capable
+    runners treat it as a hand-back, not a failure."""
 
 
 def check_transition(old: JobState, new: JobState) -> None:

@@ -20,6 +20,12 @@ cost/speed frontier plus dataflow locality:
                  (the pools the parents ran on) get their score
                  discounted, co-placing pipeline stages with their
                  inputs instead of paying a cross-pool transfer.
+  spot risk    — a spot pool (``Cluster.spot``) has its score inflated by
+                 the reclamations the job is expected to suffer there
+                 (``reclaim_rate`` x predicted runtime x
+                 ``spot_risk_weight``): short jobs harvest the spot
+                 discount, long jobs stay on-demand unless the discount
+                 covers the expected lost work + requeues.
 
 The scheduler calls ``eligible`` once per job at submit (failing fast
 when no pool can ever satisfy it) and ``rank`` when the job becomes
@@ -63,7 +69,8 @@ class Placement:
                  pricing: Optional[dict[str, Any]] = None,
                  predictor: Optional[Predictor] = None,
                  objective: str = "cost",
-                 locality_discount: float = 0.75):
+                 locality_discount: float = 0.75,
+                 spot_risk_weight: float = 1.0):
         if objective not in ("cost", "runtime", "balanced"):
             raise ValueError(f"unknown objective {objective!r}")
         self.pools = dict(pools)
@@ -71,6 +78,11 @@ class Placement:
         self.predictor = predictor
         self.objective = objective
         self.locality_discount = locality_discount
+        # spot risk pricing: a spot pool's score is inflated by the
+        # reclamations the job is expected to suffer there — long jobs
+        # lose more to a reclaim (up to a checkpoint interval each, plus
+        # the requeue), so the discount has to *earn* the risk
+        self.spot_risk_weight = spot_risk_weight
 
     # -- eligibility -----------------------------------------------------
     def resources_for(self, spec, pool: str) -> Optional[dict[str, float]]:
@@ -143,6 +155,13 @@ class Placement:
         opt.local = opt.pool in parent_pools
         if opt.local and len(self.pools) > 1:
             score *= self.locality_discount
+        cl = self.pools[opt.pool]
+        if getattr(cl, "spot", False):
+            # expected reclamations over the run × risk weight: a spot
+            # pool must be cheap enough to beat on-demand *after* paying
+            # for the work a reclaim loses and the requeue it forces
+            score *= 1.0 + self.spot_risk_weight * \
+                getattr(cl, "reclaim_rate", 0.0) * runtime
         opt.score = score
 
     def rank(self, spec, options: dict[str, PoolOption],

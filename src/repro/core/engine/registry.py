@@ -53,10 +53,19 @@ class Job:
     started_at: Optional[float] = None
     finished_at: Optional[float] = None
     runtime: Optional[float] = None          # measured (or virtual) seconds
-    cost: Optional[float] = None
+    cost: Optional[float] = None             # accumulated across segments
     pool: Optional[str] = None               # the pool placement launched on
     error: Optional[str] = None
     outputs: dict[str, Any] = dataclasses.field(default_factory=dict)
+    # checkpoint-aware preemption: epoch counts incarnations (bumped on
+    # every preempt-requeue so terminal events from a superseded run are
+    # recognizably stale); preempt_flag is the cooperative checkpoint
+    # signal threaded runners hand the job fn (a threading.Event — the fn
+    # polls it and raises JobPreempted to yield at a checkpoint)
+    epoch: int = 0
+    preemptions: int = 0
+    preempt_flag: Any = dataclasses.field(default=None, repr=False,
+                                          compare=False)
 
     @property
     def queue_key(self) -> tuple[str, str]:
@@ -98,9 +107,17 @@ class JobRegistry:
             return list(self._jobs.values())
 
     def set_state(self, job_id: str, new: JobState,
-                  error: Optional[str] = None) -> Job:
+                  error: Optional[str] = None,
+                  expect_epoch: Optional[int] = None) -> Optional[Job]:
+        """Transition the job; with ``expect_epoch`` the write commits
+        only while ``job.epoch`` still matches (returns None otherwise) —
+        the check and the write share the registry lock, so a superseded
+        worker can never terminal-ize an incarnation that was preempted
+        (and epoch-bumped) after its last unlocked epoch read."""
         with self._lock:
             job = self._jobs[job_id]
+            if expect_epoch is not None and job.epoch != expect_epoch:
+                return None
             check_transition(job.state, new)
             job.state = new
             if new == JobState.RUNNING:
@@ -108,6 +125,19 @@ class JobRegistry:
             if new in TERMINAL_STATES:
                 job.finished_at = time.time()
                 job.error = error
+            return job
+
+    def mark_preempted(self, job_id: str) -> Job:
+        """Atomically ``RUNNING -> PREEMPTED`` + epoch bump (+ preemption
+        count) under the registry lock, so the epoch a concurrent
+        worker's ``set_state(expect_epoch=...)`` compares against can
+        never be mid-bump."""
+        with self._lock:
+            job = self._jobs[job_id]
+            check_transition(job.state, JobState.PREEMPTED)
+            job.state = JobState.PREEMPTED
+            job.epoch += 1
+            job.preemptions += 1
             return job
 
     def persist_state(self, job_id: str) -> None:

@@ -58,6 +58,21 @@ Fair-share usage optionally decays with a configurable half-life
 (``usage_halflife``, in runner-clock seconds) so past consumption stops
 penalizing a queue forever.
 
+Checkpoint-aware preemption (``preemption=True``, off by default so every
+recorded decision trace replays bit-identically): when a queue head has
+starved past ``starvation_threshold`` runner-clock seconds and fits no
+pool, the scheduler preempts the lowest-priority / latest-started running
+jobs whose released reservations provably unblock it — the launcher
+delivers a checkpoint signal (``launcher.preempt``), fair-share settles
+the victim's *actual partial runtime*, the reservation is released, and
+the victim re-enters QUEUED (``RUNNING -> PREEMPTED -> QUEUED``) to
+resume later from its last checkpoint. Each requeue bumps ``Job.epoch``;
+terminal events stamped with an older epoch are dropped, so a superseded
+incarnation can never settle (or double-release) the reservation of the
+next one. The same preemption path drains a pool shrunk below its live
+reservations (``resize_pool``) and models spot reclamations
+(``reclaim``).
+
 Dispatch is iterative and non-reentrant: runners that publish a terminal
 ``container_status`` synchronously from inside ``launch`` (instant local
 jobs) re-enter the scheduler through the bus; a guard flag folds those
@@ -81,7 +96,7 @@ from typing import Optional
 from repro.core.engine.cluster import Cluster
 from repro.core.engine.events import (EventBus, TOPIC_CONTAINER_STATUS,
                                       TOPIC_SCHEDULER)
-from repro.core.engine.lifecycle import (TERMINAL_STATES,
+from repro.core.engine.lifecycle import (IllegalTransition, TERMINAL_STATES,
                                          TERMINAL_STATUS_VALUES, JobState)
 from repro.core.engine.placement import Placement
 from repro.core.engine.registry import Job, JobRegistry
@@ -148,7 +163,9 @@ class Scheduler:
                  policy: str = "fair", backfill: bool = True,
                  backfill_depth: int = 100,
                  usage_halflife: Optional[float] = None,
-                 snapshot_interval: float = 0.0):
+                 snapshot_interval: float = 0.0,
+                 preemption: bool = False,
+                 starvation_threshold: float = 300.0):
         if policy not in ("fair", "fifo"):
             raise ValueError(f"unknown policy {policy!r}")
         if cluster is not None and placement is not None:
@@ -161,6 +178,14 @@ class Scheduler:
         self.backfill = backfill and policy == "fair"
         self.backfill_depth = backfill_depth
         self.usage_halflife = usage_halflife
+        # checkpoint-aware preemption: off by default (decision traces
+        # recorded without it must replay bit-identically), and only
+        # meaningful when the launcher can deliver a checkpoint signal
+        self.preemption = preemption
+        self.starvation_threshold = starvation_threshold
+        self._can_preempt = callable(getattr(launcher, "preempt", None))
+        self._can_forget = callable(getattr(launcher, "forget", None))
+        self._preempting = False
         # snapshot coalescing: 0.0 publishes on every state change; > 0
         # rate-limits to one snapshot per interval of runner-clock seconds
         self.snapshot_interval = snapshot_interval
@@ -242,7 +267,8 @@ class Scheduler:
                       "wait_count": 0, "wait_sum": 0.0,
                       "wait_by_key": defaultdict(lambda: [0, 0.0]),
                       "placed_by_pool": defaultdict(int),
-                      "snapshots": 0, "snapshots_skipped": 0}
+                      "snapshots": 0, "snapshots_skipped": 0,
+                      "preempted": 0, "reclaimed": 0, "drained": 0}
         self.placement: Optional[Placement] = None
         if placement is not None:
             self.placement = placement
@@ -287,6 +313,123 @@ class Scheduler:
                 w.stale = True      # window certificates name old pools
             self._dirty_full = True
             self._state_rev += 1
+
+    # -- elasticity ------------------------------------------------------
+    def resize_pool(self, pool: str, capacity: dict[str, float], *,
+                    drain: bool = True) -> dict[str, float]:
+        """Grow or shrink a pool's capacity (the provisioning loop's
+        actuator). Per-job placement caches bake capacity thresholds and
+        eligibility, so they are dropped and re-derived lazily; window
+        rejection certificates are refreshed the same way. Reservations
+        that outlive a shrink are drained through the preemption path
+        (lowest-priority, latest-started first) when the launcher
+        supports it — otherwise they simply finish naturally while the
+        over-committed pool admits nothing new. Returns the immediate
+        post-resize overage per dimension (before any drain completes).
+        """
+        with self._lock:
+            cl = self.pools[pool]
+            old_cap = dict(cl.capacity)
+            overage = cl.resize(capacity)
+            grew = any(float(v) > old_cap.get(n, 0.0) + 1e-9
+                       for n, v in capacity.items())
+            if grew:
+                # growth can make jobs eligible on this pool that were
+                # not before (their caches do not reference it, so a
+                # scoped drop would miss them): drop everything. Note
+                # jobs already FAILED infeasible at submit are *not*
+                # resurrected — declare shapes within the pool's floor
+                # capacity, or submit after growing.
+                self._opts_of = {}
+                self._rank_of = {}
+                self._dinfo = {}
+            else:
+                # shrink only narrows eligibility/thresholds of jobs
+                # that reference this pool: a scoped drop is complete,
+                # and the routine elastic control path stays cheap
+                stale = [jid for jid, opts in self._opts_of.items()
+                         if pool in opts]
+                for jid in stale:
+                    self._opts_of.pop(jid, None)
+                    self._rank_of.pop(jid, None)
+                    self._dinfo.pop(jid, None)
+            for w in self._qwin.values():
+                w.stale = True      # certificates embed old thresholds
+            self._futile_blocked = None
+            self._dirty_full = True
+            self._state_rev += 1
+            if overage and drain and self._can_preempt:
+                # drain through the one victim-selection policy (lowest
+                # priority, latest started), best-effort: even if no
+                # victim set fully covers the overage, preempt what helps
+                vics = self._pick_victims(cl, dict(overage), partial=True)
+                over = lambda: any(
+                    cl.used.get(n, 0.0) > cl.capacity.get(n, 0.0) + 1e-9
+                    for n in capacity)
+                was = self._preempting
+                self._preempting = True     # batch: one dispatch at the end
+                try:
+                    for vid in vics or ():
+                        if not over():
+                            break
+                        if self.preempt(vid):
+                            self.stats["drained"] += 1
+                finally:
+                    self._preempting = was
+            self._dispatch()
+            return overage
+
+    def reclaim(self, pool: str,
+                capacity: Optional[dict[str, float]] = None) -> list[str]:
+        """Forced preemption on a (spot) pool — the cloud took the nodes
+        back. Frees at least ``capacity`` on every listed dimension
+        (None = evict everything running there) by preempting victims
+        in the one shared victim order (lowest priority, latest started
+        — ``_pick_victims``); they checkpoint and re-queue like any
+        preemption. Returns the preempted job ids."""
+        with self._lock:
+            cl = self.pools.get(pool)
+            if cl is None or not self._can_preempt:
+                return []
+            if capacity is None:
+                # evict all: the need is everything currently reserved
+                need: dict[str, float] = defaultdict(float)
+                for res in cl.reservations().values():
+                    for n, amt in res.items():
+                        need[n] += amt
+            else:
+                free = cl.free()
+                need = {n: amt - free.get(n, 0.0)
+                        for n, amt in capacity.items()
+                        if amt > free.get(n, 0.0) + 1e-9}
+            if not need:
+                return []           # already free: nothing to evict
+            victims = self._pick_victims(cl, dict(need), partial=True)
+            out = []
+            was = self._preempting
+            self._preempting = True         # batch: one dispatch at the end
+            try:
+                for vid in victims or ():
+                    if self.preempt(vid):
+                        out.append(vid)
+            finally:
+                self._preempting = was
+            self.stats["reclaimed"] += len(out)
+            if out:
+                self._dispatch()
+            return out
+
+    def queued_demand(self, pool: str) -> int:
+        """Live queued jobs eligible on ``pool`` — the provisioning
+        controller's pressure signal. Jobs whose eligibility cache was
+        dropped (a resize just happened) count conservatively as demand."""
+        with self._lock:
+            n = 0
+            for jid in self._queued_set:
+                opts = self._opts_of.get(jid)
+                if opts is None or pool in opts:
+                    n += 1
+            return n
 
     # ------------------------------------------------------------------
     def _now(self) -> float:
@@ -626,6 +769,226 @@ class Scheduler:
                 self.bus.publish(TOPIC_CONTAINER_STATUS,
                                  {"job_id": job_id, "status": "KILLED"})
 
+    # -- checkpoint-aware preemption ------------------------------------
+    def preempt(self, job_id: str) -> bool:
+        """Revoke a RUNNING job's reservation and re-queue it to resume
+        from its last checkpoint (``RUNNING -> PREEMPTED -> QUEUED``).
+
+        Returns False — job untouched — only when it is not RUNNING or
+        the launcher has no ``preempt`` capability. Otherwise the
+        preemption commits *before* the checkpoint signal is delivered
+        (state + epoch move first, so a cooperative worker observing the
+        signal mid-delivery already sees it as real), and the delivery
+        itself is best-effort: a worker that completed in the same
+        instant loses the race and its terminal event is dropped as
+        stale. Fair-share settles the *actual* partial runtime of the
+        segment, the reservation is released exactly once (the epoch
+        guard drops superseded incarnations' terminal events), and the
+        job re-enters its queue with a fresh sequence number and wait
+        clock.
+        """
+        with self._lock:
+            try:
+                job = self.registry.get(job_id)
+            except KeyError:
+                return False
+            if job.state != JobState.RUNNING or not self._can_preempt:
+                return False
+            key = job.queue_key
+            # transition + epoch bump BEFORE delivering the signal, and
+            # atomically under the registry lock: a cooperative worker
+            # that observes its flag mid-delivery must already see the
+            # preemption as real (epoch moved), or it would misread the
+            # raise as spurious and fail the job — and its own
+            # epoch-guarded finalize write must serialize against the bump
+            try:
+                self.registry.mark_preempted(job_id)
+            except IllegalTransition:
+                # a worker finalized the job (RUNNING -> terminal, under
+                # the registry lock alone) between our check and the
+                # transition: the completion won — nothing to preempt
+                return False
+            # best-effort: a worker that completed in the same instant
+            # loses the race — its terminal event (stamped with the old
+            # epoch) is dropped and the job re-runs from its checkpoint
+            self.launcher.preempt(job)
+            self._active[key].discard(job_id)
+            self._settle_preempted(job_id, key, job)
+            self.stats["preempted"] += 1
+            # re-queue for a fresh launch: new seq (the tail of its
+            # queue), new wait clock; pool ranking re-derives at enqueue
+            self.registry.set_state(job_id, JobState.QUEUED)
+            self._seq += 1
+            self._seq_of[job_id] = self._seq
+            self._prio_of[job_id] = job.spec.priority
+            self._queued_at[job_id] = self._now()
+            self._enqueue(job)
+            self._dirty_full = True
+            if not self._preempting:
+                self._dispatch()    # externally-driven preemption (spot
+            return True             # reclaim): relaunch what now fits
+
+    def _settle_preempted(self, job_id: str, key: tuple, job) -> None:
+        """Release the preempted segment's reservation and charge
+        fair-share with its actual partial runtime. Unlike ``_settle``
+        the per-job caches survive — the job is still live and about to
+        re-enter its queue."""
+        pool_cl, released, started_at = self._release_segment(job_id, job)
+        self._state_rev += 1
+        if started_at is None:
+            return
+        self._charge_segment(key, job, pool_cl, released,
+                             max(0.0, self._now() - started_at))
+
+    def _release_segment(self, job_id: str, job) -> tuple:
+        """Release the job's reservation and shadow-state entry — the
+        half of settling shared by terminal settles and preemptions.
+        Returns (pool cluster, released charge, started_at)."""
+        pool_cl = self.pools.get(job.pool) if job.pool else None
+        released = pool_cl.release(job_id) if pool_cl is not None else None
+        started_at = self._started_at.pop(job_id, None)
+        self._drop_shadow(job_id)
+        self._dirty_full = True
+        return pool_cl, released, started_at
+
+    def _charge_segment(self, key: tuple, job, pool_cl, released,
+                        runtime: float) -> None:
+        """Fair-share charge for one runtime segment: the dominant share
+        on the pool the job ran on (the released charge when available) —
+        THE one formula for terminal and preemption settles alike."""
+        if pool_cl is None:
+            share = 1.0
+        elif released is not None:
+            share = pool_cl.dominant_share_charge(released)
+        else:
+            share = pool_cl.dominant_share(job.spec.resources)
+        self._charge_usage(key, (share if share > 0 else 1.0) * runtime)
+
+    def _run_preemption(self) -> bool:
+        """One preemption round: find the starved head — the highest
+        effective-priority live queue-head whose wait exceeds
+        ``starvation_threshold`` and which fits no pool — then preempt
+        the lowest-priority / latest-started running jobs whose released
+        reservations cover its shortfall on some eligible pool (tried in
+        the head's placement rank order). Returns True if victims were
+        preempted (the caller re-dispatches)."""
+        if self.placement is None:
+            return False
+        now = self._now()
+        jpos = 2 if self.policy != "fifo" else 1
+        head = None     # (-eff_priority, seq) of the best starved head
+        for key, w in self._qwin.items():
+            if self._qlen.get(key, 0) <= 0:
+                continue
+            if len(self._active[key]) >= self.quota_k:
+                continue    # quota-pinned: a launch is impossible anyway
+            if w.stale:
+                self._win_refresh(key, w)
+            # O(1) pre-filter: _queued_at is assigned in seq order, so
+            # the first live row in arrival order holds the queue's
+            # minimum wait clock — if IT is not starved, nobody here is,
+            # and the sorted-candidate walk below is skipped entirely
+            # (the common case on every dispatch under steady load)
+            oldest_ok = False
+            for row in w.rows:
+                jid0 = row[jpos]
+                if jid0 in self._queued_set:
+                    oldest_ok = now - self._queued_at.get(jid0, now) >= \
+                        self.starvation_threshold
+                    break
+            if not oldest_ok:
+                continue
+            # scan in candidate *sort* order, not arrival order: the
+            # queue's policy head is its highest-priority live job, and a
+            # starved high-priority job parked behind an older low-prio
+            # one must not be hidden by it
+            rows = w.rows if self.policy == "fifo" else \
+                self._queue_cands(w, len(w.rows))
+            for row in rows:
+                jid = row[jpos]
+                if jid not in self._queued_set:
+                    continue
+                # only queue heads are starvation candidates: deeper jobs
+                # are behind them by policy order anyway
+                if now - self._queued_at.get(jid, now) >= \
+                        self.starvation_threshold:
+                    eff = self._qconf[key].priority + \
+                        self._prio_of.get(jid, 0)
+                    cand = (-eff, self._seq_of.get(jid, 0), jid, key)
+                    if head is None or cand < head:
+                        head = cand
+                break
+        if head is None:
+            return False
+        neg_prio, _, jid, key = head
+        head_prio = -neg_prio
+        job = self._job_of[jid]
+        recs = self._dinfo.get(jid)
+        if recs is None:
+            if not self._ensure_opts(job):
+                return False
+            recs = self._dinfo.get(jid)
+            if recs is None:
+                return False
+        # a head that fits some pool right now is backfill/fairness
+        # blocked, not capacity starved: preemption cannot help it
+        for rec in recs:
+            used_d = rec[1]
+            if all(used_d.get(n, 0.0) + amt <= thr
+                   for n, amt, thr in rec[2]):
+                return False
+        for pname in self._rank_of.get(jid, ()):
+            cl = self.pools.get(pname)
+            if cl is None:
+                continue
+            charge = self._opts_of[jid][pname].charge
+            free = cl.free()
+            need = {n: amt - free.get(n, 0.0) for n, amt in charge.items()
+                    if amt > free.get(n, 0.0) + 1e-9}
+            if not need:
+                continue
+            victims = self._pick_victims(cl, need, max_priority=head_prio)
+            if victims is None:
+                continue        # this pool cannot be unblocked: next
+            for vid in victims:
+                self.preempt(vid)
+            return True
+        return False
+
+    def _pick_victims(self, cl, need: dict[str, float], *,
+                      max_priority: Optional[int] = None,
+                      partial: bool = False) -> Optional[list[str]]:
+        """The minimal prefix of (lowest effective priority, latest
+        started) RUNNING jobs on ``cl`` whose reservations cover every
+        dimension of ``need``. When full coverage is impossible, returns
+        None — or, with ``partial=True``, every eligible victim (the
+        shrink-drain's best effort). ``max_priority`` (exclusive)
+        protects equal-or-higher-priority work from being preempted for
+        a starved head. This is THE victim-selection policy: starvation
+        preemption, spot reclamation drains and pool-shrink drains must
+        all pick identically."""
+        cands = []
+        for vid, res in cl.reservations().items():
+            vjob = self._job_of.get(vid)
+            if vjob is None or vjob.state != JobState.RUNNING:
+                continue
+            vprio = self._qconf[vjob.queue_key].priority + \
+                self._prio_of.get(vid, 0)
+            if max_priority is not None and vprio >= max_priority:
+                continue
+            cands.append((vprio, -self._started_at.get(vid, 0.0), vid, res))
+        cands.sort()
+        chosen: list[str] = []
+        freed: dict[str, float] = defaultdict(float)
+        for _, _, vid, res in cands:
+            chosen.append(vid)
+            for n, amt in res.items():
+                freed[n] += amt
+            if all(freed.get(n, 0.0) + 1e-9 >= amt
+                   for n, amt in need.items()):
+                return chosen
+        return chosen if partial else None
+
     def _unhold(self, job_id: str) -> None:
         """Drop a held job's gating state: O(its parents), using the unmet
         set as the exact index into _dependents."""
@@ -692,8 +1055,14 @@ class Scheduler:
             # passage of time only *hardens* the backfill duration test,
             # and fair-share order changes cannot create admissions when
             # there are none to reorder.
+            self._maybe_preempt()
             self._publish_snapshot()
             return
+        self._dispatch_loop()
+        self._maybe_preempt()
+        self._publish_snapshot()
+
+    def _dispatch_loop(self) -> None:
         self._dispatching = True
         try:
             progress = True
@@ -704,7 +1073,21 @@ class Scheduler:
             del self._new_cands[:]
         finally:
             self._dispatching = False
-        self._publish_snapshot()
+
+    def _maybe_preempt(self) -> None:
+        """Starvation-triggered preemption rounds after a dispatch pass:
+        each round frees exactly the capacity one starved head needs,
+        then re-runs dispatch so it (and anything else the releases
+        unblocked) launches. Non-reentrant — the dispatches triggered by
+        requeued victims fold into this round instead of recursing."""
+        if not self.preemption or not self._can_preempt or self._preempting:
+            return
+        self._preempting = True
+        try:
+            while self._run_preemption():
+                self._dispatch_loop()
+        finally:
+            self._preempting = False
 
     def _new_arrivals_unfit(self) -> bool:
         """True when skipping a full dispatch pass is provably
@@ -1373,6 +1756,13 @@ class Scheduler:
         with self._lock:
             job_id = msg["job_id"]
             job = self.registry.get(job_id)
+            epoch = msg.get("epoch")
+            if epoch is not None and epoch < job.epoch:
+                # stale event from a pre-preemption incarnation (e.g. a
+                # thread worker that finished after its job was preempted
+                # and relaunched): settling it would release — and
+                # fair-share-charge — the *new* incarnation's reservation
+                return
             key = job.queue_key
             self._active[key].discard(job_id)
             self._release_dependents(job_id, status)
@@ -1385,9 +1775,7 @@ class Scheduler:
         later pops off the clock and publishes KILLED again), and
         usage/completed only accrue for jobs that actually launched."""
         job = self.registry.get(job_id)
-        pool_cl = self.pools.get(job.pool) if job.pool else None
-        released = pool_cl.release(job_id) if pool_cl is not None else None
-        started_at = self._started_at.pop(job_id, None)
+        pool_cl, released, started_at = self._release_segment(job_id, job)
         self._prio_of.pop(job_id, None)
         self._opts_of.pop(job_id, None)
         self._rank_of.pop(job_id, None)
@@ -1395,8 +1783,27 @@ class Scheduler:
         self._job_of.pop(job_id, None)
         self._seq_of.pop(job_id, None)
         self._queued_at.pop(job_id, None)
-        self._dirty_full = True
-        # drop the job from its pool's shadow state (O(log n) locate)
+        if self._can_forget:
+            # the job is terminal: the launcher may hold restore state
+            # (checkpoint progress) for it that no live run will reclaim
+            self.launcher.forget(job_id)
+        self._settles += 1
+        if self._settles % 256 == 0:
+            self._compact_min_charge()
+        self._state_rev += 1
+        if started_at is None:
+            return          # never launched (queued kill / infeasible)
+        runtime = job.runtime
+        if runtime is None:
+            runtime = max(0.0, self._now() - started_at)
+        # fair-share usage is the dominant share on the pool the job ran
+        # on: consuming half the TPU pool weighs like half the CPU pool
+        self._charge_segment(key, job, pool_cl, released, runtime)
+        self.stats["completed"] += 1
+
+    def _drop_shadow(self, job_id: str) -> None:
+        """Drop the job from its pool's incremental EASY shadow state
+        (O(log n) locate) — shared by terminal settle and preemption."""
         ek = self._end_key.pop(job_id, None)
         if ek is not None:
             pool_name, sort_key = ek
@@ -1409,25 +1816,6 @@ class Scheduler:
                     i = bisect_left(ends, sort_key)
                     if i < len(ends) and ends[i][2] == job_id:
                         ends.pop(i)
-        self._settles += 1
-        if self._settles % 256 == 0:
-            self._compact_min_charge()
-        self._state_rev += 1
-        if started_at is None:
-            return          # never launched (queued kill / infeasible)
-        runtime = job.runtime
-        if runtime is None:
-            runtime = max(0.0, self._now() - started_at)
-        # fair-share usage is the dominant share on the pool the job ran
-        # on: consuming half the TPU pool weighs like half the CPU pool
-        if pool_cl is None:
-            share = 1.0
-        elif released is not None:
-            share = pool_cl.dominant_share_charge(released)
-        else:
-            share = pool_cl.dominant_share(job.spec.resources)
-        self._charge_usage(key, (share if share > 0 else 1.0) * runtime)
-        self.stats["completed"] += 1
 
     def _compact_min_charge(self) -> None:
         """Periodic sweep of the saturation heaps: lazy pruning only
@@ -1483,6 +1871,7 @@ class Scheduler:
             "queued": sum(self._qlen.values()),
             "held": len(self._held),
             "active": sum(len(a) for a in self._active.values()),
+            "preempted": self.stats["preempted"],
         })
 
     # ------------------------------------------------------------------

@@ -99,6 +99,23 @@ TPU_PRICING = ChipScaledPricing([
 ], family="tpu")
 
 
+def spot_pricing(pricing: Pricing, discount: float = 0.6,
+                 family: str | None = None) -> Pricing:
+    """A spot/preemptible catalog entry derived from an on-demand one:
+    the same resource dimensions at ``(1 - discount)`` x the unit price
+    (GCP spot VMs run 60–91 % below on-demand). The concrete pricing
+    subclass is preserved, so chip-scaled TPU pricing stays chip-scaled.
+    Pair it with a ``Cluster(spot=True, reclaim_rate=...)`` pool: the
+    placement layer prices the reclamation risk into the discount."""
+    if not 0.0 < discount < 1.0:
+        raise ValueError(f"discount must be in (0, 1), got {discount}")
+    dims = [dataclasses.replace(d,
+                                base_unit_price=d.base_unit_price
+                                * (1.0 - discount))
+            for d in pricing.dims.values()]
+    return type(pricing)(dims, family or f"{pricing.family}-spot")
+
+
 def default_catalog() -> dict[str, "Pricing"]:
     """One pricing per accelerator family — the pool catalog the engine
     turns into a heterogeneous deployment (``pricing=default_catalog()``,

@@ -6,7 +6,19 @@ through the data lake, (b) automatic restore-and-continue on failures
 and (c) a step-time watchdog implementing the paper's straggler policy at
 training-step granularity (a step slower than ``straggler_factor`` x the
 running median is flagged; on real fleets the launcher would reschedule the
-slow host — here we record + expose the signal)."""
+slow host — here we record + expose the signal).
+
+Scheduler preemption ties in here: a checkpoint-aware preemption
+(``Scheduler.preempt``) delivers a cooperative signal through the
+runner's ``Job.preempt_flag``; ``preemption_hook(job)`` turns that flag
+into the ``JobPreempted`` the supervisor (or the agent) already handles,
+so a preempted training job stops at a step boundary with its latest
+checkpoint saved and the relaunch restores via elastic restore instead
+of restarting from step 0. ``JobPreempted`` itself lives in
+``core/engine/lifecycle.py`` (the engine must recognize it without
+importing the jax-backed train stack) and is re-exported here for
+backwards compatibility.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -14,11 +26,38 @@ import statistics
 import time
 from typing import Callable, Optional
 
+from repro.core.engine.lifecycle import JobPreempted  # noqa: F401 (re-export)
 from repro.train.checkpoints import CheckpointManager
 
 
-class JobPreempted(RuntimeError):
-    """Simulated node failure / preemption."""
+def preemption_hook(job) -> Callable[[int], None]:
+    """A ``TrainSupervisor.run(failure_hook=...)`` adapter for the
+    engine's cooperative checkpoint signal: raises ``JobPreempted`` at
+    the next step boundary once the scheduler preempts ``job``. The
+    preemption-capable runners treat the raise as a hand-back (the job
+    re-queues and resumes from its last checkpoint), not a failure.
+
+    Create the hook at the *start* of each incarnation (inside the job
+    fn): it captures the incarnation's epoch, so a worker superseded by
+    a relaunch still observes its preemption even though the relaunch
+    installed a fresh (unset) ``preempt_flag`` on the shared Job —
+    polling the flag alone would race that replacement and miss the
+    signal."""
+    epoch0 = getattr(job, "epoch", 0)
+
+    def hook(step: int) -> None:
+        flag = getattr(job, "preempt_flag", None)
+        if getattr(job, "epoch", 0) != epoch0 or \
+                (flag is not None and flag.is_set()):
+            exc = JobPreempted(
+                f"{job.job_id} preempted at step {step}")
+            # external (scheduler-driven) preemptions must propagate out
+            # of the supervisor — the process hands capacity back and the
+            # *relaunch* restores; restarting in-process would keep the
+            # revoked reservation busy
+            exc.external = True
+            raise exc
+    return hook
 
 
 @dataclasses.dataclass
@@ -67,7 +106,10 @@ class TrainSupervisor:
                     self.ckpt.save(step, state["params"], state["opt"],
                                    extra={"loss": float(metrics["loss"])})
                     report.checkpoints += 1
-            except JobPreempted:
+            except JobPreempted as e:
+                if getattr(e, "external", False):
+                    raise   # scheduler preemption: hand back the slot;
+                            # the relaunch restores from the checkpoint
                 report.restarts += 1
                 if report.restarts > self.max_restarts:
                     raise

@@ -45,6 +45,21 @@ def test_heterogeneous_placement_trace_matches_pre_refactor_golden():
     assert got == _golden("hetero")
 
 
+def test_preemption_enabled_trace_matches_golden():
+    """The preemption-policy golden (recorded when the feature landed):
+    starved high-priority heads preempt victims whose relaunches appear
+    as duplicate trace entries — victim selection, checkpoint-resume
+    scheduling and kill interleaving are all pinned."""
+    got = decision_trace(400, 7, policy="fair", backfill=True,
+                         preemption=True, starvation_threshold=60.0,
+                         checkpoint_interval=30.0, priority_every=7,
+                         kill_every=31)
+    golden = _golden("preempt")
+    assert got == golden
+    # the trace really exercises preemption: relaunches duplicate names
+    assert len(golden) > len({name for name, _ in golden})
+
+
 # -- kill under load: O(1) amortized, no tombstone leaks -----------------
 def _engine(cluster=None, quota_k=100):
     registry = JobRegistry()
