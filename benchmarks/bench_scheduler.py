@@ -41,8 +41,8 @@ from repro.core.engine.events import EventBus
 from repro.core.engine.launcher import VirtualRunner
 from repro.core.engine.lifecycle import TERMINAL_STATES, JobState
 from repro.core.engine.monitor import JobMonitor
-from repro.core.engine.placement import Placement
-from repro.core.engine.registry import JobRegistry, JobSpec
+from repro.core.engine.placement import Placement, TransferCostModel
+from repro.core.engine.registry import GangSpec, JobRegistry, JobSpec
 from repro.core.engine.scheduler import Scheduler
 from repro.core.provision.elastic import ElasticController, PoolPolicy
 from repro.core.provision.pricing import (CPU_PRICING, ChipScaledPricing,
@@ -96,6 +96,34 @@ GPU_BENCH_PRICING = Pricing([
     ResourceDim("vram_gb", 8, 80, 0.002, (8, 16, 40, 80)),
 ], family="gpu")
 
+# -- gang scenario (8-pod training gangs vs 1-pod sweep jobs) ------------
+GANG_JOBS = 600
+GANG_PODS = 8               # pods per training gang (4 GPUs per pod)
+GANG_POD_GPUS = 4.0
+GANG_FRACTION = 0.03        # gang share of the open-loop fleet body
+GANG_LOAD = 0.4             # open-loop target load across both pools —
+                            # low enough that both pools usually have
+                            # room, so jobs get their top-RANKED pool and
+                            # the A/B difference is the placement choice,
+                            # not greedy same-pool spill under saturation
+GANG_WAVE = 3               # final training wave: 3 gangs, 60s apart
+GANG_NODES = 16             # nodes per pool, 8 GPUs each
+# interconnect islands: "pod" hosts a whole gang close; "island" can only
+# keep 2 pods on one island, so a close-topology gang spread there pays
+# an all-reduce slowdown (the oracle's ground truth below)
+GANG_CLOSE = {"pod": GANG_PODS, "island": 2}
+GANG_SPREAD_SLOWDOWN = 3.0  # runtime inflation at full spread
+GANG_INTERCONNECT_W = 4.0   # placement's modelled spread penalty weight
+GANG_POD_PRICING = Pricing([
+    ResourceDim("gpu", 1, 8, 0.20, (1, 2, 4, 8))], family="pod")
+GANG_ISLAND_PRICING = Pricing([
+    ResourceDim("gpu", 1, 8, 0.10, (1, 2, 4, 8))], family="island")
+
+# -- thundering-herd scenario (one user map()-fans a sweep) ---------------
+HERD_JOBS = 10_000          # the fanning user's burst, all at t=0
+HERD_OTHERS = 63            # background users sharing the cluster
+HERD_P95_BOUND = 300.0      # fair-share gate on the others' p95 wait
+
 
 class AuditingCluster(Cluster):
     """Records the reservation high-water mark per dimension, plus
@@ -121,6 +149,39 @@ class AuditingCluster(Cluster):
     def oversubscribed(self) -> bool:
         return any(self.high_water[n] > self.capacity[n] + 1e-9
                    for n in self.capacity)
+
+
+class GangAuditingCluster(AuditingCluster):
+    """AuditingCluster + the gang invariant: ``reserve_gang`` either holds
+    ALL n pods' charge or leaves the books untouched — audited against
+    the live usage before/after every call, success or failure. A nonzero
+    ``partial_gang_holds`` fails the scenario's hard gate."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.gang_reserves = 0
+        self.partial_gang_holds = 0
+
+    def reserve_gang(self, job_id, per_pod, n_pods):
+        before = dict(self.used)
+        pod = self.charge(per_pod)
+        try:
+            agg = super().reserve_gang(job_id, per_pod, n_pods)
+        except Exception:
+            if any(abs(self.used.get(n, 0.0) - before.get(n, 0.0)) > 1e-9
+                   for n in set(before) | set(self.used)):
+                self.partial_gang_holds += 1    # failed reserve left charge
+            raise
+        self.gang_reserves += 1
+        held = self.held(job_id) or {}
+        if any(abs(held.get(n, 0.0) - amt * n_pods) > 1e-9
+               for n, amt in pod.items()):
+            self.partial_gang_holds += 1        # held != n_pods x per-pod
+        for n in self.capacity:
+            self.high_water[n] = max(self.high_water[n], self.used[n])
+            if self.used[n] > self.capacity[n] + 1e-9:
+                self.reserve_violations += 1
+        return agg
 
 
 class RandomPlacement(Placement):
@@ -228,7 +289,9 @@ def decision_trace(n_jobs: int = 500, seed: int = 7, *,
                    quota_k: int = 16, preemption: bool = False,
                    starvation_threshold: float = 300.0,
                    checkpoint_interval: float | None = None,
-                   priority_every: int = 0) -> list[list]:
+                   priority_every: int = 0,
+                   transfer_costs: TransferCostModel | None = None
+                   ) -> list[list]:
     """The scheduler's decision sequence on a fixed-seed fleet:
     ``[[job name, pool], ...]`` in launch order. A perf refactor of the
     dispatch core must reproduce this trace bit-identically (same launch
@@ -249,7 +312,7 @@ def decision_trace(n_jobs: int = 500, seed: int = 7, *,
         placement = Placement(
             {"cpu": _cpu_pool(CPU_NODES), "tpu": _tpu_pool()},
             pricing={"cpu": CPU_PRICING, "tpu": TPU_BENCH_PRICING},
-            objective="cost")
+            objective="cost", transfer_costs=transfer_costs)
         placement.use_profiler(fit_hetero_profiler())
         cluster = None
         oracle = hetero_oracle
@@ -335,7 +398,8 @@ def simulate(arrivals: list[tuple[float, JobSpec]], *,
              cluster=None, placement=None, pricing=None, oracle=None,
              policy: str = "fair", backfill: bool = True,
              quota_k: int = 16, backfill_depth: int = 50,
-             snapshot_interval: float = 3600.0) -> dict:
+             snapshot_interval: float = 3600.0,
+             user_waits: dict | None = None) -> dict:
     """Drive one scheduler configuration through an arrival process on
     the virtual clock; returns metrics incl. slowdown percentiles.
     Scheduler snapshots are coalesced to one per virtual hour by default
@@ -387,6 +451,8 @@ def simulate(arrivals: list[tuple[float, JobSpec]], *,
         wait = starts[jid] - t_sub
         rt = j.runtime or 0.0
         slow.append(max(1.0, (wait + rt) / max(rt, SLOWDOWN_TAU)))
+        if user_waits is not None:
+            user_waits.setdefault(j.spec.user, []).append(wait)
     p50, p95, p99 = np.percentile(slow, [50, 95, 99])
     makespan = runner.now
     total_cost = sum(j.cost or 0.0 for j in jobs)
@@ -576,6 +642,191 @@ def run_scale(n_jobs: int = SCALE_JOBS, seed: int = 0) -> dict:
                     "pools": ["cpu", "gpu", "tpu"]}
     assert not res["oversubscribed"], "scale scenario oversubscribed"
     return res
+
+
+# -- scenario 5: gang scheduling + topology-aware placement ---------------
+def make_gang_arrivals(seed: int = 0, n_jobs: int = GANG_JOBS
+                       ) -> list[tuple[float, JobSpec]]:
+    """Open-loop mixed fleet: 1-pod sweep jobs plus close-topology 8-pod
+    training gangs (4 GPUs per pod); ``args['work']`` is the job's
+    runtime when its interconnect is not the bottleneck. Arrivals are
+    Poisson at ~GANG_LOAD of the two pools' combined capacity, so jobs
+    usually get their top-RANKED pool — what the scenario measures is
+    the placement *choice*, not saturated work conservation (under which
+    any two work-conserving schedules tie). The fleet ends with a
+    *training wave* — the sweep campaign's winners scale up to gangs —
+    so the makespan tail is gang runtime: a placement that spreads those
+    gangs off-island pays the slowdown where it cannot hide."""
+    rng = np.random.default_rng(seed + 11)
+
+    def gang(i):
+        return JobSpec(
+            name=f"gang-{i}", project="bench",
+            user=f"u{int(rng.integers(N_USERS))}",
+            args={"work": float(rng.uniform(300.0, 900.0))},
+            resources={"gpu": GANG_POD_GPUS},
+            gang=GangSpec(n_pods=GANG_PODS, topology="close"))
+
+    fleet = []
+    for i in range(n_jobs):
+        if rng.random() < GANG_FRACTION:
+            fleet.append(gang(i))
+        else:
+            fleet.append(JobSpec(
+                name=f"sweep-{i}", project="bench",
+                user=f"u{int(rng.integers(N_USERS))}",
+                args={"work": float(rng.uniform(120.0, 600.0))},
+                resources={"gpu": 4.0}))
+    # the fleet's slowdown-free GPU-seconds set the arrival span
+    total = sum(s.args["work"] * s.resources["gpu"] * s.n_pods
+                for s in fleet)
+    span = total / (2 * 8.0 * GANG_NODES * GANG_LOAD)
+    times = np.cumsum(rng.exponential(span / n_jobs, size=n_jobs))
+    out = list(zip(times.tolist(), fleet))
+    # the wave starts after the longest body job could drain, so both
+    # configurations choose pools for it with comparable free capacity
+    t_wave = float(times[-1]) + 960.0
+    for k in range(GANG_WAVE):
+        out.append((t_wave + 60.0 * k, gang(n_jobs + k)))
+    return out
+
+
+def gang_oracle(job) -> float:
+    """Ground truth: a close-topology gang spread past its pool's
+    interconnect island runs slower, in proportion to the off-island
+    pod fraction (all-reduce over the slow links)."""
+    work = job.spec.args["work"]
+    gang = job.spec.gang
+    close = GANG_CLOSE.get(job.pool)
+    if gang is not None and gang.topology == "close" and \
+            close is not None and close < gang.n_pods:
+        frac = (gang.n_pods - close) / gang.n_pods
+        return work * (1.0 + GANG_SPREAD_SLOWDOWN * frac)
+    return work
+
+
+def _gang_pools() -> dict[str, GangAuditingCluster]:
+    shape = {"gpu": 8.0}
+    return {name: GangAuditingCluster(
+                {"gpu": 8.0 * GANG_NODES}, {"gpu": 1.0}, name=name,
+                node_shape=shape, close_gang_pods=GANG_CLOSE[name])
+            for name in ("pod", "island")}
+
+
+def run_gang(n_jobs: int = GANG_JOBS, seed: int = 0,
+             quota_k: int = 64) -> dict:
+    """Gang-aware placement (transfer-cost model prices the interconnect
+    spread) vs gang-oblivious (raw price only — it routes gangs to the
+    cheap 'island' pool, where the oracle slows them down) on identical
+    fleets. Hard gates: gang-aware wins makespan, and no gang ever
+    partially holds capacity in either configuration (audited at every
+    reserve, success or failure)."""
+    arrivals = make_gang_arrivals(seed, n_jobs)
+    catalog = {"pod": GANG_POD_PRICING, "island": GANG_ISLAND_PRICING}
+
+    def run_one(transfer):
+        pools = _gang_pools()
+        placement = Placement(pools, pricing=catalog, objective="cost",
+                              transfer_costs=transfer)
+        res = simulate(arrivals, placement=placement, pricing=catalog,
+                       oracle=gang_oracle, quota_k=quota_k)
+        res["gang_reserves"] = sum(cl.gang_reserves
+                                   for cl in pools.values())
+        res["partial_gang_holds"] = sum(cl.partial_gang_holds
+                                        for cl in pools.values())
+        res["reserve_violations"] = sum(cl.reserve_violations
+                                        for cl in pools.values())
+        return res
+
+    aware = run_one(TransferCostModel(
+        interconnect_weight=GANG_INTERCONNECT_W))
+    oblivious = run_one(None)
+    out = {
+        "fleet": {"n_jobs": n_jobs, "n_users": N_USERS,
+                  "gang_pods": GANG_PODS,
+                  "nodes_per_pool": GANG_NODES,
+                  "close_gang_pods": dict(GANG_CLOSE),
+                  "spread_slowdown": GANG_SPREAD_SLOWDOWN},
+        "gang_aware": aware,
+        "gang_oblivious": oblivious,
+        "makespan_speedup":
+            oblivious["makespan_s"] / aware["makespan_s"],
+    }
+    for name, r in (("aware", aware), ("oblivious", oblivious)):
+        assert r["gang_reserves"] > 0, f"gang.{name}: gangs never reserved"
+        assert r["partial_gang_holds"] == 0, \
+            f"gang.{name}: a gang partially held capacity"
+        assert r["reserve_violations"] == 0 and not r["oversubscribed"], \
+            f"gang.{name}: oversubscribed"
+    assert aware["makespan_s"] < oblivious["makespan_s"], \
+        "gang-aware placement did not beat gang-oblivious on makespan"
+    return out
+
+
+# -- scenario 6: thundering herd vs fair share ----------------------------
+def make_herd_arrivals(seed: int = 0, n_herd: int = HERD_JOBS,
+                       n_others: int = 0) -> list[tuple[float, JobSpec]]:
+    """One user ``map()``-fans ``n_herd`` short jobs at t=0; ``n_others``
+    background jobs from HERD_OTHERS other users trickle in uniformly
+    while the burst drains."""
+    rng = np.random.default_rng(seed + 123)
+    arrivals = [(0.0, JobSpec(
+        name=f"herd-{i}", project="bench", user="u_herd",
+        duration=float(rng.uniform(5.0, 20.0)),
+        resources={"vcpu": 1.0, "mem_mb": 512.0}))
+        for i in range(n_herd)]
+    # approximate burst drain time on the NODES-node cluster: the window
+    # background arrivals must ride out without starving
+    span = n_herd * 12.5 / (NODES * 8.0)
+    for i in range(n_others):
+        user = f"u{int(rng.integers(HERD_OTHERS))}"
+        arrivals.append((float(rng.uniform(0.0, span)), JobSpec(
+            name=f"bg-{i}", project="bench", user=user,
+            duration=float(rng.uniform(10.0, 60.0)),
+            resources={"vcpu": 1.0, "mem_mb": 1024.0})))
+    arrivals.sort(key=lambda p: p[0])
+    return arrivals
+
+
+def run_herd(n_herd: int = HERD_JOBS, seed: int = 0) -> dict:
+    """FIFO vs fair-share under one user's 10k-job burst. The gate: fair
+    share keeps the OTHER users' p95 queue wait under HERD_P95_BOUND
+    seconds (and far below FIFO's, which makes them ride out the whole
+    burst) — one user fanning a sweep cannot monopolize the cluster."""
+    arrivals = make_herd_arrivals(seed, n_herd, max(200, n_herd // 5))
+
+    def run_one(policy: str, backfill: bool) -> dict:
+        cluster = AuditingCluster(
+            {n: max(d.values) * NODES for n, d in CPU_PRICING.dims.items()},
+            {n: d.minimum for n, d in CPU_PRICING.dims.items()})
+        waits: dict[str, list[float]] = {}
+        res = simulate(arrivals, cluster=cluster, pricing=CPU_PRICING,
+                       policy=policy, backfill=backfill, user_waits=waits)
+        others = [w for u, ws in waits.items() if u != "u_herd" for w in ws]
+        res["others_wait_p95_s"] = \
+            float(np.percentile(others, 95)) if others else 0.0
+        res["herd_wait_p95_s"] = \
+            float(np.percentile(waits.get("u_herd", [0.0]), 95))
+        return res
+
+    fifo = run_one("fifo", backfill=False)
+    fair = run_one("fair", backfill=True)
+    out = {
+        "fleet": {"n_herd": n_herd, "n_other_users": HERD_OTHERS,
+                  "nodes": NODES},
+        "fifo": fifo,
+        "fair_backfill": fair,
+        "others_p95_cut":
+            1.0 - fair["others_wait_p95_s"] /
+            max(fifo["others_wait_p95_s"], 1e-9),
+    }
+    assert not fifo["oversubscribed"] and not fair["oversubscribed"]
+    assert fair["others_wait_p95_s"] <= HERD_P95_BOUND, \
+        (f"herd: fair-share others' p95 wait "
+         f"{fair['others_wait_p95_s']:.0f}s exceeds {HERD_P95_BOUND:.0f}s")
+    assert fair["others_wait_p95_s"] < 0.25 * fifo["others_wait_p95_s"], \
+        "herd: fair-share did not materially beat FIFO for other users"
+    return out
 
 
 # -- scenario 4: elastic spot pools + checkpoint-aware preemption --------
@@ -856,7 +1107,8 @@ def check_throughput_regression(measured: dict, path: str,
 def run(n_jobs: int = N_JOBS, seed: int = 0,
         hetero_jobs: int = HETERO_JOBS, trace: str | None = None,
         scale_jobs: int = SCALE_JOBS, policy_repeats: int = 3,
-        elastic_jobs: int = ELASTIC_JOBS) -> dict:
+        elastic_jobs: int = ELASTIC_JOBS, gang_jobs: int = GANG_JOBS,
+        herd_jobs: int = HERD_JOBS) -> dict:
     arrivals = trace_arrivals(trace) if trace else \
         poisson_arrivals(make_fleet(seed, n_jobs), ARRIVAL_RATE, seed)
     fifo = run_policy(arrivals, "fifo", backfill=False,
@@ -874,6 +1126,10 @@ def run(n_jobs: int = N_JOBS, seed: int = 0,
             1.0 - fair["mean_queue_wait_s"] / fifo["mean_queue_wait_s"],
         "hetero": run_hetero(hetero_jobs, seed),
     }
+    if gang_jobs:
+        out["gang"] = run_gang(gang_jobs, seed)
+    if herd_jobs:
+        out["herd"] = run_herd(herd_jobs, seed)
     if elastic_jobs:
         out["elastic"] = run_elastic(elastic_jobs, seed)
     if scale_jobs:
@@ -912,6 +1168,27 @@ def report(res: dict, write: bool = True) -> None:
     print(f"scheduler.throughput,0,"
           f"fifo={res['fifo']['sched_events_per_s']:.0f}/s"
           f"_fair={res['fair_backfill']['sched_events_per_s']:.0f}/s")
+    if "gang" in res:
+        g = res["gang"]
+        for name in ("gang_aware", "gang_oblivious"):
+            r = g[name]
+            pools = ",".join(f"{p}:{c}" for p, c in
+                             sorted(r["placed_by_pool"].items()))
+            print(f"scheduler.{name},{r['wall_s'] * 1e6:.0f},"
+                  f"makespan={r['makespan_s']:.0f}s"
+                  f"_gangs={r['gang_reserves']}"
+                  f"_partial_holds={r['partial_gang_holds']}"
+                  f"_pools={pools}")
+        print(f"scheduler.gang.placement,0,"
+              f"makespan_x={g['makespan_speedup']:.2f}")
+    if "herd" in res:
+        hd = res["herd"]
+        print(f"scheduler.herd,{hd['fair_backfill']['wall_s'] * 1e6:.0f},"
+              f"n_herd={hd['fleet']['n_herd']}"
+              f"_others_p95_fair="
+              f"{hd['fair_backfill']['others_wait_p95_s']:.0f}s"
+              f"_fifo={hd['fifo']['others_wait_p95_s']:.0f}s"
+              f"_cut={hd['others_p95_cut'] * 100:.1f}%")
     if "elastic" in res:
         e = res["elastic"]
         el, st = e["elastic_spot"], e["static_ondemand"]
@@ -985,7 +1262,8 @@ def main() -> None:
         # runner noise (the 400-job fleet makes repeats cheap)
         res = run(n_jobs=args.n_jobs or 400, hetero_jobs=400,
                   trace=args.trace, scale_jobs=args.scale or 0,
-                  policy_repeats=5, elastic_jobs=300)
+                  policy_repeats=5, elastic_jobs=300,
+                  gang_jobs=150, herd_jobs=1500)
         report(res, write=False)
         failures = check_throughput_regression(res, "BENCH_scheduler.json")
         if failures:

@@ -7,7 +7,7 @@ selectable everywhere via ``--arch <id>``.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 _REGISTRY: dict[str, "ArchConfig"] = {}

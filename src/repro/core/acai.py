@@ -12,7 +12,7 @@ import dataclasses
 import secrets
 import warnings
 from pathlib import Path
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 from repro.core.datalake.fileset import FileSetManager
 from repro.core.datalake.metadata import MetadataStore
@@ -30,7 +30,7 @@ from repro.core.engine.registry import JobRegistry, JobSpec
 from repro.core.engine.scheduler import Scheduler
 from repro.core.provision.autoprovision import AutoProvisioner
 from repro.core.provision.pricing import CPU_PRICING, Pricing
-from repro.core.provision.profiler import CommandTemplate, Profiler
+from repro.core.provision.profiler import Profiler
 
 
 class AuthError(RuntimeError):
@@ -171,6 +171,17 @@ class AcaiEngine:
                 # must not leave a zombie QUEUED job behind
                 raise ValueError(f"job {spec.name!r} depends on unknown "
                                  f"job {pid!r}") from None
+        if self.scheduler.placement is not None:
+            # like bad dependencies, a pool name that doesn't exist is a
+            # caller typo — reject before the job is created rather than
+            # burning a job id on a guaranteed-infeasible submit
+            known = self.scheduler.placement.pools
+            bad = [p for p in {spec.pool, *(spec.pool_resources or ())}
+                   if p is not None and p not in known]
+            if bad:
+                raise ValueError(
+                    f"job {spec.name!r} names unknown pool(s) "
+                    f"{sorted(bad)!r}; available: {sorted(known)!r}")
         job = self.registry.submit(spec)
         if self.datalake is not None:
             for parent in parents:

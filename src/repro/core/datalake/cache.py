@@ -8,7 +8,6 @@ LRU eviction on a byte budget."""
 from __future__ import annotations
 
 import shutil
-import time
 from collections import OrderedDict
 from pathlib import Path
 

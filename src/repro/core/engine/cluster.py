@@ -43,7 +43,9 @@ class Cluster:
     def __init__(self, capacity: dict[str, float],
                  defaults: Optional[dict[str, float]] = None,
                  name: str = "default", *, spot: bool = False,
-                 reclaim_rate: float = 0.0):
+                 reclaim_rate: float = 0.0,
+                 node_shape: Optional[dict[str, float]] = None,
+                 close_gang_pods: Optional[int] = None):
         self.name = name
         self.spot = spot
         self.reclaim_rate = reclaim_rate
@@ -51,12 +53,38 @@ class Cluster:
         self.defaults = dict(defaults or {})
         self.used: dict[str, float] = {k: 0.0 for k in self.capacity}
         self._held: dict[str, dict[str, float]] = {}   # job_id -> resources
+        # gang holds: job_id -> (per-pod charge, pod count). The aggregate
+        # (n_pods x per-pod) also lives in ``_held`` so release/settle paths
+        # need no gang awareness; this record is what makes a shrink-to-k
+        # resize and partial-hold audits possible.
+        self._gangs: dict[str, tuple[dict[str, float], int]] = {}
+        # node-granular accounting (opt in): a pool built from whole nodes
+        # of ``node_shape`` tracks per-node free vectors so a gang's pods
+        # must each pack onto SOME node, not merely fit the pool aggregate.
+        # job_id -> [(node_idx, per-pod charge), ...]
+        self.node_shape = dict(node_shape) if node_shape else None
+        self._node_free: list[dict[str, float]] = []
+        self._node_holds: dict[str, list[tuple[int, dict[str, float]]]] = {}
+        if self.node_shape:
+            self._node_free = [dict(self.node_shape)
+                               for _ in range(self._target_nodes())]
+        # topology: how many gang pods this pool can host "close" (one
+        # interconnect island). None = unconstrained; the placement layer
+        # penalizes (not rejects) close-topology gangs that exceed it.
+        self.close_gang_pods = close_gang_pods
         # accounting-drift counters: a release that would drive ``used``
         # negative is clamped but *counted* (see ``release``), so a
         # double-release bug surfaces in stats instead of silently
         # vanishing into the clamp
         self.stats = {"release_underflow": 0, "release_underflow_amount": 0.0}
         self._lock = threading.RLock()
+
+    def _target_nodes(self) -> int:
+        """Node count implied by capacity / node_shape (max across dims
+        tolerates a partially-shaped pool)."""
+        counts = [self.capacity.get(d, 0.0) / amt
+                  for d, amt in (self.node_shape or {}).items() if amt > 0]
+        return max(1, int(round(max(counts, default=1))))
 
     # -- construction ---------------------------------------------------
     @classmethod
@@ -121,8 +149,121 @@ class Cluster:
             self._held[job_id] = req
             return req
 
+    # -- gang admission (atomic all-or-none) ----------------------------
+    def _node_fits(self, free: dict[str, float],
+                   pod: dict[str, float]) -> bool:
+        return all(free.get(n, 0.0) + 1e-9 >= amt
+                   for n, amt in pod.items() if amt > 0)
+
+    def _pack_pods(self, pod: dict[str, float],
+                   n_pods: int) -> Optional[list[int]]:
+        """First-fit node indices for ``n_pods`` pods of shape ``pod``
+        against the current free vectors — or None if they cannot all be
+        placed. Pure planning: mutates nothing. Caller holds the lock."""
+        shadow = [dict(f) for f in self._node_free]
+        picked: list[int] = []
+        for _ in range(n_pods):
+            for i, free in enumerate(shadow):
+                if self._node_fits(free, pod):
+                    for n, amt in pod.items():
+                        free[n] = free.get(n, 0.0) - amt
+                    picked.append(i)
+                    break
+            else:
+                return None
+        return picked
+
+    def can_pack(self, per_pod: Optional[dict[str, Any]],
+                 n_pods: int) -> bool:
+        """Would ``n_pods`` pods of ``per_pod`` each fit on some node right
+        now?  Pools without node accounting fall back to the aggregate
+        check (any aggregate fit is trivially packable)."""
+        pod = self.charge(per_pod)
+        agg = {n: amt * n_pods for n, amt in pod.items()}
+        with self._lock:
+            if not self.fits_charge(agg):
+                return False
+            if self.node_shape is None:
+                return True
+            return self._pack_pods(pod, n_pods) is not None
+
+    def reserve_gang(self, job_id: str, per_pod: Optional[dict[str, Any]],
+                     n_pods: int) -> dict[str, float]:
+        """Atomically reserve ``n_pods`` pods of ``per_pod`` each:
+        reserve-all-or-release-all, so a gang can never partially hold
+        capacity. Returns the *aggregate* charge (which is what
+        ``release``/settle later hand back). Idempotent per job_id."""
+        if n_pods < 1:
+            raise ValueError(f"{job_id}: gang needs n_pods >= 1")
+        pod = self.charge(per_pod)
+        agg = {n: amt * n_pods for n, amt in pod.items()}
+        with self._lock:
+            if job_id in self._held:
+                return self._held[job_id]
+            if not self.fits_charge(agg):
+                raise CapacityError(f"{job_id}: gang {n_pods}x{pod} "
+                                    f"oversubscribes {self.name}: "
+                                    f"{self.free()}")
+            if self.node_shape is not None:
+                picked = self._pack_pods(pod, n_pods)
+                if picked is None:
+                    # aggregate fits but the pods cannot all be node-packed
+                    raise CapacityError(
+                        f"{job_id}: gang {n_pods}x{pod} does not pack "
+                        f"onto {self.name}'s nodes")
+                holds = []
+                for i in picked:
+                    for n, amt in pod.items():
+                        self._node_free[i][n] = \
+                            self._node_free[i].get(n, 0.0) - amt
+                    holds.append((i, dict(pod)))
+                self._node_holds[job_id] = holds
+            for n, amt in agg.items():
+                if n in self.used:
+                    self.used[n] += amt
+            self._held[job_id] = agg
+            self._gangs[job_id] = (pod, n_pods)
+            return agg
+
+    def gang_of(self, job_id: str) -> Optional[tuple[dict[str, float], int]]:
+        """(per-pod charge, pod count) for a live gang hold, else None."""
+        with self._lock:
+            g = self._gangs.get(job_id)
+            return (dict(g[0]), g[1]) if g is not None else None
+
+    def shrink_gang_hold(self, job_id: str, k: int) -> dict[str, float]:
+        """Shrink a live gang reservation to ``k`` pods in place (elastic
+        resize): frees the (n-k) surplus pods' charge — and their node
+        slots — without ever dropping to zero pods held. Returns the
+        per-dimension amount freed."""
+        with self._lock:
+            if job_id not in self._gangs:
+                raise KeyError(f"{job_id}: no gang hold on {self.name}")
+            pod, n = self._gangs[job_id]
+            if not (1 <= k <= n):
+                raise ValueError(f"{job_id}: shrink to {k} of {n} pods")
+            drop = n - k
+            freed = {dim: amt * drop for dim, amt in pod.items()}
+            for dim, amt in freed.items():
+                if dim in self.used:
+                    self.used[dim] = max(0.0, self.used[dim] - amt)
+            if job_id in self._node_holds:
+                holds = self._node_holds[job_id]
+                for i, pcharge in holds[k:]:
+                    if i < len(self._node_free):
+                        for dim, amt in pcharge.items():
+                            self._node_free[i][dim] = \
+                                self._node_free[i].get(dim, 0.0) + amt
+                self._node_holds[job_id] = holds[:k]
+            self._gangs[job_id] = (pod, k)
+            self._held[job_id] = {dim: amt * k for dim, amt in pod.items()}
+            return freed
+
     def release(self, job_id: str) -> Optional[dict[str, float]]:
         """Idempotent: releasing an unknown/already-released job is a no-op.
+
+        A gang hold releases whole: every pod's charge (and node slot)
+        comes back in the same call — release-all mirrors reserve-all.
 
         A release that would drive ``used`` below zero means the books
         drifted (a double-release or an externally-mutated ``used``); the
@@ -131,6 +272,12 @@ class Cluster:
         """
         with self._lock:
             req = self._held.pop(job_id, None)
+            self._gangs.pop(job_id, None)
+            for i, pod in self._node_holds.pop(job_id, []):
+                if i < len(self._node_free):
+                    for n, amt in pod.items():
+                        self._node_free[i][n] = \
+                            self._node_free[i].get(n, 0.0) + amt
             if req is not None:
                 for n, amt in req.items():
                     if n in self.used:
@@ -158,6 +305,20 @@ class Cluster:
             for n, v in capacity.items():
                 self.capacity[n] = float(v)
                 self.used.setdefault(n, 0.0)
+            if self.node_shape is not None:
+                target = self._target_nodes()
+                while len(self._node_free) < target:
+                    self._node_free.append(dict(self.node_shape))
+                # shrink only trims *empty* trailing nodes; nodes still
+                # hosting pods survive until their gangs drain (the pool
+                # is over-committed meanwhile, same as the aggregate books)
+                busy = {i for holds in self._node_holds.values()
+                        for i, _ in holds}
+                while len(self._node_free) > target:
+                    idx = len(self._node_free) - 1
+                    if idx in busy:
+                        break
+                    self._node_free.pop()
             return {n: self.used[n] - self.capacity[n]
                     for n in capacity
                     if self.used[n] > self.capacity[n] + 1e-9}
@@ -169,6 +330,13 @@ class Cluster:
     def reservations(self) -> dict[str, dict[str, float]]:
         with self._lock:
             return {jid: dict(res) for jid, res in self._held.items()}
+
+    def gang_reservations(self) -> dict[str, tuple[dict[str, float], int]]:
+        """Live gang holds: {job_id: (per-pod charge, pod count)} — what
+        the scheduler's shrink-to-k drain enumerates."""
+        with self._lock:
+            return {jid: (dict(pod), n)
+                    for jid, (pod, n) in self._gangs.items()}
 
     # -- observability --------------------------------------------------
     def free(self) -> dict[str, float]:

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import threading
 from collections import defaultdict, deque
-from typing import Any, Callable
+from typing import Callable
 
 TOPIC_CONTAINER_STATUS = "container_status"
 TOPIC_JOB_PROGRESS = "job_progress"

@@ -47,11 +47,21 @@ from repro.core.engine.registry import Job, JobRegistry
 _billing_lock = threading.Lock()
 
 
+def _gang_width(job: Job) -> int:
+    """The job's current pod count: the live (possibly shrunk) width when
+    the scheduler tracks one, else the declared gang width, else 1."""
+    width = getattr(job, "gang_pods", None)
+    if width:
+        return width
+    return getattr(job.spec, "n_pods", 1)
+
+
 def _bill_segment(pricing, job: Job, seconds: float) -> None:
-    """Accumulate one segment's cost onto the job, thread-safely."""
+    """Accumulate one segment's cost onto the job, thread-safely. A gang
+    bills every pod: n_pods x the per-pod resource cost."""
     if pricing is None:
         return
-    cost = pricing.job_cost(job.spec.resources, seconds)
+    cost = pricing.job_cost(job.spec.resources, seconds) * _gang_width(job)
     with _billing_lock:
         job.cost = (job.cost or 0.0) + cost
 
@@ -473,6 +483,10 @@ class VirtualRunner(Runner):
         self._launch_t: dict[str, float] = {}
         self._full_dur: dict[str, float] = {}
         self._done_frac: dict[str, float] = {}
+        # advance-warning checkpoints: job_id -> work-seconds explicitly
+        # banked by request_checkpoint (a reclaim grace window), honored
+        # by the next preempt even when off the interval grid
+        self._ckpt_mark: dict[str, float] = {}
         self.preempt_stats = {"preemptions": 0, "lost_work_s": 0.0,
                               "max_lost_s": 0.0, "resumed_s": 0.0}
 
@@ -528,6 +542,7 @@ class VirtualRunner(Runner):
             self._launch_t.pop(job_id, None)
             self._full_dur.pop(job_id, None)
             self._done_frac.pop(job_id, None)
+            self._ckpt_mark.pop(job_id, None)
             job = self.registry.get(job_id)
             # no epoch stamp needed here: stale incarnations were already
             # filtered by the seq check above, so every published event
@@ -541,7 +556,8 @@ class VirtualRunner(Runner):
             if pricing is not None:
                 # accumulate: preempted segments already billed theirs
                 job.cost = (job.cost or 0.0) + \
-                    pricing.job_cost(job.spec.resources, dur)
+                    pricing.job_cost(job.spec.resources, dur) * \
+                    _gang_width(job)
             self.registry.set_state(job_id, JobState.FINISHED)
             self.bus.publish(TOPIC_CONTAINER_STATUS,
                              {"job_id": job_id, "status": "FINISHED"})
@@ -572,6 +588,11 @@ class VirtualRunner(Runner):
                         progressed)
         else:
             saved = 0.0     # never checkpointed: restart from step 0
+        # an advance-warning checkpoint (request_checkpoint) banked exact
+        # progress off the interval grid: honor whichever saved more
+        mark = self._ckpt_mark.pop(jid, None)
+        if mark is not None:
+            saved = max(saved, min(mark, progressed))
         lost = progressed - saved
         self.preempt_stats["preemptions"] += 1
         self.preempt_stats["lost_work_s"] += lost
@@ -581,7 +602,8 @@ class VirtualRunner(Runner):
         pricing = resolve_pricing(self.pricing, job)
         if pricing is not None:
             job.cost = (job.cost or 0.0) + \
-                pricing.job_cost(job.spec.resources, elapsed)
+                pricing.job_cost(job.spec.resources, elapsed) * \
+                _gang_width(job)
         # drop the live entry; the heap row becomes a stale tombstone
         # (suppressed by seq in step/next_completion)
         self._ends.pop(jid, None)
@@ -589,6 +611,62 @@ class VirtualRunner(Runner):
         self._launch_t.pop(jid, None)
         self._full_dur.pop(jid, None)
         return True
+
+    def request_checkpoint(self, job: Job) -> bool:
+        """Advance warning (a spot reclamation's grace window): bank the
+        job's *exact* current progress as a checkpoint, so the forced
+        preempt that lands moments later loses (near) zero work instead
+        of up to one checkpoint interval. Returns False when the job is
+        not running here."""
+        jid = job.job_id
+        if jid not in self._ends or jid not in self._live_seq:
+            return False
+        full = self._full_dur.get(jid, 0.0)
+        elapsed = max(0.0, self.now - self._launch_t.get(jid, self.now))
+        progressed = self._done_frac.get(jid, 0.0) * full + elapsed
+        prev = self._ckpt_mark.get(jid)
+        self._ckpt_mark[jid] = max(prev or 0.0, progressed)
+        return True
+
+    # -- elastic gang resize --------------------------------------------
+    def resize_gang(self, job: Job, k: int) -> Optional[float]:
+        """Shrink a running gang to ``k`` pods in place (no requeue): the
+        segment so far bills at the old width, and the *remaining* work
+        re-paces at ``old/k`` x slower — a work-conserving data-parallel
+        model. Reschedules the completion and returns the new expected
+        end (None when the job is not running here)."""
+        jid = job.job_id
+        if jid not in self._ends or jid not in self._live_seq:
+            return None
+        old = _gang_width(job)
+        if k < 1 or k == old:
+            return self._ends.get(jid)
+        full = self._full_dur.get(jid, 0.0)
+        elapsed = max(0.0, self.now - self._launch_t.get(jid, self.now))
+        done = self._done_frac.get(jid, 0.0)
+        if full > 0:
+            done = min(1.0, done + elapsed / full)
+        pricing = resolve_pricing(self.pricing, job)
+        if pricing is not None and elapsed > 0:
+            job.cost = (job.cost or 0.0) + \
+                pricing.job_cost(job.spec.resources, elapsed) * old
+        # remaining logical work runs on k of old pods: the full-job
+        # duration at the new width stretches by old/k
+        new_full = full * (old / k) if full > 0 else 0.0
+        rem = max(new_full * (1.0 - done), 0.0)
+        job.gang_pods = k
+        self._done_frac[jid] = done
+        self._launch_t[jid] = self.now
+        self._full_dur[jid] = new_full
+        if job.spec.duration is None:
+            # future relaunches (a later preemption) must resume against
+            # the re-paced duration, not a fresh original-width draw
+            self._dur_cache.setdefault(jid, {})[job.pool] = new_full
+        self._seq += 1
+        self._live_seq[jid] = self._seq
+        self._ends[jid] = self.now + rem
+        heapq.heappush(self._heap, (self.now + rem, self._seq, jid, rem))
+        return self._ends[jid]
 
     def forget(self, job_id: str) -> None:
         """Drop restore/duration state for a job that went terminal with
@@ -604,6 +682,7 @@ class VirtualRunner(Runner):
         self._launch_t.pop(job_id, None)
         self._full_dur.pop(job_id, None)
         self._ends.pop(job_id, None)
+        self._ckpt_mark.pop(job_id, None)
 
     # -- open-loop arrival processes ------------------------------------
     def next_completion(self) -> Optional[float]:

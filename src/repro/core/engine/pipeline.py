@@ -31,7 +31,7 @@ from typing import Any, Callable, Iterable, Optional, Union
 
 from repro.core.engine.handle import JobHandle, wait_all
 from repro.core.engine.lifecycle import JobState
-from repro.core.engine.registry import JobSpec
+from repro.core.engine.registry import GangSpec, JobSpec
 
 
 class Stage:
@@ -65,11 +65,22 @@ class Pipeline:
         self._ran = False
 
     # -- declaration -----------------------------------------------------
-    def stage(self, spec: JobSpec, after: StageOrStages = ()) -> Stage:
+    def stage(self, spec: JobSpec, after: StageOrStages = (),
+              gang: Union[int, GangSpec, None] = None) -> Stage:
         """Declare one stage; ``after`` adds explicit dependency edges on
-        previously declared stages (dataflow edges are inferred anyway)."""
+        previously declared stages (dataflow edges are inferred anyway).
+
+        ``gang=n`` makes the stage a co-scheduled gang of ``n`` pods, each
+        with the spec's ``resources`` shape (sharded multi-host training
+        next to single-pod sweep jobs, in one pipeline); pass a
+        :class:`GangSpec` for per-pod overrides, topology hints, or an
+        elastic ``min_pods`` floor.
+        """
         if self._ran:
             raise RuntimeError("pipeline already ran; declare a new one")
+        if gang is not None:
+            spec.gang = gang if isinstance(gang, GangSpec) \
+                else GangSpec(n_pods=int(gang))
         after = [after] if isinstance(after, Stage) else list(after)
         for parent in after:
             if parent not in self._stages:
@@ -82,12 +93,14 @@ class Pipeline:
 
     def map(self, spec_fn: Callable[[dict[str, Any]], JobSpec],
             grid: Union[dict[str, Iterable], Iterable[dict[str, Any]]],
-            after: StageOrStages = ()) -> list[Stage]:
+            after: StageOrStages = (),
+            gang: Union[int, GangSpec, None] = None) -> list[Stage]:
         """Horizontal fan-out: one stage per grid point.
 
         ``grid`` is either a dict of value-lists (cartesian product, the
         hyperparameter-sweep case) or an explicit iterable of param dicts;
-        ``spec_fn(params)`` builds each stage's JobSpec.
+        ``spec_fn(params)`` builds each stage's JobSpec. ``gang`` applies
+        to every fanned-out stage (see :meth:`stage`).
         """
         if isinstance(grid, dict):
             keys = list(grid)
@@ -95,7 +108,8 @@ class Pipeline:
                       for vals in itertools.product(*(grid[k] for k in keys))]
         else:
             combos = [dict(g) for g in grid]
-        return [self.stage(spec_fn(params), after=after) for params in combos]
+        return [self.stage(spec_fn(params), after=after, gang=gang)
+                for params in combos]
 
     # -- DAG assembly ----------------------------------------------------
     def _parents(self) -> dict[int, list[Stage]]:

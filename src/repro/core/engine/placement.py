@@ -42,7 +42,13 @@ from repro.core.engine.cluster import Cluster
 
 @dataclasses.dataclass
 class PoolOption:
-    """One pool a job may run on, with the shape/charge/score it would get."""
+    """One pool a job may run on, with the shape/charge/score it would get.
+
+    For a gang, ``resources`` is the shape of ONE pod and ``charge`` the
+    *aggregate* (``pods`` x per-pod charge) — the unit the scheduler's
+    admission, certificates and shadow math account in, so a gang is
+    admitted whole or not at all.
+    """
     pool: str
     resources: dict[str, float]
     charge: dict[str, float]
@@ -50,10 +56,55 @@ class PoolOption:
     cost: Optional[float] = None        # predicted $ for the whole run
     score: float = 0.0
     local: bool = False                 # a parent stage ran on this pool
+    pods: int = 1                       # gang width (1 = ordinary job)
 
 
 # predictor(spec, pool_name, resources) -> expected runtime seconds | None
 Predictor = Callable[[Any, str, dict[str, float]], Optional[float]]
+
+
+@dataclasses.dataclass
+class TransferCostModel:
+    """Explicit cross-pool data-movement pricing (replaces the flat
+    locality discount when attached to a ``Placement``).
+
+    ``cost_per_gb`` prices moving a parent stage's fileset bytes between
+    accelerator families (``pair_cost_per_gb[(src, dst)]`` overrides per
+    ordered pair); the cheapest parent pool is charged when a child lands
+    off-pool. ``interconnect_weight`` scales the intra-gang penalty for a
+    pool that cannot host all of a close-topology gang's pods on one
+    interconnect island (``Cluster.close_gang_pods``): the score is
+    inflated proportionally to the fraction of pods forced off-island,
+    modelling the all-reduce slowdown of a spread data-parallel mesh.
+    """
+    cost_per_gb: float = 0.0
+    pair_cost_per_gb: dict[tuple[str, str], float] = \
+        dataclasses.field(default_factory=dict)
+    interconnect_weight: float = 1.0
+
+    def transfer_cost(self, src: str, dst: str, nbytes: float) -> float:
+        if src == dst or nbytes <= 0:
+            return 0.0
+        rate = self.pair_cost_per_gb.get((src, dst), self.cost_per_gb)
+        return rate * nbytes / 1e9
+
+    def cheapest_transfer(self, parent_pools, dst: str,
+                          nbytes: float) -> float:
+        """A child with several parents streams from the cheapest one."""
+        costs = [self.transfer_cost(src, dst, nbytes)
+                 for src in parent_pools]
+        return min(costs) if costs else 0.0
+
+    def spread_fraction(self, spec, cluster) -> float:
+        """Fraction of a close-topology gang's pods this pool would host
+        off-island (0.0 when the gang fits close or topology is 'any')."""
+        gang = getattr(spec, "gang", None)
+        if gang is None or gang.topology != "close":
+            return 0.0
+        close = getattr(cluster, "close_gang_pods", None)
+        if close is None or close >= gang.n_pods:
+            return 0.0
+        return (gang.n_pods - close) / gang.n_pods
 
 
 class Placement:
@@ -70,7 +121,8 @@ class Placement:
                  predictor: Optional[Predictor] = None,
                  objective: str = "cost",
                  locality_discount: float = 0.75,
-                 spot_risk_weight: float = 1.0):
+                 spot_risk_weight: float = 1.0,
+                 transfer_costs: Optional[TransferCostModel] = None):
         if objective not in ("cost", "runtime", "balanced"):
             raise ValueError(f"unknown objective {objective!r}")
         self.pools = dict(pools)
@@ -78,6 +130,11 @@ class Placement:
         self.predictor = predictor
         self.objective = objective
         self.locality_discount = locality_discount
+        # explicit data-movement pricing: when set, it REPLACES the flat
+        # locality discount (off-pool children pay the modelled transfer,
+        # close-topology gangs pay the interconnect spread penalty); when
+        # None the legacy discount path runs, bit-identically
+        self.transfer_costs = transfer_costs
         # spot risk pricing: a spot pool's score is inflated by the
         # reclamations the job is expected to suffer there — long jobs
         # lose more to a reclaim (up to a checkpoint interval each, plus
@@ -95,7 +152,14 @@ class Placement:
         return spec.resources
 
     def eligible(self, spec) -> dict[str, PoolOption]:
-        """Pools that could ever run this job (empty => fail fast)."""
+        """Pools that could ever run this job (empty => fail fast).
+
+        A gang's option carries the per-pod shape but the *aggregate*
+        charge (n_pods x per-pod) — downstream admission/certificate/
+        shadow accounting then treats the gang as one unit for free. On a
+        node-shaped pool a pod that exceeds the node shape can never pack,
+        so the pool is ineligible even when the aggregate would fit."""
+        gang = getattr(spec, "gang", None)
         out: dict[str, PoolOption] = {}
         for name, cl in self.pools.items():
             if spec.pool and spec.pool != name:
@@ -103,8 +167,21 @@ class Placement:
             res = self.resources_for(spec, name)
             if res is None:
                 continue
+            if gang is not None and gang.per_pod_resources is not None:
+                res = gang.per_pod_resources
             charge = cl.charge(res)
-            if cl.ever_fits_charge(charge):
+            if gang is not None:
+                agg = {n: amt * gang.n_pods for n, amt in charge.items()}
+                if not cl.ever_fits_charge(agg):
+                    continue
+                shape = getattr(cl, "node_shape", None)
+                if shape is not None and any(
+                        amt > shape.get(n, 0.0) + 1e-9
+                        for n, amt in charge.items() if amt > 0):
+                    continue                  # one pod overflows a node
+                out[name] = PoolOption(name, dict(res or {}), agg,
+                                       pods=gang.n_pods)
+            elif cl.ever_fits_charge(charge):
                 out[name] = PoolOption(name, dict(res or {}), charge)
         return out
 
@@ -142,7 +219,7 @@ class Placement:
             runtime = spec.duration if spec.duration is not None else 1.0
         pricing = self.pricing.get(opt.pool)
         if pricing is not None:
-            cost = pricing.job_cost(opt.resources, runtime)
+            cost = pricing.job_cost(opt.resources, runtime) * opt.pods
         else:
             # no price catalog: dollars degrade to normalized resource-time
             cl = self.pools[opt.pool]
@@ -153,9 +230,20 @@ class Placement:
         score = {"cost": cost, "runtime": runtime,
                  "balanced": cost * runtime}[self.objective]
         opt.local = opt.pool in parent_pools
-        if opt.local and len(self.pools) > 1:
-            score *= self.locality_discount
         cl = self.pools[opt.pool]
+        if self.transfer_costs is not None:
+            # explicit data movement: an off-pool child pays to move its
+            # input bytes from the cheapest parent pool; a close-topology
+            # gang pays for every pod the pool forces off-island
+            if parent_pools and not opt.local:
+                score += self.transfer_costs.cheapest_transfer(
+                    parent_pools, opt.pool,
+                    getattr(spec, "input_bytes", 0.0))
+            frac = self.transfer_costs.spread_fraction(spec, cl)
+            if frac > 0.0:
+                score *= 1.0 + self.transfer_costs.interconnect_weight * frac
+        elif opt.local and len(self.pools) > 1:
+            score *= self.locality_discount
         if getattr(cl, "spot", False):
             # expected reclamations over the run × risk weight: a spot
             # pool must be cheap enough to beat on-demand *after* paying

@@ -11,6 +11,32 @@ from repro.core.engine.lifecycle import (TERMINAL_STATES, JobState,
                                          check_transition)
 
 
+@dataclasses.dataclass(frozen=True)
+class GangSpec:
+    """A co-scheduled group of identical pods (sharded multi-host training).
+
+    ``n_pods`` pods launch atomically on one pool — all or none; the
+    scheduler admits/backfills/shadows the gang as a single unit and a
+    preemption of any pod preempts the whole gang with one epoch bump.
+    ``per_pod_resources`` defaults to the spec's ``resources`` (the spec's
+    resources then describe ONE pod, and the gang is charged
+    ``n_pods x per_pod``). ``topology`` is a placement hint: ``"close"``
+    asks for all pods on one interconnect island — pools that cannot host
+    the gang close are penalized by the transfer-cost model, not rejected.
+    ``min_pods`` > 0 marks the gang resizable: under capacity pressure
+    (spot reclaim, elastic shrink) the engine may shrink it to any
+    k >= min_pods instead of preempting it outright.
+    """
+    n_pods: int
+    per_pod_resources: Optional[dict] = None
+    topology: str = "any"                      # "any" | "close"
+    min_pods: int = 0                          # 0 => not resizable
+
+    def pod_resources(self, spec: "JobSpec") -> dict:
+        res = self.per_pod_resources
+        return dict(res if res is not None else spec.resources)
+
+
 @dataclasses.dataclass
 class JobSpec:
     """Encapsulation of an ML program (ACAI §3: the Job abstraction)."""
@@ -42,6 +68,17 @@ class JobSpec:
     pool_resources: dict[str, dict[str, Any]] = \
         dataclasses.field(default_factory=dict)
     template: Optional[str] = None
+    # gang scheduling: co-launch n_pods pods as one atomic unit (None =
+    # ordinary single-reservation job; see GangSpec)
+    gang: Optional[GangSpec] = None
+    # declared size of this job's input fileset in bytes — the placement
+    # layer's transfer-cost model prices moving these bytes between
+    # accelerator families when a child lands off its parent's pool
+    input_bytes: float = 0.0
+
+    @property
+    def n_pods(self) -> int:
+        return self.gang.n_pods if self.gang is not None else 1
 
 
 @dataclasses.dataclass
@@ -66,6 +103,10 @@ class Job:
     preemptions: int = 0
     preempt_flag: Any = dataclasses.field(default=None, repr=False,
                                           compare=False)
+    # live gang width: set at launch (spec.gang.n_pods) and lowered by an
+    # elastic shrink-to-k resize; None for ordinary single-pod jobs. The
+    # training stack's gang_resize_hook watches it to re-mesh in place.
+    gang_pods: Optional[int] = None
 
     @property
     def queue_key(self) -> tuple[str, str]:

@@ -102,6 +102,40 @@ from repro.core.engine.placement import Placement
 from repro.core.engine.registry import Job, JobRegistry
 
 
+def validate_spec(spec) -> None:
+    """Reject malformed specs at submit, before any state change.
+
+    Zero/negative resource dimensions silently fit every pool (a zero
+    charge passes every capacity check), so a typo like ``{"tpu": 0}``
+    would queue, launch, and hold nothing — fail loudly instead. Gang
+    shapes are sanity-checked here too so a bad width/topology surfaces
+    at submit rather than deep in admission.
+    """
+    shapes = [("resources", spec.resources or {})]
+    for pool, res in (spec.pool_resources or {}).items():
+        shapes.append((f"pool_resources[{pool!r}]", res or {}))
+    gang = getattr(spec, "gang", None)
+    if gang is not None and gang.per_pod_resources is not None:
+        shapes.append(("gang.per_pod_resources", gang.per_pod_resources))
+    for where, res in shapes:
+        for dim, amt in res.items():
+            if not isinstance(amt, (int, float)) or amt <= 0:
+                raise ValueError(
+                    f"job {spec.name!r}: {where} dimension {dim!r} must "
+                    f"be a positive number, got {amt!r}")
+    if gang is not None:
+        if gang.n_pods < 1:
+            raise ValueError(f"job {spec.name!r}: gang.n_pods must be "
+                             f">= 1, got {gang.n_pods}")
+        if not 0 <= gang.min_pods <= gang.n_pods:
+            raise ValueError(
+                f"job {spec.name!r}: gang.min_pods must be in "
+                f"[0, n_pods={gang.n_pods}], got {gang.min_pods}")
+        if gang.topology not in ("any", "close"):
+            raise ValueError(f"job {spec.name!r}: gang.topology must be "
+                             f"'any' or 'close', got {gang.topology!r}")
+
+
 class QueueConfig:
     """Per-(project, user) scheduling knobs."""
 
@@ -268,7 +302,8 @@ class Scheduler:
                       "wait_by_key": defaultdict(lambda: [0, 0.0]),
                       "placed_by_pool": defaultdict(int),
                       "snapshots": 0, "snapshots_skipped": 0,
-                      "preempted": 0, "reclaimed": 0, "drained": 0}
+                      "preempted": 0, "reclaimed": 0, "drained": 0,
+                      "gang_shrunk": 0}
         self.placement: Optional[Placement] = None
         if placement is not None:
             self.placement = placement
@@ -358,6 +393,16 @@ class Scheduler:
             self._futile_blocked = None
             self._dirty_full = True
             self._state_rev += 1
+            if overage and drain:
+                # elastic gangs shrink to min_pods in place first — a
+                # resize beats a full requeue (the trainer re-meshes from
+                # its checkpoint without losing its slot)
+                need = dict(overage)
+                self._shrink_to_cover(cl, need)
+                overage = {n: cl.used.get(n, 0.0) - cl.capacity.get(n, 0.0)
+                           for n in overage
+                           if cl.used.get(n, 0.0) >
+                           cl.capacity.get(n, 0.0) + 1e-9}
             if overage and drain and self._can_preempt:
                 # drain through the one victim-selection policy (lowest
                 # priority, latest started), best-effort: even if no
@@ -380,13 +425,20 @@ class Scheduler:
             return overage
 
     def reclaim(self, pool: str,
-                capacity: Optional[dict[str, float]] = None) -> list[str]:
+                capacity: Optional[dict[str, float]] = None, *,
+                warning: float = 0.0) -> list[str]:
         """Forced preemption on a (spot) pool — the cloud took the nodes
         back. Frees at least ``capacity`` on every listed dimension
-        (None = evict everything running there) by preempting victims
-        in the one shared victim order (lowest priority, latest started
-        — ``_pick_victims``); they checkpoint and re-queue like any
-        preemption. Returns the preempted job ids."""
+        (None = evict everything running there) by first shrinking
+        resizable gangs to their floor, then preempting victims in the
+        one shared victim order (lowest priority, latest started —
+        ``_pick_victims``); they checkpoint and re-queue like any
+        preemption. ``warning > 0`` models the cloud's advance notice: a
+        checkpoint request (``launcher.request_checkpoint``) fires for
+        every victim before the forced preempt lands, banking exact
+        progress so the work lost to the reclaim is (near) zero instead
+        of up to one checkpoint interval. Returns the preempted job ids
+        (shrunk gangs keep running and are not listed)."""
         with self._lock:
             cl = self.pools.get(pool)
             if cl is None or not self._can_preempt:
@@ -402,9 +454,23 @@ class Scheduler:
                 need = {n: amt - free.get(n, 0.0)
                         for n, amt in capacity.items()
                         if amt > free.get(n, 0.0) + 1e-9}
+                if need:
+                    # a partial reclaim is elastic pressure: resizable
+                    # gangs give back pods in place before anyone is
+                    # evicted (a full reclaim must evict regardless)
+                    self._shrink_to_cover(cl, need)
             if not need:
                 return []           # already free: nothing to evict
             victims = self._pick_victims(cl, dict(need), partial=True)
+            req_ckpt = getattr(self.launcher, "request_checkpoint", None) \
+                if warning > 0 else None
+            if callable(req_ckpt):
+                # the grace window: checkpoint requests land first, the
+                # forced preemption only after — lost work ~ 0
+                for vid in victims or ():
+                    vjob = self._job_of.get(vid)
+                    if vjob is not None:
+                        req_ckpt(vjob)
             out = []
             was = self._preempting
             self._preempting = True         # batch: one dispatch at the end
@@ -418,6 +484,108 @@ class Scheduler:
             if out:
                 self._dispatch()
             return out
+
+    # -- elastic gang resize (shrink-to-k) ------------------------------
+    def shrink_gang(self, job_id: str, k: int) -> bool:
+        """Shrink a RUNNING resizable gang to ``k`` pods in place: the
+        surplus pods' reservation frees immediately, the launcher
+        re-paces the remaining work at the new width, and the job's
+        ``gang_pods`` drops so an in-process trainer can re-mesh from its
+        checkpoint (``train.fault.gang_resize_hook``) — no requeue, no
+        epoch bump. Returns False when the job is not a running gang or
+        ``k`` is outside [max(1, min_pods), n_pods)."""
+        with self._lock:
+            job = self._job_of.get(job_id)
+            if job is None:
+                try:
+                    job = self.registry.get(job_id)
+                except KeyError:
+                    return False
+            if job.state != JobState.RUNNING or not job.pool:
+                return False
+            cl = self.pools.get(job.pool)
+            g = cl.gang_of(job_id) if cl is not None and \
+                hasattr(cl, "gang_of") else None
+            if g is None:
+                return False
+            _pod, n = g
+            gang = getattr(job.spec, "gang", None)
+            floor = max(1, gang.min_pods if gang is not None else 0)
+            if gang is None or gang.min_pods <= 0 or not floor <= k < n:
+                return False
+            cl.shrink_gang_hold(job_id, k)
+            # re-pace BEFORE dropping the job's width: the launcher reads
+            # the old width off the job to stretch the remaining work
+            # (and to bill the elapsed segment at what it actually used)
+            resize = getattr(self.launcher, "resize_gang", None)
+            new_end = resize(job, k) if callable(resize) else None
+            job.gang_pods = k
+            # the shadow entry carries the old aggregate + old end: swap
+            # it for the shrunk reservation at the re-paced completion
+            self._drop_shadow(job_id)
+            if job_id in self._started_at:
+                if new_end is None:
+                    self._unknown_ends[job.pool] = \
+                        self._unknown_ends.get(job.pool, 0) + 1
+                    self._end_key[job_id] = (job.pool, None)
+                else:
+                    self._lseq += 1
+                    insort(self._pool_ends.setdefault(job.pool, []),
+                           (new_end, self._lseq, job_id, cl.held(job_id)))
+                    self._end_key[job_id] = (job.pool,
+                                             (new_end, self._lseq))
+            self.stats["gang_shrunk"] += 1
+            self._dirty_full = True
+            self._futile_blocked = None
+            self._state_rev += 1
+            return True
+
+    def _shrink_to_cover(self, cl, need: dict[str, float]) -> list[str]:
+        """Cover (part of) ``need`` by shrinking resizable running gangs
+        toward their ``min_pods`` floor — tried before any preemption, in
+        the same victim order (lowest effective priority, latest
+        started). Mutates ``need`` in place; returns the resized ids."""
+        gangs = getattr(cl, "gang_reservations", None)
+        if gangs is None or not need:
+            return []
+        cands = []
+        for vid, (pod, n) in gangs().items():
+            vjob = self._job_of.get(vid)
+            if vjob is None or vjob.state != JobState.RUNNING:
+                continue
+            gang = getattr(vjob.spec, "gang", None)
+            if gang is None or gang.min_pods <= 0:
+                continue
+            floor = max(1, gang.min_pods)
+            if n <= floor:
+                continue
+            vprio = self._qconf[vjob.queue_key].priority + \
+                self._prio_of.get(vid, 0)
+            cands.append((vprio, -self._started_at.get(vid, 0.0),
+                          vid, pod, n, floor))
+        cands.sort()
+        shrunk = []
+        for _, _, vid, pod, n, floor in cands:
+            if not need:
+                break
+            want = 0            # pods whose release covers the shortfall
+            for dim, amt in need.items():
+                per = pod.get(dim, 0.0)
+                if per > 1e-12:
+                    want = max(want, int(-(-amt // per)))
+            if want <= 0:
+                continue        # this gang's pods carry none of the dims
+            drop = min(want, n - floor)
+            if drop <= 0 or not self.shrink_gang(vid, n - drop):
+                continue
+            shrunk.append(vid)
+            for dim in list(need):
+                left = need[dim] - pod.get(dim, 0.0) * drop
+                if left <= 1e-9:
+                    del need[dim]
+                else:
+                    need[dim] = left
+        return shrunk
 
     def queued_demand(self, pool: str) -> int:
         """Live queued jobs eligible on ``pool`` — the provisioning
@@ -447,6 +615,7 @@ class Scheduler:
 
     # ------------------------------------------------------------------
     def submit(self, job: Job) -> None:
+        validate_spec(job.spec)
         with self._lock:
             # resolve (and validate) dependencies before any state change:
             # an unknown parent id must not leave a zombie QUEUED job
@@ -501,7 +670,10 @@ class Scheduler:
         pre-resolved ``(dim, amount, capacity + eps)`` fit thresholds
         (capacity is immutable, so the epsilon addition happens once per
         job instead of once per candidate visit), the charge item tuple
-        the backfill spare check walks, and a memoized runtime slot."""
+        the backfill spare check walks, a memoized runtime slot, and —
+        only for a gang headed at a node-shaped pool — the (per-pod
+        shape, pod count) the packability check needs (None everywhere
+        else, so the non-gang hot path pays one ``is None`` test)."""
         opts = self._opts_of[job_id]
         pools = self.pools
         recs = []
@@ -509,10 +681,13 @@ class Scheduler:
             opt = opts[pname]
             cl = pools[pname]
             cap = cl.capacity
+            gang = (opt.resources, opt.pods) if opt.pods > 1 and \
+                getattr(cl, "node_shape", None) is not None else None
             recs.append([pname, cl.used,
                          tuple((n, amt, cap.get(n, 0.0) + 1e-9)
                                for n, amt in opt.charge.items()),
-                         tuple(opt.charge.items()), opt.charge, self._MISS])
+                         tuple(opt.charge.items()), opt.charge, self._MISS,
+                         gang])
         self._dinfo[job_id] = recs
 
     def _push_min_charge(self, job_id: str, opts: dict) -> None:
@@ -935,7 +1110,9 @@ class Scheduler:
         for rec in recs:
             used_d = rec[1]
             if all(used_d.get(n, 0.0) + amt <= thr
-                   for n, amt, thr in rec[2]):
+                   for n, amt, thr in rec[2]) and \
+                    (rec[6] is None or self.pools[rec[0]].can_pack(
+                        rec[6][0], rec[6][1])):
                 return False
         for pname in self._rank_of.get(jid, ()):
             cl = self.pools.get(pname)
@@ -1282,6 +1459,9 @@ class Scheduler:
                         break
                 if not fits:
                     continue
+                if rec[6] is not None and not \
+                        self.pools[rec[0]].can_pack(rec[6][0], rec[6][1]):
+                    continue    # gang: aggregate fits, pods don't pack
                 fit_any = True
                 pname = rec[0]
                 blk = blocked.get(pname)
@@ -1548,6 +1728,10 @@ class Scheduler:
                                     break
                             if not fits:
                                 continue
+                            if rec[6] is not None and not \
+                                    self.pools[rec[0]].can_pack(
+                                        rec[6][0], rec[6][1]):
+                                continue    # gang pods don't node-pack
                             fit_any = True
                             pname = rec[0]
                             blk = blocked.get(pname)
@@ -1646,7 +1830,15 @@ class Scheduler:
         reserved = None
         if pool is not None:
             opt = self._opts_of[jid][pool]
-            reserved = self.pools[pool].reserve(jid, opt.resources)
+            cl = self.pools[pool]
+            if opt.pods > 1 or getattr(cl, "node_shape", None) is not None:
+                # gangs reserve atomically (all pods or none); on a
+                # node-shaped pool even single jobs go through the node
+                # packer so the per-node books stay consistent
+                reserved = cl.reserve_gang(jid, opt.resources, opt.pods)
+                job.gang_pods = opt.pods if opt.pods > 1 else None
+            else:
+                reserved = cl.reserve(jid, opt.resources)
             job.pool = pool
             # pin the concrete shape the job got (a per-pool menu entry),
             # so runner billing and observers see what was allocated

@@ -8,6 +8,10 @@ shrinks the pool in whole-node steps between ``min_nodes`` and
 ``max_nodes``, through ``Scheduler.resize_pool`` — so a shrink below live
 reservations drains through the same checkpoint-aware preemption path a
 spot reclamation uses, and a grow immediately re-dispatches the backlog.
+Resizable gangs (``GangSpec.min_pods > 0``) soften those drains: the
+scheduler first shrinks running gangs to ``k`` pods (freeing capacity
+with no requeue and no lost work) and only preempts whole jobs for
+whatever overage remains.
 
 The controller is deliberately clock-agnostic: ``step(now)`` is called by
 whoever owns time (the benchmark's virtual-clock loop, a wall-clock

@@ -6,7 +6,6 @@ Params live in fp32; forward casts to ``compute_dtype`` at block entry.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -14,7 +13,6 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.sharding import constrain
 
 # ---------------------------------------------------------------------------
 # init helpers

@@ -13,8 +13,6 @@ through the scans as xs/ys.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,12 +10,10 @@ Two pieces:
 """
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 
 def compress(g, kind: Literal["bf16", "int8"] = "bf16"):

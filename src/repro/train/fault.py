@@ -60,6 +60,37 @@ def preemption_hook(job) -> Callable[[int], None]:
     return hook
 
 
+def gang_resize_hook(job) -> Callable[[int], None]:
+    """A ``failure_hook`` adapter for elastic gang shrink-to-k.
+
+    When the scheduler shrinks a resizable gang (``Scheduler.shrink_gang``
+    lowers ``job.gang_pods`` without preempting), the training process
+    keeps its reservation — it just lost pods. The right reaction is an
+    *in-process* re-mesh: raise a non-external ``JobPreempted`` so
+    ``TrainSupervisor.run`` restores the latest checkpoint onto the
+    shrunken mesh (``CheckpointManager.restore`` reshards onto any mesh)
+    and continues, rather than handing the surviving capacity back.
+
+    The hook tracks the last width it acted on, so each shrink fires
+    exactly once; compose with :func:`preemption_hook` when the job also
+    needs the hand-back path::
+
+        pre, res = preemption_hook(job), gang_resize_hook(job)
+        def hook(step):
+            pre(step); res(step)
+    """
+    state = {"w": getattr(job, "gang_pods", None)}
+
+    def hook(step: int) -> None:
+        w = getattr(job, "gang_pods", None)
+        if w is not None and state["w"] is not None and w < state["w"]:
+            state["w"] = w
+            raise JobPreempted(
+                f"{job.job_id} gang resized to {w} pods at step {step}")
+        state["w"] = w
+    return hook
+
+
 @dataclasses.dataclass
 class SupervisorReport:
     steps_run: int = 0

@@ -8,7 +8,6 @@ distributed-optimizer memory saving.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -5,8 +5,6 @@ the bounded event-bus history."""
 import json
 from pathlib import Path
 
-import pytest
-
 from benchmarks.bench_scheduler import decision_trace
 from repro.core.engine.cluster import Cluster
 from repro.core.engine.events import EventBus, TOPIC_CONTAINER_STATUS
@@ -42,6 +40,18 @@ def test_heterogeneous_placement_trace_matches_pre_refactor_golden():
     """Multi-pool fleet through profiler-fed placement: pool assignments
     (not just launch order) must replay exactly."""
     got = decision_trace(400, 3, hetero=True, quota_k=64)
+    assert got == _golden("hetero")
+
+
+def test_hetero_trace_unchanged_with_gang_machinery_compiled_in():
+    """The gang layers (TransferCostModel scoring path, gang-aware
+    eligibility, atomic-reserve dispatch records) compiled in but unused
+    — zero transfer rates, no gangs, no cross-pool filesets — must not
+    perturb a single decision: the hetero golden replays bit-identically
+    through the transfer-cost scoring branch."""
+    from repro.core.engine.placement import TransferCostModel
+    got = decision_trace(400, 3, hetero=True, quota_k=64,
+                         transfer_costs=TransferCostModel(cost_per_gb=0.0))
     assert got == _golden("hetero")
 
 

@@ -1,0 +1,423 @@
+"""Gang scheduling + topology-aware placement: atomic all-or-none gang
+admission with node-granular packing, gang preemption as one unit,
+shrink-to-k elastic resize, the transfer-cost model's interconnect
+spread penalty, advance-warning reclaim checkpoints, submit-time spec
+validation, and the SDK's ``gang=`` plumbing."""
+import types
+
+import pytest
+
+from repro.core.acai import AcaiEngine
+from repro.core.engine.cluster import CapacityError, Cluster
+from repro.core.engine.events import EventBus
+from repro.core.engine.launcher import VirtualRunner
+from repro.core.engine.lifecycle import JobState
+from repro.core.engine.pipeline import Pipeline
+from repro.core.engine.placement import Placement, TransferCostModel
+from repro.core.engine.registry import GangSpec, JobRegistry, JobSpec
+from repro.core.engine.scheduler import Scheduler, validate_spec
+from repro.core.provision.pricing import default_catalog
+from repro.train.fault import JobPreempted, gang_resize_hook
+
+
+def _spec(name="j", user="u", duration=10.0, **kw):
+    return JobSpec(name=name, project="p", user=user, duration=duration,
+                   **kw)
+
+
+def _gpu_pool(nodes=2, node_gpus=8.0, **kw):
+    return Cluster({"gpu": node_gpus * nodes}, {"gpu": 0.0}, name="gpu",
+                   node_shape={"gpu": node_gpus}, **kw)
+
+
+def _engine(pools, quota_k=100, **kw):
+    registry = JobRegistry()
+    bus = EventBus()
+    runner = VirtualRunner(registry, bus, **{
+        k: kw.pop(k) for k in ("checkpoint_interval", "pricing")
+        if k in kw})
+    sched = Scheduler(registry, runner, bus, quota_k=quota_k,
+                      placement=Placement(pools), **kw)
+    return registry, bus, runner, sched
+
+
+def _submit(registry, sched, spec):
+    job = registry.submit(spec)
+    sched.submit(job)
+    return job
+
+
+# -- cluster: node-granular gang accounting -----------------------------
+def test_reserve_gang_is_atomic_and_releases_whole():
+    cl = _gpu_pool(nodes=2)
+    agg = cl.reserve_gang("g", {"gpu": 4.0}, 3)
+    assert agg == {"gpu": 12.0}
+    assert cl.used["gpu"] == 12.0
+    assert cl.gang_of("g") == ({"gpu": 4.0}, 3)
+    # idempotent per job id (a dispatch retry must not double-charge)
+    assert cl.reserve_gang("g", {"gpu": 4.0}, 3) == agg
+    assert cl.used["gpu"] == 12.0
+    # release-all mirrors reserve-all: every pod and node slot comes back
+    assert cl.release("g") == agg
+    assert cl.used["gpu"] == 0.0
+    assert cl.gang_of("g") is None
+    assert all(f == {"gpu": 8.0} for f in cl._node_free)
+
+
+def test_failed_gang_pack_leaves_zero_partial_hold():
+    """Aggregate fits but the pods cannot all node-pack: the reserve must
+    raise with the books untouched — never a partial gang hold."""
+    cl = _gpu_pool(nodes=2)
+    # a single job on a node-shaped pool routes through the node packer
+    cl.reserve_gang("blocker", {"gpu": 5.0}, 1)  # node 0: 3, node 1: 8
+    before = dict(cl.used)
+    # 2 pods x 6 gpu = 12 <= 11 free? no: 12 > 11 -> aggregate reject
+    with pytest.raises(CapacityError):
+        cl.reserve_gang("g1", {"gpu": 6.0}, 2)
+    # 2 pods x 5 gpu = 10 <= 11 free, but only node 1 fits a 5-gpu pod
+    with pytest.raises(CapacityError, match="pack"):
+        cl.reserve_gang("g2", {"gpu": 5.0}, 2)
+    assert cl.used == before
+    assert set(cl.gang_reservations()) == {"blocker"}
+    assert "g1" not in cl._held and "g2" not in cl._held
+
+
+def test_can_pack_is_node_granular_not_aggregate():
+    cl = _gpu_pool(nodes=2)
+    cl.reserve_gang("blocker", {"gpu": 5.0}, 1)
+    assert cl.can_pack({"gpu": 5.0}, 1)
+    assert not cl.can_pack({"gpu": 5.0}, 2)    # aggregate 10 <= 11 free
+    assert cl.can_pack({"gpu": 3.0}, 3)        # 3+3 on node 1, 3 on node 0
+
+
+def test_shrink_gang_hold_frees_trailing_pods_and_node_slots():
+    cl = _gpu_pool(nodes=2)
+    cl.reserve_gang("g", {"gpu": 4.0}, 4)      # 2 pods per node
+    assert cl.used["gpu"] == 16.0
+    freed = cl.shrink_gang_hold("g", 1)
+    assert freed == {"gpu": 12.0}
+    assert cl.used["gpu"] == 4.0
+    assert cl.held("g") == {"gpu": 4.0}
+    assert cl.gang_of("g") == ({"gpu": 4.0}, 1)
+    # three node slots came back: a 3-pod gang packs again
+    assert cl.can_pack({"gpu": 4.0}, 3)
+    with pytest.raises(ValueError):
+        cl.shrink_gang_hold("g", 0)            # never to zero pods
+    with pytest.raises(KeyError):
+        cl.shrink_gang_hold("nope", 1)
+
+
+# -- scheduler: all-or-none admission -----------------------------------
+def test_gang_waits_whole_and_holds_nothing_while_queued():
+    """A gang that cannot pack NOW queues as one unit with zero capacity
+    held, then launches whole when the blocker drains."""
+    cl = _gpu_pool(nodes=2)
+    registry, bus, runner, sched = _engine({"gpu": cl})
+    blocker = _submit(registry, sched,
+                      _spec("blocker", duration=10.0,
+                            resources={"gpu": 5.0}))
+    gang = _submit(registry, sched,
+                   _spec("gang", duration=5.0, resources={"gpu": 5.0},
+                         gang=GangSpec(n_pods=2)))
+    # aggregate (10) fits the 11 free, but node 0 cannot host a 5-gpu pod
+    assert registry.get(gang.job_id).state == JobState.QUEUED
+    assert cl.used["gpu"] == 5.0               # zero partial-gang hold
+    assert gang.job_id not in cl.gang_reservations()
+    sched.run_to_completion()
+    assert registry.get(blocker.job_id).state == JobState.FINISHED
+    assert registry.get(gang.job_id).state == JobState.FINISHED
+    assert cl.used["gpu"] == 0.0
+
+
+def test_gang_launch_reserves_aggregate_and_stamps_width():
+    cl = _gpu_pool(nodes=2)
+    registry, bus, runner, sched = _engine({"gpu": cl})
+    gang = _submit(registry, sched,
+                   _spec("gang", duration=5.0, resources={"gpu": 4.0},
+                         gang=GangSpec(n_pods=3)))
+    assert registry.get(gang.job_id).state == JobState.RUNNING
+    assert gang.gang_pods == 3
+    assert cl.held(gang.job_id) == {"gpu": 12.0}
+    assert cl.gang_of(gang.job_id) == ({"gpu": 4.0}, 3)
+
+
+def test_gang_too_wide_for_pool_fails_fast_at_submit():
+    cl = _gpu_pool(nodes=2)
+    registry, bus, runner, sched = _engine({"gpu": cl})
+    # per-pod overflows a node: no pool can EVER pack it
+    wide = _submit(registry, sched,
+                   _spec("wide", resources={"gpu": 9.0},
+                         gang=GangSpec(n_pods=1)))
+    assert registry.get(wide.job_id).state == JobState.FAILED
+    # aggregate overflows the pool
+    many = _submit(registry, sched,
+                   _spec("many", resources={"gpu": 4.0},
+                         gang=GangSpec(n_pods=8)))
+    assert registry.get(many.job_id).state == JobState.FAILED
+
+
+# -- gang preemption: one unit, one epoch bump --------------------------
+def test_gang_preempts_whole_with_single_epoch_bump():
+    cl = _gpu_pool(nodes=2)
+    registry, bus, runner, sched = _engine(
+        {"gpu": cl}, preemption=True, checkpoint_interval=2.0)
+    gang = _submit(registry, sched,
+                   _spec("gang", duration=10.0, resources={"gpu": 4.0},
+                         gang=GangSpec(n_pods=4)))
+    assert registry.get(gang.job_id).state == JobState.RUNNING
+    assert cl.used["gpu"] == 16.0
+    runner.advance_to(5.0)
+    epoch0 = gang.epoch
+    assert sched.preempt(gang.job_id)
+    # the WHOLE gang released in ONE preemption, then relaunched whole by
+    # the trailing dispatch: exactly one fresh 4-pod hold (16, not 32 —
+    # a lingering pod would double-charge), and ONE epoch bump for all
+    # 4 pods, not one per pod
+    assert gang.epoch == epoch0 + 1
+    assert sched.stats["preempted"] == 1
+    assert runner.preempt_stats["preemptions"] == 1
+    assert registry.get(gang.job_id).state == JobState.RUNNING
+    assert cl.used["gpu"] == 16.0
+    assert cl.gang_reservations() == {gang.job_id: ({"gpu": 4.0}, 4)}
+    sched.run_to_completion()
+    assert registry.get(gang.job_id).state == JobState.FINISHED
+    # checkpoint-resume: at most one interval of gang work re-ran
+    assert runner.preempt_stats["max_lost_s"] <= 2.0 + 1e-9
+
+
+# -- elastic shrink-to-k ------------------------------------------------
+def test_shrink_gang_frees_capacity_and_repaces_without_requeue():
+    cl = _gpu_pool(nodes=2)
+    registry, bus, runner, sched = _engine({"gpu": cl})
+    gang = _submit(registry, sched,
+                   _spec("gang", duration=100.0, resources={"gpu": 4.0},
+                         gang=GangSpec(n_pods=4, min_pods=2)))
+    runner.advance_to(50.0)
+    epoch0 = gang.epoch
+    assert sched.shrink_gang(gang.job_id, 2)
+    # half the work done at width 4; the rest runs at old/k = 2x slower
+    assert runner.expected_end(gang.job_id) == pytest.approx(150.0)
+    assert gang.gang_pods == 2
+    assert gang.epoch == epoch0                # no requeue, no epoch bump
+    assert registry.get(gang.job_id).state == JobState.RUNNING
+    assert cl.held(gang.job_id) == {"gpu": 8.0}
+    assert cl.can_pack({"gpu": 8.0}, 1)        # a full node came back
+    assert sched.stats["gang_shrunk"] == 1
+    sched.run_to_completion()
+    assert registry.get(gang.job_id).state == JobState.FINISHED
+    assert runner.now == pytest.approx(150.0)
+
+
+def test_shrink_gang_rejects_non_resizable_and_bad_widths():
+    cl = _gpu_pool(nodes=2)
+    registry, bus, runner, sched = _engine({"gpu": cl})
+    fixed = _submit(registry, sched,
+                    _spec("fixed", duration=50.0, resources={"gpu": 2.0},
+                          gang=GangSpec(n_pods=2)))          # min_pods=0
+    rsz = _submit(registry, sched,
+                  _spec("rsz", duration=50.0, resources={"gpu": 2.0},
+                        gang=GangSpec(n_pods=4, min_pods=2)))
+    assert not sched.shrink_gang(fixed.job_id, 1)
+    assert not sched.shrink_gang(rsz.job_id, 1)    # below min_pods floor
+    assert not sched.shrink_gang(rsz.job_id, 4)    # not a shrink
+    assert rsz.gang_pods == 4                      # untouched
+    sched.run_to_completion()
+
+
+def test_pool_shrink_resizes_gangs_before_preempting():
+    """An elastic shrink's drain must prefer shrinking a resizable gang
+    in place over evicting jobs (satellite: softened drains)."""
+    cl = _gpu_pool(nodes=2)
+    registry, bus, runner, sched = _engine(
+        {"gpu": cl}, preemption=True, checkpoint_interval=5.0)
+    gang = _submit(registry, sched,
+                   _spec("gang", duration=100.0, resources={"gpu": 8.0},
+                         gang=GangSpec(n_pods=2, min_pods=1)))
+    assert cl.used["gpu"] == 16.0
+    sched.resize_pool("gpu", {"gpu": 8.0})     # drop to one node
+    assert gang.gang_pods == 1                 # shrunk, not preempted
+    assert registry.get(gang.job_id).state == JobState.RUNNING
+    assert cl.used["gpu"] == 8.0
+    assert sched.stats["gang_shrunk"] == 1
+    assert sched.stats["preempted"] == 0
+    sched.run_to_completion()
+    assert registry.get(gang.job_id).state == JobState.FINISHED
+
+
+# -- reclaim with advance warning (satellite: grace-window checkpoints) --
+def _reclaim_setup():
+    cl = Cluster({"vcpu": 8.0}, {"vcpu": 0.0}, name="spot", spot=True)
+    registry, bus, runner, sched = _engine(
+        {"spot": cl}, preemption=True, checkpoint_interval=30.0)
+    job = _submit(registry, sched,
+                  _spec("victim", duration=100.0,
+                        resources={"vcpu": 8.0}))
+    assert registry.get(job.job_id).state == JobState.RUNNING
+    runner.advance_to(47.0)                    # 17s past the checkpoint
+    return registry, runner, sched, job
+
+
+def test_reclaim_warning_banks_exact_progress_lost_work_zero():
+    registry, runner, sched, job = _reclaim_setup()
+    assert sched.reclaim("spot", warning=5.0) == [job.job_id]
+    # the grace-window checkpoint landed first: nothing is lost
+    assert runner.preempt_stats["lost_work_s"] == pytest.approx(0.0)
+    sched.run_to_completion()
+    assert registry.get(job.job_id).state == JobState.FINISHED
+    assert runner.now == pytest.approx(100.0)  # no re-run work at all
+
+
+def test_reclaim_without_warning_loses_at_most_one_interval():
+    """Regression pin for the checkpoint-interval bound: a no-warning
+    reclaim rolls back to the interval grid — lost work is positive but
+    never exceeds one checkpoint interval."""
+    registry, runner, sched, job = _reclaim_setup()
+    assert sched.reclaim("spot") == [job.job_id]
+    lost = runner.preempt_stats["lost_work_s"]
+    assert 0.0 < lost <= 30.0 + 1e-9
+    assert lost == pytest.approx(17.0)         # 47 - floor(47/30)*30
+    sched.run_to_completion()
+    assert registry.get(job.job_id).state == JobState.FINISHED
+    assert runner.now == pytest.approx(100.0 + lost)
+
+
+# -- placement: transfer-cost model -------------------------------------
+def test_transfer_cost_model_rates_and_pair_overrides():
+    m = TransferCostModel(cost_per_gb=2.0,
+                          pair_cost_per_gb={("a", "b"): 0.5})
+    assert m.transfer_cost("a", "a", 1e9) == 0.0
+    assert m.transfer_cost("a", "b", 1e9) == 0.5
+    assert m.transfer_cost("b", "a", 1e9) == 2.0
+    assert m.cheapest_transfer({"a", "b"}, "a", 1e9) == 0.0   # local parent
+    assert m.cheapest_transfer({"b"}, "a", 2e9) == 4.0
+
+
+def test_close_gang_prefers_island_pool_over_cheaper_spread():
+    """A close-topology gang pays the interconnect spread penalty on a
+    pool that splits it across islands — the penalty must beat a plain
+    price advantage, and vanish with transfer_costs=None (legacy)."""
+    whole = Cluster({"gpu": 64.0}, {"gpu": 0.0}, name="whole",
+                    node_shape={"gpu": 32.0}, close_gang_pods=8)
+    split = Cluster({"gpu": 128.0}, {"gpu": 0.0}, name="split",
+                    node_shape={"gpu": 32.0}, close_gang_pods=2)
+    spec = _spec("train", resources={"gpu": 4.0},
+                 gang=GangSpec(n_pods=8, topology="close"))
+    aware = Placement(
+        {"whole": whole, "split": split},
+        transfer_costs=TransferCostModel(interconnect_weight=4.0))
+    opts = aware.eligible(spec)
+    assert opts["whole"].charge == {"gpu": 32.0} and opts["whole"].pods == 8
+    assert aware.rank(spec, opts)[0] == "whole"
+    # without the model the bigger (lower normalized score) pool wins
+    oblivious = Placement({"whole": whole, "split": split})
+    assert oblivious.rank(spec, oblivious.eligible(spec))[0] == "split"
+
+
+def test_offpool_child_pays_modelled_transfer_of_its_input_bytes():
+    a = Cluster({"vcpu": 8.0}, {"vcpu": 0.0}, name="a")
+    b = Cluster({"vcpu": 80.0}, {"vcpu": 0.0}, name="b")
+    pl = Placement({"a": a, "b": b},
+                   transfer_costs=TransferCostModel(cost_per_gb=1.0))
+    spec = _spec("child", duration=10.0, resources={"vcpu": 4.0})
+    spec.input_bytes = 50e9
+    # parent ran on "a": staying local dodges a 50-unit transfer that
+    # dwarfs b's normalized-capacity advantage
+    assert pl.rank(spec, pl.eligible(spec), {"a"})[0] == "a"
+    # with no parents the cheaper pool wins again
+    assert pl.rank(spec, pl.eligible(spec))[0] == "b"
+
+
+# -- submit-time validation (satellite: reject malformed specs) ---------
+def test_validate_spec_rejects_zero_and_negative_dims():
+    with pytest.raises(ValueError, match="must be a positive number"):
+        validate_spec(_spec(resources={"gpu": 0}))
+    with pytest.raises(ValueError, match="mem_mb"):
+        validate_spec(_spec(resources={"vcpu": 1, "mem_mb": -512}))
+    with pytest.raises(ValueError, match="pool_resources"):
+        validate_spec(_spec(pool_resources={"tpu": {"chips": -8}}))
+    with pytest.raises(ValueError, match="gang.per_pod_resources"):
+        validate_spec(_spec(gang=GangSpec(
+            n_pods=2, per_pod_resources={"gpu": 0.0})))
+    validate_spec(_spec(resources={"gpu": 4}))            # sane: no raise
+
+
+def test_validate_spec_rejects_malformed_gangs():
+    with pytest.raises(ValueError, match="n_pods"):
+        validate_spec(_spec(gang=GangSpec(n_pods=0)))
+    with pytest.raises(ValueError, match="min_pods"):
+        validate_spec(_spec(gang=GangSpec(n_pods=4, min_pods=5)))
+    with pytest.raises(ValueError, match="topology"):
+        validate_spec(_spec(gang=GangSpec(n_pods=4, topology="ring")))
+
+
+def test_scheduler_submit_raises_before_any_state_change():
+    cl = _gpu_pool(nodes=2)
+    registry, bus, runner, sched = _engine({"gpu": cl})
+    bad = registry.submit(_spec("bad", resources={"gpu": -1}))
+    with pytest.raises(ValueError, match="positive"):
+        sched.submit(bad)
+    assert sched.queue_depth("p", "u") == 0    # never entered a queue
+
+
+def test_engine_submit_rejects_unknown_pool_names():
+    eng = AcaiEngine(pricing=default_catalog(), virtual=True,
+                     cluster_nodes={"cpu": 2, "tpu": 1}, quota_k=10)
+    with pytest.raises(ValueError, match="unknown pool"):
+        eng.submit(_spec("pinned", resources={"vcpu": 1}, pool="gpuz"))
+    with pytest.raises(ValueError, match="gpuz"):
+        eng.submit(_spec("menu", pool_resources={"gpuz": {"gpu": 1}}))
+    # a known pool still sails through
+    h = eng.submit(_spec("ok", duration=0.5, resources={"vcpu": 1},
+                         pool="cpu"))
+    assert h.wait() == JobState.FINISHED
+
+
+# -- SDK plumbing: Pipeline gang= ---------------------------------------
+def test_pipeline_stage_and_map_stamp_gang_specs():
+    pipe = Pipeline(None, name="t", submit=lambda spec: None)
+    st = pipe.stage(_spec("train", resources={"gpu": 4.0}), gang=8)
+    assert st.spec.gang == GangSpec(n_pods=8)
+    custom = GangSpec(n_pods=4, min_pods=2, topology="close")
+    sts = pipe.map(lambda p: _spec(f"s{p['i']}", resources={"gpu": 2.0}),
+                   {"i": [0, 1, 2]}, gang=custom)
+    assert all(s.spec.gang == custom for s in sts)
+    plain = pipe.stage(_spec("eval"))
+    assert plain.spec.gang is None
+
+
+def test_pipeline_gang_runs_end_to_end_through_the_engine():
+    eng = AcaiEngine(pricing=default_catalog(), virtual=True,
+                     cluster_nodes={"cpu": 2, "tpu": 1}, quota_k=10)
+    pipe = eng.pipeline("gangs")
+    st = pipe.stage(_spec("train", duration=1.0,
+                          resources={"vcpu": 2.0}), gang=2)
+    pipe.run()
+    assert st.handle.wait() == JobState.FINISHED
+    # the gang billed at width 2: cost doubles a 1-pod twin's
+    twin = eng.submit(_spec("solo", duration=1.0,
+                            resources={"vcpu": 2.0}))
+    assert twin.wait() == JobState.FINISHED
+    assert st.handle.job.cost == pytest.approx(2 * twin.job.cost)
+
+
+# -- train-side resize hook ---------------------------------------------
+def test_gang_resize_hook_fires_once_per_shrink_and_stays_internal():
+    job = types.SimpleNamespace(job_id="j-1", gang_pods=8)
+    hook = gang_resize_hook(job)
+    hook(1)                                    # steady width: no raise
+    job.gang_pods = 4
+    with pytest.raises(JobPreempted) as ei:
+        hook(2)
+    assert "4 pods" in str(ei.value)
+    assert not getattr(ei.value, "external", False)   # in-process re-mesh
+    hook(3)                                    # acted on: no re-raise
+    job.gang_pods = 2
+    with pytest.raises(JobPreempted):
+        hook(4)
+
+
+def test_gang_resize_hook_ignores_non_gang_jobs():
+    job = types.SimpleNamespace(job_id="j-2", gang_pods=None)
+    hook = gang_resize_hook(job)
+    for step in range(3):
+        hook(step)                             # never raises

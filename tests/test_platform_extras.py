@@ -1,6 +1,5 @@
 """Dashboard rendering, workflow replay (§7.1.3), inter-job fileset cache
 (§7.1.2), and the CLI round-trip."""
-import json
 
 import pytest
 

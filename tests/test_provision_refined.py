@@ -2,8 +2,6 @@
 master-weights training path."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.core.provision.autoprovision import AutoProvisioner
 from repro.core.provision.features import template_for

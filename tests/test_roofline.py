@@ -3,7 +3,6 @@ validated against programs with known costs (and documenting the XLA
 cost_analysis undercount that motivated the custom model)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.roofline import analysis as RA

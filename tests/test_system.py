@@ -3,7 +3,6 @@ jobs -> provenance -> provisioning) wrapped around real JAX training, plus
 the (arch x shape) applicability matrix the dry-run enforces."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs.base import get_arch, list_archs

@@ -12,7 +12,7 @@ from repro.train import compression as C
 from repro.train.checkpoints import CheckpointManager
 from repro.train.fault import JobPreempted, TrainSupervisor
 from repro.train.optimizer import (OptimizerConfig, adamw_update,
-                                   global_norm, init_opt_state, schedule)
+                                   init_opt_state, schedule)
 from repro.train.train_step import (TrainConfig, make_loss_fn,
                                     make_opt_state, make_train_step)
 
