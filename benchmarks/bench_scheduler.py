@@ -25,6 +25,15 @@ An auditing cluster proves capacity is never oversubscribed on any
 dimension of any pool. Emits ``BENCH_scheduler.json`` so future PRs have
 a perf trajectory. ``--smoke`` runs tiny fleets (CI regression gate)
 without touching the JSON.
+
+The **recovery** scenario is the durable-control-plane exit criterion as
+a benchmark: a subprocess drives the crash drill's seeded fleet, the
+bench SIGKILLs it mid-run (polling the drill's heartbeat file for the
+kill moment), then recovers in-process and drains the remainder. Hard
+gates: the final states match an uninterrupted golden run of the same
+fleet bit-for-bit, no job is lost or settled twice, and the capacity
+books balance (zero release underflow). ``recovery_wall_s`` — the
+snapshot+journal replay time — is the recorded perf number.
 """
 from __future__ import annotations
 
@@ -32,7 +41,13 @@ import argparse
 import copy
 import json
 import math
+import os
+import signal
+import subprocess
+import sys
+import tempfile
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -118,6 +133,11 @@ GANG_POD_PRICING = Pricing([
     ResourceDim("gpu", 1, 8, 0.20, (1, 2, 4, 8))], family="pod")
 GANG_ISLAND_PRICING = Pricing([
     ResourceDim("gpu", 1, 8, 0.10, (1, 2, 4, 8))], family="island")
+
+# -- kill -9 recovery scenario (durable control plane) --------------------
+RECOVERY_JOBS = 5000        # drill fleet size for the full bench
+RECOVERY_KILL_FRAC = 0.3    # SIGKILL near 30% of completions
+RECOVERY_SEED = 7
 
 # -- thundering-herd scenario (one user map()-fans a sweep) ---------------
 HERD_JOBS = 10_000          # the fanning user's burst, all at t=0
@@ -1081,6 +1101,92 @@ def run_elastic(n_jobs: int = ELASTIC_JOBS, seed: int = 0,
     return out
 
 
+# -- scenario 7: kill -9 crash recovery ----------------------------------
+def run_recovery(n_jobs: int = RECOVERY_JOBS, seed: int = RECOVERY_SEED,
+                 kill_at_frac: float = RECOVERY_KILL_FRAC) -> dict:
+    """The durable control plane's exit criterion, measured: run the
+    crash drill's seeded fleet in a subprocess, SIGKILL it once its
+    heartbeat shows ~``kill_at_frac`` of the fleet completed, recover
+    in-process and drain the rest. Hard gates: the post-recovery final
+    states equal an uninterrupted golden run's, every submitted job
+    reaches a terminal state exactly once, and no capacity release ever
+    underflowed."""
+    from repro.core.engine.durable import drill
+
+    with tempfile.TemporaryDirectory(prefix="acai-recovery-") as tmp:
+        golden = drill.run_fresh(Path(tmp) / "golden", n_jobs, seed)
+
+        victim = Path(tmp) / "victim"
+        victim.mkdir()
+        src = str(Path(__file__).resolve().parents[1] / "src")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [src] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.core.engine.durable.drill",
+             "--dir", str(victim), "--n-jobs", str(n_jobs),
+             "--seed", str(seed)],
+            stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL, env=env)
+        # the drill heartbeats completion counts every 25 jobs: kill at
+        # the first beat past the target, i.e. genuinely mid-fleet
+        kill_target = max(25, int(n_jobs * kill_at_frac))
+        heartbeat = victim / "progress"
+        deadline = time.monotonic() + 600.0
+        killed_at = None
+        while time.monotonic() < deadline:
+            if proc.poll() is not None:
+                raise AssertionError(
+                    "recovery: the drill completed before the kill "
+                    "threshold — raise n_jobs or lower kill_at_frac")
+            try:
+                done = int(heartbeat.read_text() or 0)
+            except (OSError, ValueError):
+                done = 0
+            if done >= kill_target:
+                killed_at = done
+                break
+            time.sleep(0.02)
+        assert killed_at is not None, "recovery: drill never heartbeat"
+        proc.send_signal(signal.SIGKILL)
+        proc.wait()
+
+        t0 = time.perf_counter()
+        out = drill.resume(victim, n_jobs, seed)
+        resume_wall = time.perf_counter() - t0
+
+    final, report = out["final"], out["report"]
+    lost = sorted(set(golden) - set(final))
+    mismatched = {j: (golden[j], final[j]) for j in golden
+                  if j in final and final[j] != golden[j]}
+    res = {
+        "n_jobs": n_jobs,
+        "killed_at_completions": killed_at,
+        "recovery_wall_s": report["wall_s"],
+        "resume_total_wall_s": resume_wall,
+        "events_replayed": report["events_replayed"],
+        "terminal_at_crash": report["terminal"],
+        "requeued": report["requeued"],
+        "resumed_from_checkpoint": report["resumed"],
+        "completed_after_recovery": out["completed_after_recovery"],
+        "lost_jobs": len(lost),
+        "mismatched_states": len(mismatched),
+        "duplicate_terminals": len(out["duplicate_terminals"]),
+        "release_underflow": out["release_underflow"],
+        "states_match_golden": not lost and not mismatched
+        and len(final) == len(golden),
+    }
+    assert res["states_match_golden"], \
+        (f"recovery: post-recovery states diverge from golden "
+         f"(lost={lost[:5]}, mismatched={dict(list(mismatched.items())[:5])})")
+    assert res["duplicate_terminals"] == 0, \
+        f"recovery: {out['duplicate_terminals']} jobs settled twice"
+    assert res["release_underflow"] == 0, \
+        "recovery: capacity books unbalanced (release underflow)"
+    assert report["requeued"] > 0, "recovery: the kill landed too late " \
+        "to requeue anything — not a mid-fleet crash"
+    return res
+
+
 # -- smoke regression gate -----------------------------------------------
 def check_throughput_regression(measured: dict, path: str,
                                 threshold: float = 0.7) -> list[str]:
@@ -1108,7 +1214,8 @@ def run(n_jobs: int = N_JOBS, seed: int = 0,
         hetero_jobs: int = HETERO_JOBS, trace: str | None = None,
         scale_jobs: int = SCALE_JOBS, policy_repeats: int = 3,
         elastic_jobs: int = ELASTIC_JOBS, gang_jobs: int = GANG_JOBS,
-        herd_jobs: int = HERD_JOBS) -> dict:
+        herd_jobs: int = HERD_JOBS,
+        recovery_jobs: int = RECOVERY_JOBS) -> dict:
     arrivals = trace_arrivals(trace) if trace else \
         poisson_arrivals(make_fleet(seed, n_jobs), ARRIVAL_RATE, seed)
     fifo = run_policy(arrivals, "fifo", backfill=False,
@@ -1132,6 +1239,8 @@ def run(n_jobs: int = N_JOBS, seed: int = 0,
         out["herd"] = run_herd(herd_jobs, seed)
     if elastic_jobs:
         out["elastic"] = run_elastic(elastic_jobs, seed)
+    if recovery_jobs:
+        out["recovery"] = run_recovery(recovery_jobs)
     if scale_jobs:
         out["scale"] = run_scale(scale_jobs, seed)
     assert not fifo["oversubscribed"] and not fair["oversubscribed"]
@@ -1210,6 +1319,16 @@ def report(res: dict, write: bool = True) -> None:
               f"{e['cost_saving_provisioned'] * 100:.1f}%"
               f"_makespan_ratio={e['makespan_ratio']:.3f}"
               f"_int_wait_p95={el['interactive_wait_p95_s']:.0f}s")
+    if "recovery" in res:
+        rc = res["recovery"]
+        print(f"scheduler.recovery,{rc['recovery_wall_s'] * 1e6:.0f},"
+              f"n={rc['n_jobs']}"
+              f"_killed_at={rc['killed_at_completions']}"
+              f"_replayed={rc['events_replayed']}"
+              f"_requeued={rc['requeued']}"
+              f"_lost={rc['lost_jobs']}"
+              f"_dup={rc['duplicate_terminals']}"
+              f"_match={str(rc['states_match_golden']).lower()}")
     if "scale" in res:
         sc = res["scale"]
         pools = ",".join(f"{p}:{c}" for p, c in
@@ -1263,7 +1382,7 @@ def main() -> None:
         res = run(n_jobs=args.n_jobs or 400, hetero_jobs=400,
                   trace=args.trace, scale_jobs=args.scale or 0,
                   policy_repeats=5, elastic_jobs=300,
-                  gang_jobs=150, herd_jobs=1500)
+                  gang_jobs=150, herd_jobs=1500, recovery_jobs=800)
         report(res, write=False)
         failures = check_throughput_regression(res, "BENCH_scheduler.json")
         if failures:

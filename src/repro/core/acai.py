@@ -96,11 +96,32 @@ class AcaiEngine:
                  usage_halflife: Optional[float] = None,
                  preemption: bool = False,
                  starvation_threshold: float = 300.0,
-                 checkpoint_interval: Optional[float] = None):
-        self.bus = EventBus()
+                 checkpoint_interval: Optional[float] = None,
+                 durable: Optional[str | Path] = None,
+                 snapshot_every: int = 1000,
+                 recover: bool = True):
+        # durable control plane: ``durable=<dir>`` turns on the
+        # write-ahead journal + snapshot store (the paper's Redis-backed
+        # engine state). Every submit/transition/preempt/resize records
+        # through it, the event stream persists, and building an engine
+        # over a non-empty state dir recovers: terminal jobs adopt as-is,
+        # non-terminal ones re-queue as new epochs with their checkpoint
+        # progress intact (``self.recovery`` holds the report).
+        store = journal = None
+        had_state = False
+        if durable is not None:
+            from repro.core.engine.durable import FileStore, Journal
+            store = FileStore(durable)
+            journal = Journal(store, snapshot_every=snapshot_every)
+            had_state = journal.has_state()
+        self.store = store
+        self.journal = journal
+        self.recovery = None
+        self.bus = EventBus(store=store)
         self.datalake = datalake
         self.registry = JobRegistry(
-            metadata=datalake.metadata if datalake else None)
+            metadata=datalake.metadata if datalake else None,
+            journal=journal)
         runner = runner or ("virtual" if virtual else "local")
         if runner == "virtual":
             self.launcher = VirtualRunner(
@@ -116,6 +137,12 @@ class AcaiEngine:
             self.launcher = LocalRunner(self.registry, self.bus,
                                         datalake=datalake, pricing=pricing,
                                         workroot=workroot)
+        elif runner == "subprocess":
+            from repro.core.engine.durable.runner import SubprocessRunner
+            self.launcher = SubprocessRunner(self.registry, self.bus,
+                                             datalake=datalake,
+                                             pricing=pricing,
+                                             workdir=workroot)
         else:
             raise ValueError(f"unknown runner {runner!r}")
         catalog = pricing if isinstance(pricing, dict) else None
@@ -145,8 +172,23 @@ class AcaiEngine:
                                    preemption=preemption,
                                    starvation_threshold=starvation_threshold)
         self.cluster = cluster
-        self.monitor = JobMonitor(self.bus)
+        self.monitor = JobMonitor(self.bus, registry=self.registry)
         self.pricing = pricing
+        if journal is not None:
+            from repro.core.engine.durable import (attach_terminal_recorder,
+                                                   snapshot_state)
+            from repro.core.engine.durable.recovery import recover as \
+                _recover
+            self.launcher.journal = journal
+            self.scheduler.journal = journal
+            journal.snapshot_source = lambda: snapshot_state(self)
+            # subscribed after the scheduler + monitor: by the time a
+            # terminal event reaches the recorder, the runner's finalize
+            # has committed outputs/billing, so the ``final`` journal
+            # record carries authoritative values
+            attach_terminal_recorder(self.bus, journal, self.registry)
+            if recover and had_state:
+                self.recovery = _recover(self)
 
     @property
     def pools(self) -> dict[str, Cluster]:
@@ -244,7 +286,8 @@ class AcaiPlatform:
                  runner: Optional[str] = None, max_workers: int = 4,
                  cluster_nodes: Optional[int | dict[str, int]] = None,
                  policy: str = "fair", backfill: bool = True,
-                 usage_halflife: Optional[float] = None):
+                 usage_halflife: Optional[float] = None,
+                 durable: bool = False):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self._users: dict[str, User] = {}      # token -> user
@@ -261,6 +304,10 @@ class AcaiPlatform:
         self._policy = policy
         self._backfill = backfill
         self._usage_halflife = usage_halflife
+        # durable=True journals each project engine's state under
+        # <root>/<project>/state, so a fresh process over the same root
+        # (the CLI) recovers jobs instead of starting empty
+        self._durable = durable
 
     # -- credential server ----------------------------------------------
     @property
@@ -289,7 +336,9 @@ class AcaiPlatform:
             cluster_nodes=self._cluster_nodes,
             policy=self._policy, backfill=self._backfill,
             usage_halflife=self._usage_halflife,
-            workroot=str(self.root / name / "jobs"))
+            workroot=str(self.root / name / "jobs"),
+            durable=(self.root / name / "state") if self._durable
+            else None)
         return self.create_user(None, name, f"{name}-admin", _admin=True)
 
     def create_user(self, admin_token: Optional[str], project: str,

@@ -9,10 +9,14 @@ logs, jobs, cluster, find, trace. ``cluster`` renders the per-pool view
 (tokens in tokens.json for this local deployment). ``submit`` runs a
 ``module:callable`` through the futures SDK and prints the job id.
 Job state persists to the metadata store and log text to the data lake
-(``/.logs/<job-id>.log``), so ``status``/``logs`` work across
-invocations; ``--after`` accepts parents from past invocations too —
-a FINISHED parent is a met dependency, a failed one refuses the
-submit (the registry itself is per-process)."""
+(``/.logs/<job-id>.log``), and each project engine journals its full
+state under ``<root>/<project>/state`` (the durable control plane): a
+fresh invocation *recovers* the registry, so ``status``/``wait``/
+``logs <job-id>`` are first-class across processes — jobs an
+interrupted invocation left non-terminal re-queue and complete on
+recovery instead of stranding. ``--after`` accepts parents from past
+invocations too — a FINISHED parent is a met dependency, a failed one
+refuses the submit."""
 from __future__ import annotations
 
 import argparse
@@ -27,7 +31,7 @@ from repro.core.engine.registry import JobSpec
 
 
 def _load_platform(root: Path) -> AcaiPlatform:
-    plat = AcaiPlatform(root)
+    plat = AcaiPlatform(root, durable=True)
     tok_file = root / "tokens.json"
     if tok_file.exists():
         saved = json.loads(tok_file.read_text())
@@ -39,9 +43,13 @@ def _load_platform(root: Path) -> AcaiPlatform:
             if name not in plat._projects:
                 from repro.core.acai import AcaiEngine, AcaiProject
                 plat._projects[name] = AcaiProject(name, root / name)
+                # durable engine over the project's journaled state:
+                # jobs from past invocations recover into the registry,
+                # making status/wait/logs first-class cross-process
                 plat._engines[name] = AcaiEngine(
                     datalake=plat._projects[name],
-                    workroot=str(root / name / "jobs"))
+                    workroot=str(root / name / "jobs"),
+                    durable=root / name / "state")
     return plat
 
 

@@ -1,0 +1,14 @@
+"""Durable control plane: journaled engine state, crash-recoverable
+restart, and the process-boundary runner (ACAI's Redis-backed engine,
+reproduced as a pluggable StateStore + write-ahead journal)."""
+from repro.core.engine.durable.codec import (decode_job, decode_spec,
+                                             decode_transfer_costs,
+                                             encode_job, encode_spec,
+                                             encode_transfer_costs)
+from repro.core.engine.durable.journal import (Journal,
+                                               attach_terminal_recorder)
+from repro.core.engine.durable.recovery import (RecoveryReport, recover,
+                                                snapshot_state)
+from repro.core.engine.durable.runner import SubprocessRunner
+from repro.core.engine.durable.store import (FileStore, MemoryStore,
+                                             StateStore)

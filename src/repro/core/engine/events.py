@@ -33,9 +33,16 @@ DEFAULT_HISTORY_LIMIT = 10_000
 
 
 class EventBus:
-    def __init__(self, history_limit: int = DEFAULT_HISTORY_LIMIT):
+    def __init__(self, history_limit: int = DEFAULT_HISTORY_LIMIT, *,
+                 store=None, stream: str = "events"):
+        """``store`` (a durable ``StateStore``) persists every published
+        message to ``stream`` — the Redis-stream half of the paper's bus:
+        a fresh process (CLI ``status``/``logs``) reads the stream
+        instead of needing to have been subscribed when events fired."""
         self._subs: dict[str, list[Callable[[dict], None]]] = defaultdict(list)
         self.history: deque[tuple[str, dict]] = deque(maxlen=history_limit)
+        self._store = store
+        self._stream = stream
         self._lock = threading.RLock()
 
     def subscribe(self, topic: str, fn: Callable[[dict], None]) -> None:
@@ -49,6 +56,8 @@ class EventBus:
         msg = dict(msg)
         with self._lock:
             self.history.append((topic, msg))
+            if self._store is not None:
+                self._store.append(self._stream, {"topic": topic, **msg})
             subs = list(self._subs[topic])
         for fn in subs:
             fn(msg)

@@ -84,6 +84,11 @@ class Runner:
     # asynchronously); JobHandle.wait blocks on the bus instead of stepping
     threaded = False
 
+    # optional write-ahead journal (durable control plane): runners that
+    # bank checkpoint progress record it here so a crash-recovered
+    # relaunch resumes from the checkpoint instead of step 0
+    journal = None
+
     # runner-clock time, or None to fall back to wall time: the virtual
     # runner advances this; schedulers read it for queue-wait accounting,
     # fair-share decay and backfill math
@@ -599,6 +604,8 @@ class VirtualRunner(Runner):
         self.preempt_stats["max_lost_s"] = max(
             self.preempt_stats["max_lost_s"], lost)
         self._done_frac[jid] = saved / full if full > 0 else 0.0
+        if self.journal is not None:
+            self.journal.job_progress(jid, self._done_frac[jid])
         pricing = resolve_pricing(self.pricing, job)
         if pricing is not None:
             job.cost = (job.cost or 0.0) + \
@@ -667,6 +674,18 @@ class VirtualRunner(Runner):
         self._ends[jid] = self.now + rem
         heapq.heappush(self._heap, (self.now + rem, self._seq, jid, rem))
         return self._ends[jid]
+
+    # -- durable recovery hooks -----------------------------------------
+    def restore_progress(self, job_id: str, done_frac: float) -> None:
+        """Seed a recovered job's checkpointed fraction before its
+        relaunch (recovery's counterpart of a live preemption's bank)."""
+        if done_frac > 0.0:
+            self._done_frac[job_id] = min(1.0, float(done_frac))
+
+    def checkpoint_progress(self) -> dict[str, float]:
+        """Banked progress fractions by job id — snapshotted so progress
+        survives even after journal compaction discards the records."""
+        return dict(self._done_frac)
 
     def forget(self, job_id: str) -> None:
         """Drop restore/duration state for a job that went terminal with

@@ -16,7 +16,13 @@ from repro.core.engine.lifecycle import TERMINAL_STATUS_VALUES as \
 
 
 class JobMonitor:
-    def __init__(self, bus: EventBus, *, max_samples: int = 10_000):
+    def __init__(self, bus: EventBus, *, registry=None,
+                 max_samples: int = 10_000):
+        # with a registry attached, terminal checks fall back to the
+        # job's registry state — a job that went terminal before this
+        # monitor subscribed (recovered engine, cross-process handle)
+        # still resolves instead of hanging its waiters
+        self.registry = registry
         self.status: dict[str, str] = {}
         self.stage: dict[str, str] = {}
         self.events: dict[str, list[dict]] = defaultdict(list)
@@ -48,7 +54,19 @@ class JobMonitor:
                 self._terminal_cv.notify_all()
 
     def is_terminal(self, job_id: str) -> bool:
-        return self.status.get(job_id, "") in _TERMINAL_STATUS
+        if self.status.get(job_id, "") in _TERMINAL_STATUS:
+            return True
+        if self.registry is not None:
+            try:
+                state = self.registry.get(job_id).state.value
+            except KeyError:
+                return False
+            if state in _TERMINAL_STATUS:
+                # cache it so the wait predicate stays cheap and watch()
+                # consumers see a consistent status map
+                self.status.setdefault(job_id, state)
+                return True
+        return False
 
     def wait_terminal(self, job_id: str,
                       timeout: Optional[float] = None) -> bool:

@@ -114,10 +114,14 @@ class Job:
 
 
 class JobRegistry:
-    def __init__(self, metadata=None):
+    def __init__(self, metadata=None, journal=None):
         self._jobs: dict[str, Job] = {}
         self._ctr = 0
         self.metadata = metadata
+        # optional write-ahead journal (durable control plane): every
+        # state-changing commit records through it while still holding
+        # the registry lock, so journal order matches commit order
+        self.journal = journal
         self._lock = threading.RLock()
         if metadata is not None:
             # resume the id counter past persisted jobs so a restarted
@@ -133,6 +137,8 @@ class JobRegistry:
             self._ctr += 1
             job = Job(job_id=f"job-{self._ctr}", spec=spec)
             self._jobs[job.job_id] = job
+            if self.journal is not None:
+                self.journal.job_submitted(job)
         if self.metadata is not None:
             self.metadata.register(job.job_id, kind="job",
                                    creator=spec.user, model=spec.name,
@@ -146,6 +152,17 @@ class JobRegistry:
     def all_jobs(self) -> list[Job]:
         with self._lock:
             return list(self._jobs.values())
+
+    def adopt(self, job: Job) -> None:
+        """Install a job rebuilt from the durable store (crash recovery):
+        no transition checks, no journaling, no metadata registration —
+        the job is already history, not a new submission. The id counter
+        advances past it so post-recovery submits never reuse its id."""
+        with self._lock:
+            self._jobs[job.job_id] = job
+            m = re.fullmatch(r"job-(\d+)", job.job_id)
+            if m:
+                self._ctr = max(self._ctr, int(m.group(1)))
 
     def set_state(self, job_id: str, new: JobState,
                   error: Optional[str] = None,
@@ -166,6 +183,8 @@ class JobRegistry:
             if new in TERMINAL_STATES:
                 job.finished_at = time.time()
                 job.error = error
+            if self.journal is not None:
+                self.journal.job_state(job)
             return job
 
     def mark_preempted(self, job_id: str) -> Job:
@@ -179,6 +198,8 @@ class JobRegistry:
             job.state = JobState.PREEMPTED
             job.epoch += 1
             job.preemptions += 1
+            if self.journal is not None:
+                self.journal.job_preempted(job)
             return job
 
     def persist_state(self, job_id: str) -> None:

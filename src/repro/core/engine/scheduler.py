@@ -93,7 +93,7 @@ from bisect import bisect_left, insort
 from collections import defaultdict, deque
 from typing import Optional
 
-from repro.core.engine.cluster import Cluster
+from repro.core.engine.cluster import CapacityError, Cluster
 from repro.core.engine.events import (EventBus, TOPIC_CONTAINER_STATUS,
                                       TOPIC_SCHEDULER)
 from repro.core.engine.lifecycle import (IllegalTransition, TERMINAL_STATES,
@@ -309,6 +309,10 @@ class Scheduler:
             self.placement = placement
         elif cluster is not None:
             self.placement = Placement({cluster.name or "default": cluster})
+        # optional write-ahead journal (durable control plane): elastic
+        # capacity changes record through it so a restarted engine
+        # rebuilds the *current* pool sizes, not the boot-time ones
+        self.journal = None
         bus.subscribe(TOPIC_CONTAINER_STATUS, self._on_container_status)
 
     # -- pools ----------------------------------------------------------
@@ -366,6 +370,10 @@ class Scheduler:
             cl = self.pools[pool]
             old_cap = dict(cl.capacity)
             overage = cl.resize(capacity)
+            if self.journal is not None:
+                # journal the full post-resize capacity (absolute, so
+                # replay is idempotent even across partial-dim resizes)
+                self.journal.pool_resized(pool, cl.capacity)
             grew = any(float(v) > old_cap.get(n, 0.0) + 1e-9
                        for n, v in capacity.items())
             if grew:
@@ -645,6 +653,45 @@ class Scheduler:
             else:
                 self._enqueue(job)
             self._dispatch()
+
+    def adopt_running(self, job: Job) -> None:
+        """Re-attach a job whose run survived an engine crash (its
+        process-boundary worker kept executing): rebuild the bookkeeping
+        ``_launch`` would have created — quota membership, reservation,
+        wait clocks, shadow state — without re-launching. The expected
+        end is unknown (the original estimate died with the old engine),
+        so the pool's backfill conservatively disables until it settles.
+        """
+        with self._lock:
+            jid = job.job_id
+            key = job.queue_key
+            self._seq += 1
+            self._seq_of[jid] = self._seq
+            self._prio_of[jid] = job.spec.priority
+            self._job_of[jid] = job
+            self._active[key].add(jid)
+            if job.pool is not None:
+                cl = self.pools.get(job.pool)
+                if cl is None:
+                    job.pool = None
+                else:
+                    try:
+                        cl.reserve(jid, job.spec.resources)
+                    except CapacityError:
+                        # the pool shrank across the restart and the
+                        # adopted set no longer fits: run it unreserved
+                        # (pool=None, so settle releases nothing) rather
+                        # than kill work that is already executing
+                        job.pool = None
+            now = self._now()
+            self._started_at[jid] = now
+            if job.pool is not None:
+                self._unknown_ends[job.pool] = \
+                    self._unknown_ends.get(job.pool, 0) + 1
+                self._end_key[jid] = (job.pool, None)
+            job.state = JobState.RUNNING
+            self._dirty_full = True
+            self._state_rev += 1
 
     _MISS = object()        # "duration not probed yet" sentinel
 
@@ -1947,7 +1994,13 @@ class Scheduler:
             return
         with self._lock:
             job_id = msg["job_id"]
-            job = self.registry.get(job_id)
+            try:
+                job = self.registry.get(job_id)
+            except KeyError:
+                # cross-process event sources (a surviving worker's
+                # replayed buffer, a persisted event stream) can name
+                # jobs this engine never registered — ignore, don't die
+                return
             epoch = msg.get("epoch")
             if epoch is not None and epoch < job.epoch:
                 # stale event from a pre-preemption incarnation (e.g. a

@@ -1,0 +1,302 @@
+"""Durable control plane, layer 1: StateStore transports, the
+write-ahead journal's sequencing/compaction/torn-write semantics, and
+round-trip serialization for every spec/event shape the journal persists
+(JobSpec incl. GangSpec, Job records, transfer-cost configs) —
+property-style over randomized shapes, identical on both backends."""
+import dataclasses
+import json
+import random
+
+import pytest
+
+from repro.core.engine.durable.codec import (decode_fn, decode_job,
+                                             decode_spec,
+                                             decode_transfer_costs,
+                                             encode_fn, encode_job,
+                                             encode_spec,
+                                             encode_transfer_costs,
+                                             json_safe)
+from repro.core.engine.durable.journal import (JOURNAL_STREAM, SNAPSHOT_KEY,
+                                               Journal)
+from repro.core.engine.durable.store import FileStore, MemoryStore
+from repro.core.engine.lifecycle import JobState
+from repro.core.engine.placement import TransferCostModel
+from repro.core.engine.registry import GangSpec, Job, JobSpec
+from repro.core.engine.durable.jobs import echo_job
+
+
+def _stores(tmp_path):
+    return [MemoryStore(), FileStore(tmp_path / "fs")]
+
+
+# -- StateStore transports ------------------------------------------------
+def test_store_stream_append_read_truncate(tmp_path):
+    for store in _stores(tmp_path):
+        assert store.read("s") == []
+        store.append("s", {"a": 1})
+        store.append("s", {"b": [1, 2]})
+        assert store.read("s") == [{"a": 1}, {"b": [1, 2]}]
+        store.truncate("s")
+        assert store.read("s") == []
+        store.append("s", {"c": 3})     # append after truncate works
+        assert store.read("s") == [{"c": 3}]
+
+
+def test_store_keys_put_get_delete(tmp_path):
+    for store in _stores(tmp_path):
+        assert store.get("k") is None
+        store.put("k", {"x": {"y": 2.5}})
+        assert store.get("k") == {"x": {"y": 2.5}}
+        store.put("k", {"z": None})     # overwrite
+        assert store.get("k") == {"z": None}
+        store.delete("k")
+        assert store.get("k") is None
+        store.delete("k")               # idempotent
+
+
+def test_filestore_skips_torn_trailing_line(tmp_path):
+    store = FileStore(tmp_path)
+    store.append("j", {"n": 1})
+    store.append("j", {"n": 2})
+    store.close()
+    # simulate kill -9 mid-append: a partial record at the tail
+    with (tmp_path / "j.jsonl").open("a") as fh:
+        fh.write('{"n": 3, "truncat')
+    assert FileStore(tmp_path).read("j") == [{"n": 1}, {"n": 2}]
+
+
+def test_filestore_rejects_mid_stream_corruption(tmp_path):
+    (tmp_path / "j.jsonl").write_text('{"n": 1}\ngarbage\n{"n": 3}\n')
+    with pytest.raises(json.JSONDecodeError):
+        FileStore(tmp_path).read("j")
+
+
+def test_filestore_survives_reopen(tmp_path):
+    store = FileStore(tmp_path)
+    store.append("j", {"n": 1})
+    store.put("snap", {"seq": 1})
+    store.close()
+    reopened = FileStore(tmp_path)
+    assert reopened.read("j") == [{"n": 1}]
+    assert reopened.get("snap") == {"seq": 1}
+
+
+# -- journal sequencing / compaction --------------------------------------
+def test_journal_assigns_monotone_seq_and_loads(tmp_path):
+    for store in _stores(tmp_path):
+        j = Journal(store)
+        for i in range(5):
+            j.record({"t": "x", "i": i})
+        snap, events = Journal(store).load()
+        assert snap is None
+        assert [e["n"] for e in events] == [1, 2, 3, 4, 5]
+
+
+def test_journal_seq_survives_compaction(tmp_path):
+    """Sequence numbers never reset: records appended after a snapshot
+    continue past the watermark, so the watermark filter is correct."""
+    store = MemoryStore()
+    j = Journal(store, snapshot_every=0)    # manual snapshots only
+    j.snapshot_source = lambda: {"v": 1, "jobs": []}
+    for i in range(3):
+        j.record({"t": "x", "i": i})
+    j.snapshot()
+    assert store.read(JOURNAL_STREAM) == []     # compacted
+    assert store.get(SNAPSHOT_KEY)["seq"] == 3
+    j.record({"t": "x", "i": 99})
+    snap, events = Journal(store).load()
+    assert snap["seq"] == 3
+    assert [e["n"] for e in events] == [4]
+
+
+def test_journal_replay_skips_snapshotted_prefix(tmp_path):
+    """Crash between snapshot-write and truncate: the journal still holds
+    already-snapshotted records, and load() must skip them."""
+    store = MemoryStore()
+    j = Journal(store, snapshot_every=0)
+    j.snapshot_source = lambda: {"v": 1}
+    for i in range(4):
+        j.record({"t": "x", "i": i})
+    # snapshot WITHOUT truncation = the crash window
+    doc = j.snapshot_source()
+    doc["seq"] = 2
+    store.put(SNAPSHOT_KEY, doc)
+    snap, events = Journal(store).load()
+    assert [e["i"] for e in events] == [2, 3]   # n=1,2 skipped
+
+
+def test_journal_auto_snapshot_threshold():
+    store = MemoryStore()
+    j = Journal(store, snapshot_every=10)
+    j.snapshot_source = lambda: {"v": 1}
+    for i in range(25):
+        j.record({"t": "x", "i": i})
+    # two compactions happened; at most snapshot_every records remain
+    assert len(store.read(JOURNAL_STREAM)) <= 10
+    assert store.get(SNAPSHOT_KEY) is not None
+    # nothing was lost: watermark + remaining journal cover all 25 records
+    snap, events = Journal(store).load()
+    assert snap["seq"] + len(events) == 25
+
+
+def test_journal_paused_suppresses_recording():
+    store = MemoryStore()
+    j = Journal(store)
+    with j.paused():
+        j.record({"t": "x"})
+        j.job_progress("job-1", 0.5)
+    assert store.read(JOURNAL_STREAM) == []
+    j.record({"t": "y"})
+    assert [e["t"] for e in store.read(JOURNAL_STREAM)] == ["y"]
+
+
+def test_journal_has_state(tmp_path):
+    store = FileStore(tmp_path)
+    j = Journal(store)
+    assert not j.has_state()
+    j.record({"t": "x"})
+    assert j.has_state()
+
+
+# -- codec round-trips: property-style over randomized shapes -------------
+def _random_spec(rng: random.Random) -> JobSpec:
+    gang = None
+    if rng.random() < 0.4:
+        n = rng.randint(2, 8)
+        gang = GangSpec(
+            n_pods=n,
+            per_pod_resources={"vcpu": rng.choice([1.0, 2.0])}
+            if rng.random() < 0.5 else None,
+            topology=rng.choice(["any", "close"]),
+            min_pods=rng.randint(0, n))
+    return JobSpec(
+        name=f"j{rng.randint(0, 999)}",
+        project=rng.choice(["p1", "p2"]),
+        user=rng.choice(["alice", "bob"]),
+        fn=echo_job if rng.random() < 0.3 else None,
+        argv=["run.py", "--x"] if rng.random() < 0.3 else None,
+        input_fileset=rng.choice([None, "train@1"]),
+        output_fileset=rng.choice([None, "out"]),
+        resources={"vcpu": float(rng.randint(1, 8)),
+                   "mem_mb": float(rng.choice([512, 2048]))},
+        args={"lr": rng.random(), "tags": ["a", "b"],
+              "nested": {"k": rng.randint(0, 5)}},
+        duration=rng.choice([None, round(rng.uniform(1, 100), 3)]),
+        priority=rng.randint(-2, 5),
+        depends_on=[f"job-{rng.randint(1, 9)}"]
+        if rng.random() < 0.3 else [],
+        pool=rng.choice([None, "cpu", "tpu"]),
+        pool_resources={"tpu": {"chips": 4.0}}
+        if rng.random() < 0.3 else {},
+        template=rng.choice([None, "resnet"]),
+        gang=gang,
+        input_bytes=rng.choice([0.0, 2.5e9]))
+
+
+def test_spec_roundtrip_property():
+    rng = random.Random(11)
+    for _ in range(60):
+        spec = _random_spec(rng)
+        # the store boundary is real JSON text, not dict identity
+        doc = json.loads(json.dumps(encode_spec(spec)))
+        back = decode_spec(doc)
+        for f in dataclasses.fields(JobSpec):
+            if f.name == "fn":
+                continue    # fn crosses as a ref, checked below
+            assert getattr(back, f.name) == getattr(spec, f.name), f.name
+        if spec.fn is not None:
+            assert back.fn is spec.fn   # importable fn resolves itself
+
+
+def test_job_roundtrip_property():
+    rng = random.Random(23)
+    for _ in range(60):
+        job = Job(job_id=f"job-{rng.randint(1, 500)}",
+                  spec=_random_spec(rng),
+                  state=rng.choice(list(JobState)))
+        job.started_at = rng.choice([None, 100.5])
+        job.finished_at = rng.choice([None, 222.25])
+        job.runtime = rng.choice([None, 12.125])
+        job.cost = rng.choice([None, 0.75])
+        job.pool = rng.choice([None, "cpu"])
+        job.error = rng.choice([None, "boom"])
+        job.outputs = {"log": "x" * rng.randint(0, 5),
+                       "metrics": {"acc": 0.9}}
+        job.epoch = rng.randint(0, 6)
+        job.preemptions = rng.randint(0, 6)
+        job.gang_pods = rng.choice([None, 4])
+        doc = json.loads(json.dumps(encode_job(job)))
+        back = decode_job(doc)
+        for f in ("job_id", "state", "submitted_at", "started_at",
+                  "finished_at", "runtime", "cost", "pool", "error",
+                  "outputs", "epoch", "preemptions", "gang_pods"):
+            assert getattr(back, f) == getattr(job, f), f
+
+
+def test_transfer_costs_roundtrip_property():
+    rng = random.Random(37)
+    pools = ["cpu", "tpu", "gpu"]
+    for _ in range(30):
+        model = TransferCostModel(
+            cost_per_gb=round(rng.uniform(0, 0.2), 6),
+            pair_cost_per_gb={(s, d): round(rng.uniform(0, 0.5), 6)
+                              for s in pools for d in pools
+                              if s != d and rng.random() < 0.5},
+            interconnect_weight=round(rng.uniform(0.1, 3.0), 6))
+        doc = json.loads(json.dumps(encode_transfer_costs(model)))
+        back = decode_transfer_costs(doc)
+        assert back.cost_per_gb == model.cost_per_gb
+        assert back.pair_cost_per_gb == model.pair_cost_per_gb
+        assert back.interconnect_weight == model.interconnect_weight
+
+
+def test_fn_codec_lambda_refuses_and_stub_fails_loudly(tmp_path):
+    assert encode_fn(lambda w, j: {}) is None
+
+    def local_fn(w, j):
+        return {}
+    assert encode_fn(local_fn) is None          # <locals> in qualname
+    assert encode_fn(echo_job) == \
+        "repro.core.engine.durable.jobs:echo_job"
+    assert decode_fn(None) is None
+    stub = decode_fn("no.such.module:missing")
+    with pytest.raises(RuntimeError, match="not importable"):
+        stub(tmp_path, None)
+
+
+def test_json_safe_handles_nonfinite_and_objects():
+    out = json_safe({"inf": float("inf"), "nan": float("nan"),
+                     1: {"set": {1, 2}}, "obj": object()})
+    json.dumps(out)     # must be representable
+    assert out["inf"] == "inf"
+    assert out["1"]["set"] == [1, 2] or sorted(out["1"]["set"]) == [1, 2]
+
+
+def test_journal_event_shapes_roundtrip_through_filestore(tmp_path):
+    """Every typed hook's record survives the real file boundary."""
+    store = FileStore(tmp_path)
+    j = Journal(store)
+    job = Job(job_id="job-1", spec=_random_spec(random.Random(5)))
+    j.job_submitted(job)
+    job.state = JobState.QUEUED
+    j.job_state(job)
+    job.state = JobState.FAILED
+    job.error = "boom"
+    job.finished_at, job.runtime, job.cost = 9.0, 4.5, 0.01
+    j.job_state(job)
+    j.job_preempted(job)
+    j.job_progress("job-1", 0.625)
+    j.pool_resized("cpu", {"vcpu": 32.0})
+    j.job_final(job)
+    store.close()
+    events = FileStore(tmp_path).read(JOURNAL_STREAM)
+    assert [e["t"] for e in events] == \
+        ["submit", "state", "state", "preempt", "progress", "resize",
+         "final"]
+    assert events[2]["error"] == "boom"
+    assert events[2]["runtime"] == 4.5
+    assert events[4]["done_frac"] == 0.625
+    assert events[5]["capacity"] == {"vcpu": 32.0}
+    assert events[6]["state"] == "FAILED"
+    # the submitted spec decodes back into an equivalent JobSpec
+    decode_spec(events[0]["spec"])

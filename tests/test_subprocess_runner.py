@@ -1,0 +1,155 @@
+"""Process-boundary runner: jobs execute in a detached worker process
+that outlives the engine. Covers the drain protocol (launch/pending/
+step), failure propagation, the importable-fn contract, engine-restart
+re-adoption of in-flight jobs, replay of results buffered while no
+engine was alive, and exactly-once side effects across a crash."""
+import time
+
+import pytest
+
+from repro.core.acai import AcaiEngine
+from repro.core.engine.durable.jobs import (append_once_job, echo_job,
+                                            fail_job, sleep_job)
+from repro.core.engine.lifecycle import JobState
+from repro.core.engine.registry import JobSpec
+
+
+def _engine(tmp_path, **kw):
+    return AcaiEngine(runner="subprocess", workroot=str(tmp_path / "w"),
+                      durable=tmp_path / "state", quota_k=100, **kw)
+
+
+def _spec(name, fn, args=None):
+    return JobSpec(name=name, project="p", user="u", fn=fn,
+                   args=args or {},
+                   resources={"vcpu": 1.0, "mem_mb": 512.0})
+
+
+def _drain(engine, timeout=30.0):
+    launcher = engine.scheduler.launcher
+    while launcher.pending():
+        launcher.step(timeout=timeout)
+
+
+@pytest.fixture
+def eng(tmp_path):
+    engine = _engine(tmp_path)
+    yield engine
+    engine.launcher.shutdown()
+    engine.store.close()
+
+
+def test_launch_result_outputs_and_log(eng):
+    h = eng.submit(_spec("e", echo_job, {"msg": "over the wire"}))
+    _drain(eng)
+    job = eng.registry.get(h.job_id)
+    assert job.state is JobState.FINISHED
+    assert job.outputs["echo"] == "over the wire"
+    assert "echo: over the wire" in job.outputs["log"]
+    assert job.runtime is not None and job.runtime >= 0
+    assert h.wait(timeout=1.0) is JobState.FINISHED
+
+
+def test_failure_carries_traceback(eng):
+    h = eng.submit(_spec("f", fail_job, {"msg": "kaput"}))
+    _drain(eng)
+    job = eng.registry.get(h.job_id)
+    assert job.state is JobState.FAILED
+    assert "kaput" in job.error
+
+
+def test_unimportable_fn_fails_loudly(eng):
+    h = eng.submit(_spec("lam", lambda w, j: {}))
+    _drain(eng)
+    job = eng.registry.get(h.job_id)
+    assert job.state is JobState.FAILED
+    assert "importable" in job.error
+
+
+def test_worker_survives_engine_death_and_readopts(tmp_path):
+    """The headline: jobs keep running through an engine crash; the
+    restarted engine re-adopts in-flight work at its original epoch and
+    applies results completed while it was down — without re-running."""
+    marks = tmp_path / "marks.txt"
+    eng1 = _engine(tmp_path)
+    h_slow = eng1.submit(_spec("slow", sleep_job, {"seconds": 3.0}))
+    h_mark = eng1.submit(_spec("mark", append_once_job,
+                               {"path": str(marks), "seconds": 0.2}))
+    deadline = time.monotonic() + 10.0
+    while time.monotonic() < deadline:
+        if all(eng1.registry.get(h.job_id).state is JobState.RUNNING
+               for h in (h_slow, h_mark)):
+            break
+        time.sleep(0.05)
+    else:
+        raise AssertionError("jobs never reached RUNNING in the worker")
+    # engine dies: no shutdown — the detached worker keeps executing
+    eng1.store.close()
+    eng1.launcher._disconnect()
+    del eng1
+    time.sleep(1.0)     # "mark" completes while no engine is alive
+
+    eng2 = _engine(tmp_path)
+    rep = eng2.recovery
+    assert rep is not None
+    assert rep.adopted >= 1             # slow: still in flight, re-attached
+    assert rep.worker_results >= 1      # mark: buffered result applied
+    assert rep.requeued == 0            # nothing re-queued, nothing re-run
+    slow = eng2.registry.get(h_slow.job_id)
+    assert slow.epoch == 0              # original incarnation, re-adopted
+    _drain(eng2)
+    assert eng2.registry.get(h_slow.job_id).state is JobState.FINISHED
+    assert eng2.registry.get(h_mark.job_id).state is JobState.FINISHED
+    # exactly-once side effect: one line, despite crash + recovery
+    assert marks.read_text().splitlines() == [h_mark.job_id]
+    eng2.launcher.shutdown()
+    eng2.store.close()
+
+
+def test_dead_worker_buffered_results_still_settle(tmp_path):
+    """Worker AND engine both die after a completion: the results.jsonl
+    buffer alone settles the finished job on restart; only genuinely
+    unfinished work re-queues."""
+    marks = tmp_path / "marks.txt"
+    eng1 = _engine(tmp_path)
+    h = eng1.submit(_spec("mark", append_once_job, {"path": str(marks)}))
+    _drain(eng1)
+    assert eng1.registry.get(h.job_id).state is JobState.FINISHED
+    eng1.launcher.shutdown()            # worker exits too
+    eng1.store.close()
+    time.sleep(0.3)
+    # strip the journal's terminal records to force reliance on the
+    # worker buffer: keep only the submit record
+    state = tmp_path / "state"
+    lines = (state / "journal.jsonl").read_text().splitlines()
+    keep = [ln for ln in lines if '"t": "submit"' in ln]
+    (state / "journal.jsonl").write_text("\n".join(keep) + "\n")
+
+    eng2 = _engine(tmp_path)
+    assert eng2.recovery.worker_results == 1
+    job = eng2.registry.get(h.job_id)
+    assert job.state is JobState.FINISHED
+    assert job.outputs["marked"] == h.job_id
+    assert marks.read_text().splitlines() == [h.job_id]     # no re-run
+    eng2.launcher.shutdown()
+    eng2.store.close()
+
+
+def test_duplicate_result_replay_applies_once(tmp_path):
+    """adopt() replays the worker's whole buffer; a job the journal
+    already settled must not settle twice."""
+    eng1 = _engine(tmp_path)
+    h = eng1.submit(_spec("e", echo_job))
+    _drain(eng1)
+    eng1.store.close()
+    eng1.launcher._disconnect()     # worker stays alive with the buffer
+    del eng1
+
+    eng2 = _engine(tmp_path)
+    # journal adopted it as terminal; the buffered duplicate was dropped
+    assert eng2.recovery.terminal == 1
+    assert eng2.recovery.worker_results == 0
+    assert eng2.registry.get(h.job_id).state is JobState.FINISHED
+    assert eng2.launcher.pending() == 0
+    eng2.launcher.shutdown()
+    eng2.store.close()
