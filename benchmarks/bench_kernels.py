@@ -1,93 +1,135 @@
-"""Pallas-kernel micro-benches: allclose error vs ref + µs/call.
+"""Pallas-kernel micro-benches: block-size autotuning + error vs ref.
 
-interpret=True on CPU — numbers validate correctness and harness overhead,
-NOT TPU performance (the kernels lower to Mosaic on real TPUs; their VMEM
-working sets are chosen in the kernel files)."""
+Every shape goes through the deterministic hillclimb autotuner
+(``repro.core.provision.autotune``): the row reports the *tuned* config,
+its µs/call, the speedup over the kernel's MXU default, and the achieved
+fraction of the family's roofline ceiling. interpret=True on CPU — the
+numbers validate correctness, tuner behavior, and harness overhead, NOT
+TPU performance (the kernels lower to Mosaic on real TPUs).
+
+``--write`` regenerates the committed ``BENCH_kernels.json`` tuning
+cache; ``--smoke`` is the CI gate: it re-tunes the smoke shapes and
+hard-fails when a committed config diverges from the reference kernels
+or stops beating the default on the current host (a stale cache).
+"""
 from __future__ import annotations
 
-import time
+import argparse
+import json
 
-import jax
-import jax.numpy as jnp
+from repro.core.provision.autotune import (KERNELS, TuningCache,
+                                           _interpret_measure, autotune_all,
+                                           cache_key, default_family,
+                                           max_abs_err, seed_config,
+                                           shape_key)
 
-from repro.kernels import ops, ref
-
-
-def _time(fn, *args, iters=3):
-    fn(*args)  # compile/warm
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+CACHE_PATH = "BENCH_kernels.json"   # cwd-relative: CI runs at the repo root
+SMOKE_FACTOR = 1.5                  # committed config vs default, noise slack
 
 
-def run() -> list[dict]:
-    rows = []
-    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+def _rows(entries: list[dict]) -> list[dict]:
+    """Tuning entries -> the ``benchmarks/run.py`` row contract
+    (``kernel`` / ``max_err`` / ``us_per_call_interpret``) plus the
+    tuning fields."""
+    return [{
+        "kernel": e["kernel"],
+        "shape": shape_key(e["shape"]),
+        "max_err": e["max_err"],
+        "us_per_call_interpret": e["us"],
+        "config": e["config"],
+        "default_us": e["default_us"],
+        "speedup_vs_default": e["speedup_vs_default"],
+        "roofline_fraction": e["roofline_fraction"],
+        "candidates_measured": e["candidates_measured"],
+    } for e in entries]
 
-    b, s, h, kv, d = 1, 512, 4, 2, 64
-    q = jax.random.normal(ks[0], (b, s, h, d))
-    k = jax.random.normal(ks[1], (b, s, kv, d))
-    v = jax.random.normal(ks[2], (b, s, kv, d))
-    out = ops.flash_attention(q, k, v, interpret=True)
-    want = ref.attention_ref(q, k, v)
-    rows.append({
-        "kernel": "flash_attention", "shape": f"{b}x{s}x{h}x{d} gqa{h//kv}",
-        "max_err": float(jnp.abs(out - want).max()),
-        "us_per_call_interpret": _time(
-            lambda *a: ops.flash_attention(*a, interpret=True), q, k, v),
-    })
 
-    r = jax.random.normal(ks[3], (1, 256, 2, 64)) * 0.5
-    kk = jax.random.normal(ks[4], (1, 256, 2, 64)) * 0.5
-    vv = jax.random.normal(ks[5], (1, 256, 2, 64)) * 0.5
-    logw = -jnp.exp(jax.random.uniform(ks[6], (1, 256, 2, 64),
-                                       minval=-7.0, maxval=-0.7))
-    u = jax.random.normal(ks[7], (2, 64)) * 0.3
-    out = ops.wkv6(r, kk, vv, logw, u, interpret=True)
-    want = ref.wkv6_ref(r, kk, vv, logw, u)
-    rows.append({
-        "kernel": "wkv6", "shape": "1x256x2x64",
-        "max_err": float(jnp.abs(out - want).max()),
-        "us_per_call_interpret": _time(
-            lambda *a: ops.wkv6(*a, interpret=True), r, kk, vv, logw, u),
-    })
+def run(seed: int = 0) -> list[dict]:
+    """Tune the smoke shapes, one row per (kernel, shape)."""
+    return _rows(autotune_all(interpret=True, seed=seed))
 
-    x = jax.random.normal(ks[0], (1, 256, 4, 64)) * 0.5
-    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 256, 4)) - 1.0)
-    A = -jnp.exp(jax.random.normal(ks[2], (4,)) * 0.3)
-    B = jax.random.normal(ks[3], (1, 256, 1, 32)) * 0.5
-    C = jax.random.normal(ks[4], (1, 256, 1, 32)) * 0.5
-    D = jnp.ones((4,))
-    out = ops.mamba2_ssd(x, dt, A, B, C, D, interpret=True)
-    want = ref.ssd_ref(x, dt, A, B, C, D)
-    rows.append({
-        "kernel": "mamba2_ssd", "shape": "1x256x4x64 n32",
-        "max_err": float(jnp.abs(out - want).max()),
-        "us_per_call_interpret": _time(
-            lambda *a: ops.mamba2_ssd(*a, interpret=True),
-            x, dt, A, B, C, D),
-    })
 
-    q1 = jax.random.normal(ks[5], (2, 1, 4, 64))
-    kc = jax.random.normal(ks[6], (2, 1024, 2, 64))
-    vc = jax.random.normal(ks[7], (2, 1024, 2, 64))
-    clen = jnp.array([700, 300], jnp.int32)
-    out = ops.decode_attention(q1, kc, vc, clen, interpret=True)
-    want = ref.decode_attention_ref(jnp.swapaxes(q1, 1, 2)[:, :, 0],
-                                    jnp.swapaxes(kc, 1, 2),
-                                    jnp.swapaxes(vc, 1, 2), clen)
-    rows.append({
-        "kernel": "decode_attention", "shape": "2x1024x4x64",
-        "max_err": float(jnp.abs(out[:, 0] - want).max()),
-        "us_per_call_interpret": _time(
-            lambda *a: ops.decode_attention(*a, interpret=True),
-            q1, kc, vc, clen),
-    })
-    return rows
+def check_regression(fresh: list[dict], path: str = CACHE_PATH,
+                     factor: float = SMOKE_FACTOR) -> list[str]:
+    """CI gate vs the committed tuning cache. For every committed entry
+    of the current family: it must have been re-tuned this run (shape
+    drift without ``--write`` fails), its config must still match the
+    reference kernel within tolerance, and its config must still beat
+    (within ``factor`` timing noise) the untuned default *measured on
+    this host* — absolute µs are never compared across machines."""
+    committed = TuningCache(path)
+    if not committed.entries:
+        return []
+    family = default_family()
+    tuned_keys = {cache_key(e["kernel"], e["shape"], e["family"])
+                  for e in fresh}
+    failures = []
+    for key, old in sorted(committed.entries.items()):
+        if old.get("family") != family:
+            continue                 # tuned for other hardware
+        if key not in tuned_keys:
+            failures.append(f"{key}: committed entry not re-tuned "
+                            f"(shape set drifted — rerun --write)")
+            continue
+        spec = KERNELS[old["kernel"]]
+        args, ref_out = spec.build(old["shape"], 0)
+        err = max_abs_err(spec, args, ref_out, old["config"],
+                          interpret=True)
+        if err > old["tol"]:
+            failures.append(f"{key}: committed config diverges from ref "
+                            f"(err {err:.3e} > tol {old['tol']:g})")
+            continue
+        default_cfg = seed_config(spec, old["shape"])
+        if old["config"] == default_cfg:
+            continue                 # nothing tuned away from — no timing
+        measure = _interpret_measure(spec, args, interpret=True, reps=3)
+        # min-of-repeats on both sides: interpret-mode wall times jitter
+        # hard, and a noise spike must not fail CI
+        tuned_t = min(measure(old["config"]) for _ in range(3))
+        default_t = min(measure(default_cfg) for _ in range(3))
+        if tuned_t > factor * default_t:
+            failures.append(
+                f"{key}: committed config regressed on this host "
+                f"({tuned_t * 1e6:.0f}us vs default "
+                f"{default_t * 1e6:.0f}us, slack {factor:g}x)")
+    return failures
+
+
+def _report(rows: list[dict]) -> None:
+    for r in rows:
+        cfg = ",".join(f"{k}={v}" for k, v in sorted(r["config"].items()))
+        print(f"kernel.{r['kernel']},{r['us_per_call_interpret']:.0f},"
+              f"max_err={r['max_err']:.2e}_cfg={cfg}"
+              f"_speedup={r['speedup_vs_default']:.2f}x"
+              f"_roofline={r['roofline_fraction']:.4f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: re-tune the smoke shapes, fail on "
+                         "ref divergence or a stale committed cache")
+    ap.add_argument("--write", action="store_true",
+                    help=f"re-tune and update the committed {CACHE_PATH}")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.smoke:
+        entries = autotune_all(interpret=True, seed=args.seed)
+        _report(_rows(entries))
+        failures = check_regression(entries)
+        if failures:
+            for f in failures:
+                print(f"kernels.smoke.REGRESSION,{f}")
+            raise SystemExit(1)
+        print("kernels.smoke,0,ok")
+    elif args.write:
+        cache = TuningCache(CACHE_PATH)
+        entries = autotune_all(interpret=True, seed=args.seed, cache=cache)
+        cache.save()
+        print(f"kernels.write,0,entries={len(entries)}_path={CACHE_PATH}")
+    else:
+        print(json.dumps(run(args.seed), indent=1))
 
 
 if __name__ == "__main__":
-    import json
-    print(json.dumps(run(), indent=1))
+    main()

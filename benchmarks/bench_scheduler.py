@@ -64,6 +64,7 @@ from repro.core.provision.pricing import (CPU_PRICING, ChipScaledPricing,
                                           Pricing, ResourceDim,
                                           spot_pricing)
 from repro.core.provision.profiler import CommandTemplate, Profiler
+from repro.roofline.prior import HardwareSpec, RooflinePrior
 
 N_JOBS = 5000
 N_USERS = 8
@@ -86,6 +87,16 @@ TPU_BENCH_PRICING = ChipScaledPricing([
     ResourceDim("chips", 8, TPU_CHIPS, 0.10, (8, 16, 32, 64)),
     ResourceDim("hbm_gb", 2, 16, 0.005, (2, 4, 8, 16)),
 ], family="tpu")
+
+# -- cold-start feedback scenario ----------------------------------------
+FEEDBACK_JOBS = 2000
+FEEDBACK_RATE = 0.25        # arrivals/s: spread so early completions can
+                            # inform the ranking of later arrivals
+PRIOR_SPEED = 4.0           # the prior's believed TPU speedup (true: 6)
+PRIOR_STARTUP = 30.0        # the prior's believed startup tax (true: 60)
+WORK_UNIT_FLOPS = 1e9       # declared work-seconds -> modelled FLOPs
+FEEDBACK_MIN_SPEEDUP = 1.2  # hard gate vs declared-duration placement
+FEEDBACK_ORACLE_GAP = 1.25  # hard gate: within 25% of the oracle fit
 
 # -- elastic + spot scenario ---------------------------------------------
 ELASTIC_JOBS = 1500
@@ -419,15 +430,21 @@ def simulate(arrivals: list[tuple[float, JobSpec]], *,
              policy: str = "fair", backfill: bool = True,
              quota_k: int = 16, backfill_depth: int = 50,
              snapshot_interval: float = 3600.0,
-             user_waits: dict | None = None) -> dict:
+             user_waits: dict | None = None,
+             feedback_profiler: Profiler | None = None) -> dict:
     """Drive one scheduler configuration through an arrival process on
     the virtual clock; returns metrics incl. slowdown percentiles.
     Scheduler snapshots are coalesced to one per virtual hour by default
-    (pure observability — decisions are unaffected)."""
+    (pure observability — decisions are unaffected).
+    ``feedback_profiler`` closes the measurement loop: it subscribes to
+    the runner's FINISHED events, so every completion refits the per-pool
+    model the placement under test is scoring with."""
     registry = JobRegistry()
     bus = EventBus()
     runner = VirtualRunner(registry, bus, oracle=oracle, pricing=pricing)
     monitor = JobMonitor(bus)
+    if feedback_profiler is not None:
+        feedback_profiler.attach_feedback(bus, registry)
     sched = Scheduler(registry, runner, bus, quota_k=quota_k,
                       cluster=cluster, placement=placement,
                       policy=policy, backfill=backfill,
@@ -593,6 +610,124 @@ def run_hetero(n_jobs: int = HETERO_JOBS, seed: int = 0,
     assert placed["makespan_s"] < random_p["makespan_s"], "random faster"
     assert placed["total_cost"] < single["total_cost"], "no cost saving"
     assert placed["total_cost"] < random_p["total_cost"], "random cheaper"
+    return out
+
+
+# -- scenario 2b: cold-start prior + launcher feedback -------------------
+def _feedback_prior() -> RooflinePrior:
+    """Roofline prior for the 'work' template, deliberately
+    mis-calibrated: it believes 2/3 of the true TPU speedup
+    (``PRIOR_SPEED`` vs ``TPU_SPEED``) and half the true startup tax.
+    Declared work-seconds map to FLOPs at ``WORK_UNIT_FLOPS``; the CPU
+    family retires exactly that rate, a TPU slice scales with its chip
+    count. The point of the scenario is that even a wrong-by-constants
+    prior routes the fleet correctly on a cold cluster, and launcher
+    feedback then corrects the constants."""
+    cpu = HardwareSpec("cpu", peak_flops=WORK_UNIT_FLOPS, hbm_bw=1.0)
+    tpu = HardwareSpec(
+        "tpu", peak_flops=WORK_UNIT_FLOPS * PRIOR_SPEED / 8.0,
+        hbm_bw=1.0, startup_s=PRIOR_STARTUP,
+        scale_dim="chips", ref_chips=1.0)
+    return RooflinePrior({"cpu": cpu, "tpu": tpu}).register(
+        "work", flops=lambda cfg: cfg["work"] * WORK_UNIT_FLOPS)
+
+
+def run_feedback(n_jobs: int = FEEDBACK_JOBS, seed: int = 0,
+                 quota_k: int = 64) -> dict:
+    """Cold-cluster placement quality, four estimator configurations on
+    identical Poisson arrivals: ``declared`` (user-declared CPU-shape
+    durations — no profiler), ``prior_only`` (roofline prior, loop open),
+    ``prior_feedback`` (prior + online refit from every FINISHED event),
+    and ``oracle`` (offline fit from ground truth — the quality ceiling).
+    Hard gates: prior+feedback beats declared by
+    ``FEEDBACK_MIN_SPEEDUP`` on makespan and lands within
+    ``FEEDBACK_ORACLE_GAP`` of the oracle."""
+    fleet = make_hetero_fleet(seed, n_jobs)
+    arrivals = poisson_arrivals(fleet, FEEDBACK_RATE, seed)
+    catalog = {"cpu": CPU_PRICING, "tpu": TPU_BENCH_PRICING}
+
+    def pools():
+        return {"cpu": _cpu_pool(CPU_NODES), "tpu": _tpu_pool()}
+
+    def sim(placement, prof=None):
+        res = simulate(arrivals, pricing=catalog, oracle=hetero_oracle,
+                       quota_k=quota_k, placement=placement,
+                       feedback_profiler=prof)
+        res["prediction_sources"] = dict(placement.stats)
+        return res
+
+    # the declared baseline scores the runtime a user would declare —
+    # the job's CPU-shape work — for BOTH pools, so it never discovers
+    # the TPU frontier. Modeled as a constant predictor rather than
+    # ``spec.duration`` because the virtual runner treats a declared
+    # duration as ground truth (it would override the pool oracle).
+    declared = sim(Placement(
+        pools(), pricing=catalog, objective="cost",
+        predictor=lambda spec, pool, res: spec.args["work"]))
+
+    prior_pl = Placement(pools(), pricing=catalog, objective="cost")
+    prior_pl.use_profiler(Profiler(engine=None, prior=_feedback_prior()))
+    prior_only = sim(prior_pl)
+
+    fb_prof = Profiler(engine=None, prior=_feedback_prior(),
+                       recency_halflife=64)
+    fb_pl = Placement(pools(), pricing=catalog, objective="cost")
+    fb_pl.use_profiler(fb_prof)
+    feedback = sim(fb_pl, prof=fb_prof)
+
+    oracle_pl = Placement(pools(), pricing=catalog, objective="cost")
+    oracle_pl.use_profiler(fit_hetero_profiler())
+    oracle = sim(oracle_pl)
+
+    # feedback must also CORRECT the prior's mis-calibrated constants,
+    # not just preserve its routing: the refit per-pool TPU model's
+    # estimate for a reference training job lands near the ground truth
+    # the prior missed by ~37%
+    ref_cfg = {"work": 2400.0, "chips": 8.0, "hbm_gb": 4.0}
+    ref_truth = TPU_STARTUP + 2400.0 * 8.0 / (TPU_SPEED * 8.0)
+    prior_pred = _feedback_prior().estimate("work", "tpu", ref_cfg)
+    learned_pred = fb_prof.models["work@tpu"].predict(ref_cfg, clamp=True)
+    learned_err = abs(learned_pred - ref_truth) / ref_truth
+    prior_err = abs(prior_pred - ref_truth) / ref_truth
+
+    out = {
+        "fleet": {"n_jobs": n_jobs, "arrival_rate": FEEDBACK_RATE,
+                  "cpu_nodes": CPU_NODES, "tpu_chips": TPU_CHIPS,
+                  "prior_speed": PRIOR_SPEED,
+                  "prior_startup_s": PRIOR_STARTUP},
+        "declared": declared,
+        "prior_only": prior_only,
+        "prior_feedback": feedback,
+        "oracle": oracle,
+        "speedup_vs_declared":
+            declared["makespan_s"] / feedback["makespan_s"],
+        "oracle_gap": feedback["makespan_s"] / oracle["makespan_s"],
+        "ref_train": {"true_runtime_s": ref_truth,
+                      "prior_pred_s": prior_pred,
+                      "learned_pred_s": learned_pred,
+                      "prior_rel_err": prior_err,
+                      "learned_rel_err": learned_err},
+    }
+    for name in ("declared", "prior_only", "prior_feedback", "oracle"):
+        assert not out[name]["oversubscribed"], \
+            f"feedback.{name} oversubscribed"
+    assert out["speedup_vs_declared"] >= FEEDBACK_MIN_SPEEDUP, (
+        f"cold-start prior+feedback only "
+        f"{out['speedup_vs_declared']:.2f}x over declared durations "
+        f"(gate: {FEEDBACK_MIN_SPEEDUP}x)")
+    assert out["oracle_gap"] <= FEEDBACK_ORACLE_GAP, (
+        f"prior+feedback makespan {out['oracle_gap']:.3f}x the oracle's "
+        f"(gate: {FEEDBACK_ORACLE_GAP}x — not converging)")
+    # the loop must not score a single silent 1.0s default: every rank
+    # came from the prior or from a model refit off measured runtimes
+    srcs = feedback["prediction_sources"]
+    assert srcs.get("default", 0) == 0, f"silent defaults: {srcs}"
+    assert srcs.get("prior", 0) > 0, f"prior never consulted: {srcs}"
+    assert srcs.get("predictor", 0) > 0, f"feedback never served: {srcs}"
+    assert learned_err < 0.15 and learned_err < prior_err, (
+        f"feedback did not correct the prior: learned "
+        f"{learned_pred:.0f}s vs true {ref_truth:.0f}s "
+        f"(prior {prior_pred:.0f}s)")
     return out
 
 
@@ -1215,7 +1350,8 @@ def run(n_jobs: int = N_JOBS, seed: int = 0,
         scale_jobs: int = SCALE_JOBS, policy_repeats: int = 3,
         elastic_jobs: int = ELASTIC_JOBS, gang_jobs: int = GANG_JOBS,
         herd_jobs: int = HERD_JOBS,
-        recovery_jobs: int = RECOVERY_JOBS) -> dict:
+        recovery_jobs: int = RECOVERY_JOBS,
+        feedback_jobs: int = FEEDBACK_JOBS) -> dict:
     arrivals = trace_arrivals(trace) if trace else \
         poisson_arrivals(make_fleet(seed, n_jobs), ARRIVAL_RATE, seed)
     fifo = run_policy(arrivals, "fifo", backfill=False,
@@ -1233,6 +1369,8 @@ def run(n_jobs: int = N_JOBS, seed: int = 0,
             1.0 - fair["mean_queue_wait_s"] / fifo["mean_queue_wait_s"],
         "hetero": run_hetero(hetero_jobs, seed),
     }
+    if feedback_jobs:
+        out["feedback"] = run_feedback(feedback_jobs, seed)
     if gang_jobs:
         out["gang"] = run_gang(gang_jobs, seed)
     if herd_jobs:
@@ -1277,6 +1415,24 @@ def report(res: dict, write: bool = True) -> None:
     print(f"scheduler.throughput,0,"
           f"fifo={res['fifo']['sched_events_per_s']:.0f}/s"
           f"_fair={res['fair_backfill']['sched_events_per_s']:.0f}/s")
+    if "feedback" in res:
+        fb = res["feedback"]
+        for name in ("declared", "prior_only", "prior_feedback", "oracle"):
+            r = fb[name]
+            pools = ",".join(f"{p}:{c}" for p, c in
+                             sorted(r["placed_by_pool"].items()))
+            srcs = ",".join(f"{k}:{v}" for k, v in
+                            sorted(r["prediction_sources"].items()) if v)
+            print(f"scheduler.feedback.{name},{r['wall_s'] * 1e6:.0f},"
+                  f"makespan={r['makespan_s']:.0f}s"
+                  f"_pools={pools or '-'}_sources={srcs or '-'}")
+        rt = fb["ref_train"]
+        print(f"scheduler.feedback.convergence,0,"
+              f"speedup_vs_declared={fb['speedup_vs_declared']:.2f}x"
+              f"_oracle_gap={fb['oracle_gap']:.3f}x"
+              f"_ref_pred={rt['learned_pred_s']:.0f}s"
+              f"_prior={rt['prior_pred_s']:.0f}s"
+              f"_true={rt['true_runtime_s']:.0f}s")
     if "gang" in res:
         g = res["gang"]
         for name in ("gang_aware", "gang_oblivious"):
@@ -1382,7 +1538,8 @@ def main() -> None:
         res = run(n_jobs=args.n_jobs or 400, hetero_jobs=400,
                   trace=args.trace, scale_jobs=args.scale or 0,
                   policy_repeats=5, elastic_jobs=300,
-                  gang_jobs=150, herd_jobs=1500, recovery_jobs=800)
+                  gang_jobs=150, herd_jobs=1500, recovery_jobs=800,
+                  feedback_jobs=400)
         report(res, write=False)
         failures = check_throughput_regression(res, "BENCH_scheduler.json")
         if failures:

@@ -194,11 +194,18 @@ class AcaiEngine:
     def pools(self) -> dict[str, Cluster]:
         return self.scheduler.pools
 
-    def use_profiler(self, profiler) -> None:
+    def use_profiler(self, profiler, *, feedback: bool = False) -> None:
         """Feed a profiler's runtime predictions into pool placement
-        (no-op without a placement layer)."""
+        (no-op without a placement layer). ``feedback=True`` also closes
+        the loop: every FINISHED job's measured runtime is folded back
+        into the profiler's per-pool model (``"<tmpl>@<pool>"``) via
+        ``add_observation``, so cold-start priors and mispredictions
+        self-correct online. Off by default — scheduling decisions are
+        bit-identical to a feedback-less engine until opted in."""
         if self.scheduler.placement is not None:
             self.scheduler.placement.use_profiler(profiler)
+        if feedback:
+            profiler.attach_feedback(self.bus, self.registry)
 
     def submit(self, spec: JobSpec, *, pipeline: str = "") -> JobHandle:
         """Submit a job; returns a JobHandle future. Declared dependencies

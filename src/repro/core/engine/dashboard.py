@@ -87,6 +87,14 @@ def scheduler_page(scheduler, monitor=None) -> str:
         else:
             lines.append("(no cluster attached — capacity-unconstrained)")
 
+        placement = getattr(scheduler, "placement", None)
+        pstats = getattr(placement, "stats", None)
+        if pstats and any(pstats.values()):
+            # where scored runtimes came from — a high "default" count
+            # means placement is ranking on silent 1.0s guesses
+            lines.append("prediction sources: " + " ".join(
+                f"{k}={pstats[k]}" for k in sorted(pstats)))
+
         lines.append("")
         lines.append("| queue (project, user) | depth | active | waits | "
                      "mean_wait_s |")

@@ -140,6 +140,14 @@ class Placement:
         # lose more to a reclaim (up to a checkpoint interval each, plus
         # the requeue), so the discount has to *earn* the risk
         self.spot_risk_weight = spot_risk_weight
+        # where each scored runtime came from, per _score_one call:
+        # "predictor" (fitted model / custom predictor), "prior"
+        # (roofline cold-start estimate), "declared" (spec.duration),
+        # "default" (the silent 1.0s fallback — the number this counter
+        # exists to make visible). Dashboard renders these.
+        self.stats: dict[str, int] = {"predictor": 0, "prior": 0,
+                                      "declared": 0, "default": 0}
+        self._pred_source = "predictor"
 
     # -- eligibility -----------------------------------------------------
     def resources_for(self, spec, pool: str) -> Optional[dict[str, float]]:
@@ -205,18 +213,26 @@ class Placement:
                    if isinstance(v, (int, float))}
             cfg.update(resources or {})
             try:
-                return profiler.predict_for_pool(spec.template, pool, cfg)
+                val = profiler.predict_for_pool(spec.template, pool, cfg)
             except Exception:              # noqa: BLE001 — stay eligible
                 return None
+            if getattr(profiler, "last_source", None) == "prior":
+                self._pred_source = "prior"
+            return val
         self.predictor = predict
 
     def _score_one(self, spec, opt: PoolOption,
                    parent_pools: set[str]) -> None:
         runtime = None
         if self.predictor is not None:
+            self._pred_source = "predictor"
             runtime = self.predictor(spec, opt.pool, opt.resources)
         if runtime is None:
+            source = "declared" if spec.duration is not None else "default"
             runtime = spec.duration if spec.duration is not None else 1.0
+        else:
+            source = self._pred_source
+        self.stats[source] = self.stats.get(source, 0) + 1
         pricing = self.pricing.get(opt.pool)
         if pricing is not None:
             cost = pricing.job_cost(opt.resources, runtime) * opt.pods

@@ -12,7 +12,9 @@ h // group) — grouped KV is never materialized.
 Layout: q (B, H, S, D), k/v (B, KV, S, D). Block sizes default to 128 to
 align with the MXU 128x128 systolic array; D is expected to be a multiple
 of 128 on TPU (it is for all assigned archs except head_dim 64/80/112 ones,
-which pad — see ops.py).
+which pad — see ops.py). A sequence length that does not divide the block
+sizes is padded to the block grid with the final KV block masked (padded
+query rows trimmed), so autotuner candidate shapes never crash.
 """
 from __future__ import annotations
 
@@ -28,7 +30,7 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                   block_q: int, block_k: int, causal: bool, sm_scale: float,
-                  n_kv_blocks: int):
+                  n_kv_blocks: int, kv_len: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -59,6 +61,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             k_pos = k_start + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_k), 1)
             s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        elif n_kv_blocks * block_k != kv_len:
+            # ragged final block (seq padded to the block grid): padded
+            # key positions must not contribute. Causal needs no mask —
+            # padded keys sit strictly after every valid query row, and
+            # padded query rows are trimmed by the caller.
+            k_pos = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(k_pos < kv_len, s, NEG_INF)
         m_prev = m_scr[:, 0]                               # (bq,)
         m_cur = jnp.maximum(m_prev, s.max(axis=1))
         corr = jnp.exp(m_prev - m_cur)
@@ -88,16 +98,26 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True,
     group = h // kv
     block_q = min(block_q, s)
     block_k = min(block_k, s)
-    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
-    nq, nk = s // block_q, s // block_k
+    # ragged sequence: pad q/k/v to the block grid (nearest multiple of
+    # lcm(block_q, block_k)) and mask the final KV block in-kernel;
+    # padded query rows are trimmed from the output below
+    s_pad = s
+    if s % block_q or s % block_k:
+        step = math.lcm(block_q, block_k)
+        s_pad = ((s + step - 1) // step) * step
+        padw = ((0, 0), (0, 0), (0, s_pad - s), (0, 0))
+        q = jnp.pad(q, padw)
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+    nq, nk = s_pad // block_q, s_pad // block_k
     if sm_scale is None:
         sm_scale = 1.0 / math.sqrt(d)
 
     grid = (b, h, nq, nk)
     kernel = functools.partial(
         _flash_kernel, block_q=block_q, block_k=block_k, causal=causal,
-        sm_scale=sm_scale, n_kv_blocks=nk)
-    return pl.pallas_call(
+        sm_scale=sm_scale, n_kv_blocks=nk, kv_len=s)
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -110,7 +130,7 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True,
         ],
         out_specs=pl.BlockSpec((1, 1, block_q, d),
                                lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, h, s_pad, d), q.dtype),
         scratch_shapes=[
             _scratch((block_q, 128)),     # running max  (col 0 used)
             _scratch((block_q, 128)),     # running sum  (col 0 used)
@@ -118,6 +138,7 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True,
         ],
         interpret=interpret,
     )(q, k, v)
+    return out[:, :, :s, :] if s_pad != s else out
 
 
 def _scratch(shape):

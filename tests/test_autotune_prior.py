@@ -1,0 +1,322 @@
+"""The profiler feedback loop: kernel autotuner (cache round-trip,
+deterministic hillclimb), roofline cold-start priors, fitted-vs-prior
+precedence with hull gating, online refit through the event bus, and the
+placement fallback counters the dashboard surfaces."""
+import math
+
+import pytest
+
+from repro.core.engine.cluster import Cluster
+from repro.core.engine.dashboard import scheduler_page
+from repro.core.engine.events import EventBus
+from repro.core.engine.launcher import VirtualRunner
+from repro.core.engine.placement import Placement
+from repro.core.engine.registry import JobRegistry, JobSpec
+from repro.core.engine.scheduler import Scheduler
+from repro.core.provision.autotune import (KERNELS, TuningCache, cache_key,
+                                           hillclimb, seed_config)
+from repro.core.provision.profiler import (CommandTemplate, LogLinearModel,
+                                           Profiler)
+from repro.roofline.prior import (HardwareSpec, RooflinePrior, TemplateCost,
+                                  roofline_ceiling_s)
+
+
+# -- synthetic tuning costs (no accelerator, no timing) -------------------
+def _flash_cost(cfg):
+    """Convex synthetic landscape with a unique optimum at (64, 256)."""
+    return (1.0 + abs(math.log2(cfg["block_q"]) - 6)
+            + 0.5 * abs(math.log2(cfg["block_k"]) - 8)) * 1e-3
+
+
+def test_hillclimb_finds_synthetic_optimum_deterministically():
+    spec = KERNELS["flash_attention"]
+    shape = {"b": 1, "s": 256, "h": 2, "kv": 2, "d": 64}
+    runs = []
+    for _ in range(3):
+        calls = []
+
+        def measure(cfg, calls=calls):
+            calls.append(dict(cfg))
+            return _flash_cost(cfg)
+        best, best_t, n = hillclimb(spec, shape, measure)
+        runs.append((best, best_t, n, calls))
+    first = runs[0]
+    assert first[0] == {"block_q": 64, "block_k": 256}
+    assert first[1] == pytest.approx(_flash_cost(first[0]))
+    for other in runs[1:]:          # identical walk, not just identical end
+        assert other[:3] == first[:3]
+        assert other[3] == first[3]
+
+
+def test_hillclimb_memoizes_and_respects_hysteresis():
+    spec = KERNELS["mamba2_ssd"]
+    shape = {"b": 1, "s": 256, "h": 2, "p": 32, "n": 16}
+    calls = []
+
+    def flat(cfg):                  # neighbors within 3% never displace
+        calls.append(dict(cfg))
+        return 1.0 + 0.01 * math.log2(cfg["chunk"])
+    best, _, n = hillclimb(spec, shape, flat)
+    assert best == seed_config(spec, shape)
+    assert len(calls) == len({tuple(c.items()) for c in calls})  # memoized
+    assert n == len(calls)
+
+
+def test_seed_config_steps_down_for_ragged_sequence():
+    # 192 is not divisible by the MXU-default 128: pad-less kernels must
+    # seed at the largest legal rung instead of crashing
+    assert seed_config(KERNELS["mamba2_ssd"],
+                       {"b": 1, "s": 192, "h": 2, "p": 32, "n": 16}) == \
+        {"chunk": 64}
+    # flash pads internally, so its default survives ragged shapes
+    assert seed_config(KERNELS["flash_attention"],
+                       {"b": 1, "s": 192, "h": 2, "kv": 2, "d": 80}) == \
+        {"block_q": 128, "block_k": 128}
+
+
+def test_tuning_cache_roundtrip(tmp_path):
+    path = str(tmp_path / "tune.json")
+    cache = TuningCache()
+    entry = {"kernel": "flash_attention",
+             "shape": {"b": 1, "s": 256, "h": 2, "kv": 2, "d": 64},
+             "family": "interpret",
+             "config": {"block_q": 64, "block_k": 256},
+             "us": 12.5, "max_err": 1e-6, "tol": 2e-2}
+    cache.put(entry)
+    cache.save(path)
+    loaded = TuningCache(path)
+    assert loaded.get(entry["kernel"], entry["shape"],
+                      "interpret") == entry
+    assert loaded.best_config(entry["kernel"], entry["shape"],
+                              "interpret") == entry["config"]
+    # a miss serves the caller's default untouched
+    assert loaded.best_config("flash_attention", {"b": 9, "s": 128,
+                                                  "h": 1, "kv": 1, "d": 64},
+                              "interpret",
+                              default={"block_q": 128}) == {"block_q": 128}
+    assert cache_key(entry["kernel"], entry["shape"], "interpret") in \
+        loaded.entries
+
+
+# -- log-linear guard rails ----------------------------------------------
+def test_loglinear_predict_before_fit_raises():
+    m = LogLinearModel(["work"])
+    with pytest.raises(RuntimeError, match="predict before fit"):
+        m.predict({"work": 10.0})
+    with pytest.raises(RuntimeError, match="predict before fit"):
+        m.predict_many([{"work": 10.0}])
+
+
+def test_loglinear_clamp_bounds_extrapolation():
+    m = LogLinearModel(["work"])
+    m.fit([{"work": w} for w in (10.0, 20.0, 40.0)], [10.0, 20.0, 40.0])
+    raw = m.predict({"work": 1e6})            # exact power law: y = work
+    assert raw == pytest.approx(1e6, rel=1e-6)
+    clamped = m.predict({"work": 1e6}, clamp=True)
+    assert clamped <= 40.0 * LogLinearModel.EXTRAPOLATION_SLACK
+    assert m.predict({"work": 20.0}, clamp=True) == pytest.approx(20.0,
+                                                                  rel=1e-6)
+
+
+def test_loglinear_in_hull():
+    m = LogLinearModel(["work"])
+    assert not m.in_hull({"work": 10.0})      # unfit: no support
+    m.fit([{"work": 10.0}], [10.0])
+    assert not m.in_hull({"work": 10.0})      # one point is not support
+    m.fit([{"work": w} for w in (10.0, 40.0)], [10.0, 40.0])
+    assert m.in_hull({"work": 20.0})
+    assert m.in_hull({"work": 79.0})          # within the 2x slack
+    assert not m.in_hull({"work": 1000.0})
+    assert not m.in_hull({"work": 0.1})
+
+
+# -- roofline prior --------------------------------------------------------
+def _prior():
+    cpu = HardwareSpec("cpu", peak_flops=1e9, hbm_bw=1.0)
+    tpu = HardwareSpec("tpu", peak_flops=1e9, hbm_bw=1.0, startup_s=30.0,
+                       scale_dim="chips", ref_chips=1.0)
+    return RooflinePrior({"cpu": cpu, "tpu": tpu}).register(
+        "work", flops=lambda cfg: cfg["work"] * 1e9)
+
+
+def test_roofline_prior_estimates():
+    prior = _prior()
+    assert prior.can_estimate("work", "cpu")
+    assert not prior.can_estimate("work", "gpu")
+    assert not prior.can_estimate("train", "cpu")
+    assert prior.estimate("work", "cpu", {"work": 120.0}) == \
+        pytest.approx(120.0)
+    # 8 chips split the same FLOPs, plus the startup tax
+    assert prior.estimate("work", "tpu", {"work": 120.0, "chips": 8.0}) == \
+        pytest.approx(30.0 + 15.0)
+    with pytest.raises(KeyError):
+        prior.estimate("train", "cpu", {})
+
+
+def test_roofline_ceiling_takes_binding_term():
+    hw = HardwareSpec("x", peak_flops=100.0, hbm_bw=10.0, ici_bw=1.0)
+    assert roofline_ceiling_s(1000.0, 1.0, hw) == pytest.approx(10.0)
+    assert roofline_ceiling_s(1.0, 1000.0, hw) == pytest.approx(100.0)
+    assert roofline_ceiling_s(1.0, 1.0, hw, coll_bytes=500.0) == \
+        pytest.approx(500.0)
+    assert roofline_ceiling_s(1000.0, 1.0, hw, n_chips=10.0) == \
+        pytest.approx(1.0)
+
+
+def test_template_cost_constants_and_callables():
+    tc = TemplateCost(flops=7.0, nbytes=lambda c: c["n"] * 2.0)
+    assert tc.evaluate({"n": 3.0}) == (7.0, 6.0, 0.0)
+
+
+# -- precedence: fitted model vs prior ------------------------------------
+def test_prior_serves_cold_then_fitted_takes_over():
+    prof = Profiler(engine=None, prior=_prior())
+    cfg = {"work": 100.0, "vcpu": 1.0}
+    assert prof.resolve_source("work", "cpu", cfg) == "prior"
+    assert prof.predict_for_pool("work", "cpu", cfg) == pytest.approx(100.0)
+    assert prof.last_source == "prior"
+
+    tmpl = CommandTemplate("work@cpu", {"work": [50.0, 100.0, 200.0]},
+                           {"vcpu": [1.0, 2.0]})
+    grid = tmpl.grid()
+    prof.fit_offline(tmpl, grid, [2.0 * c["work"] for c in grid])
+    assert prof.resolve_source("work", "cpu", cfg) == "pool-model"
+    assert prof.predict_for_pool("work", "cpu", cfg) == \
+        pytest.approx(200.0, rel=1e-6)
+    assert prof.last_source == "pool-model"
+    # an unknown template with no prior coverage still raises
+    with pytest.raises(KeyError):
+        prof.predict_for_pool("train", "cpu", cfg)
+
+
+def test_out_of_hull_model_defers_to_prior():
+    prof = Profiler(engine=None, prior=_prior())
+    tmpl = CommandTemplate("work@cpu", {"work": [5.0, 30.0, 60.0]},
+                           {"vcpu": [1.0, 2.0]})
+    grid = tmpl.grid()
+    prof.fit_offline(tmpl, grid, [c["work"] for c in grid])
+    # in-hull: the measurement wins
+    near = {"work": 30.0, "vcpu": 1.0}
+    assert prof.resolve_source("work", "cpu", near) == "pool-model"
+    # far outside the explored grid (an hour-long job scored by a model
+    # fit on sub-minute profiling runs): the roofline prior wins
+    far = {"work": 3600.0, "vcpu": 1.0}
+    assert prof.resolve_source("work", "cpu", far) == "prior"
+    assert prof.predict_for_pool("work", "cpu", far) == \
+        pytest.approx(3600.0)
+    # without a prior the (clamped) model still serves — better than 1.0s
+    prof.prior = None
+    assert prof.resolve_source("work", "cpu", far) == "pool-model"
+    assert prof.predict_for_pool("work", "cpu", far) <= \
+        60.0 * LogLinearModel.EXTRAPOLATION_SLACK
+
+
+# -- online feedback -------------------------------------------------------
+def test_add_observation_bootstraps_and_refits_rank():
+    pools = {"cpu": Cluster({"vcpu": 8.0}, {"vcpu": 0.5}, name="cpu"),
+             "tpu": Cluster({"chips": 16.0}, {"chips": 8.0}, name="tpu")}
+    placement = Placement(pools, objective="runtime")
+    prof = Profiler(engine=None, recency_halflife=2.0)
+    placement.use_profiler(prof)
+    spec = JobSpec(name="j", project="p", user="u", template="work",
+                   args={"work": 100.0},
+                   pool_resources={"cpu": {"vcpu": 1.0},
+                                   "tpu": {"chips": 8.0}})
+
+    # bootstrap per-pool models purely from observations (cold start)
+    for w, t in ((50.0, 50.0), (100.0, 100.0), (200.0, 200.0)):
+        prof.add_observation("work@cpu", {"work": w, "vcpu": 1.0}, t)
+        prof.add_observation("work@tpu", {"work": w, "chips": 8.0}, t / 10)
+    opts = placement.eligible(spec)
+    assert placement.rank(spec, opts) == ["tpu", "cpu"]
+
+    # the pool drifts 100x slower; recency-weighted refits must flip the
+    # ranking instead of averaging the stale history forever
+    for w, t in ((50.0, 500.0), (100.0, 1000.0), (200.0, 2000.0),
+                 (100.0, 1000.0), (50.0, 500.0), (200.0, 2000.0)):
+        prof.add_observation("work@tpu", {"work": w, "chips": 8.0}, t)
+    opts = placement.eligible(spec)
+    assert placement.rank(spec, opts) == ["cpu", "tpu"]
+
+
+def test_attach_feedback_observes_finished_jobs():
+    registry = JobRegistry()
+    bus = EventBus()
+    runner = VirtualRunner(registry, bus,
+                           oracle=lambda job: job.spec.args["work"])
+    sched = Scheduler(registry, runner, bus, quota_k=4,
+                      placement=Placement(
+                          {"cpu": Cluster({"vcpu": 8.0}, {"vcpu": 0.5},
+                                          name="cpu")}))
+    prof = Profiler(engine=None)
+    prof.attach_feedback(bus, registry)
+    for w in (10.0, 20.0, 40.0):
+        job = registry.submit(JobSpec(
+            name=f"j{w}", project="p", user="u", template="work",
+            args={"work": w}, resources={"vcpu": 1.0}))
+        sched.submit(job)
+    sched.run_to_completion()
+    assert prof.has_model("work@cpu")
+    configs, runtimes = prof.training_sets["work@cpu"]
+    assert len(configs) == 3 and sorted(runtimes) == [10.0, 20.0, 40.0]
+    # the learned pool model now serves placement's predictions
+    assert prof.predict_for_pool("work", "cpu",
+                                 {"work": 20.0, "vcpu": 1.0}) == \
+        pytest.approx(20.0, rel=1e-6)
+
+
+def test_observe_skips_jobs_without_template_or_runtime():
+    prof = Profiler(engine=None)
+
+    class FakeJob:
+        spec = JobSpec(name="j", project="p", user="u", duration=1.0)
+        pool = "cpu"
+        runtime = 5.0
+    assert not prof.observe(FakeJob())        # no template
+    assert prof.training_sets == {}
+
+
+# -- placement fallback counters ------------------------------------------
+def _two_pool_placement(**kw):
+    return Placement(
+        {"cpu": Cluster({"vcpu": 8.0}, {"vcpu": 0.5}, name="cpu"),
+         "tpu": Cluster({"chips": 16.0}, {"chips": 8.0}, name="tpu")},
+        **kw)
+
+
+def _flex_spec(duration=None, template=None):
+    return JobSpec(name="j", project="p", user="u", duration=duration,
+                   template=template, args={"work": 10.0},
+                   pool_resources={"cpu": {"vcpu": 1.0},
+                                   "tpu": {"chips": 8.0}})
+
+
+def test_placement_stats_count_prediction_sources():
+    placement = _two_pool_placement()
+    spec = _flex_spec(duration=7.0)
+    placement.rank(spec, placement.eligible(spec))
+    assert placement.stats["declared"] == 2   # one per scored pool
+    spec = _flex_spec()                       # no duration, no predictor
+    placement.rank(spec, placement.eligible(spec))
+    assert placement.stats["default"] == 2
+
+    placement = _two_pool_placement()
+    placement.use_profiler(Profiler(engine=None, prior=_prior()))
+    spec = _flex_spec(template="work")
+    placement.rank(spec, placement.eligible(spec))
+    assert placement.stats["prior"] == 2
+    assert placement.stats["predictor"] == 0
+
+
+def test_dashboard_renders_prediction_sources():
+    registry = JobRegistry()
+    bus = EventBus()
+    runner = VirtualRunner(registry, bus)
+    placement = _two_pool_placement()
+    sched = Scheduler(registry, runner, bus, quota_k=4, placement=placement)
+    job = registry.submit(_flex_spec(duration=3.0))
+    sched.submit(job)
+    sched.run_to_completion()
+    page = scheduler_page(sched)
+    assert "prediction sources:" in page
+    assert "declared=2" in page

@@ -48,6 +48,25 @@ def test_flash_attention_noncausal():
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("b,s,h,kv,d", [
+    (1, 192, 2, 2, 80),       # s and d both off the 128 grid
+    (2, 320, 4, 2, 96),       # multi-batch ragged
+    (1, 100, 2, 1, 64),       # s smaller than one block
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_ragged_shapes(b, s, h, kv, d, causal):
+    """Sequence lengths / head dims that don't divide the block grid:
+    the kernel pads internally and must mask the tail correctly."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    out = ops.flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
 @pytest.mark.parametrize("blocks", [(64, 64), (128, 64), (64, 128)])
 def test_flash_attention_block_shapes(blocks):
     bq, bk = blocks
@@ -198,3 +217,33 @@ def test_decode_attention_matches_ref(b, s, h, kv, d, dtype):
         jnp.swapaxes(kc, 1, 2), jnp.swapaxes(vc, 1, 2), cache_len)
     np.testing.assert_allclose(np.asarray(out[:, 0], np.float32),
                                np.asarray(want, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# autotuned configs stay numerically equivalent
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kernel", ["flash_attention", "decode_attention",
+                                    "mamba2_ssd", "rwkv6"])
+def test_tuned_configs_match_default_and_ref(kernel):
+    """Every legal block config is a pure scheduling choice: sweeping the
+    tuning ladders (what the autotuner explores) must reproduce both the
+    untuned default's output and the reference oracle."""
+    from repro.core.provision.autotune import (KERNELS, SMOKE_SHAPES, legal,
+                                               max_abs_err, seed_config)
+    spec = KERNELS[kernel]
+    shape = SMOKE_SHAPES[kernel][0]
+    args, ref_out = spec.build(shape, 0)
+    default = seed_config(spec, shape)
+    assert max_abs_err(spec, args, ref_out, default,
+                       interpret=True) <= spec.tol
+    param, ladder = next(iter(spec.ladders.items()))
+    swept = 0
+    for v in ladder:
+        cfg = dict(default, **{param: v})
+        if cfg == default or not legal(spec, shape, cfg):
+            continue
+        assert max_abs_err(spec, args, ref_out, cfg,
+                           interpret=True) <= spec.tol, \
+            f"{kernel} config {cfg} diverges from ref"
+        swept += 1
+    assert swept >= 1                 # the ladder must offer real choices
