@@ -26,6 +26,16 @@ dimension of any pool. Emits ``BENCH_scheduler.json`` so future PRs have
 a perf trajectory. ``--smoke`` runs tiny fleets (CI regression gate)
 without touching the JSON.
 
+The **chaos** scenario is the fault-tolerance layer's exit criterion as
+a benchmark: one fleet, one seeded :class:`FaultPlan` (node kills,
+transient job failures, stragglers on the virtual clock), run twice —
+retry budgets + crash-loop quarantine ON vs OFF. Hard gates: goodput
+(finished declared work per makespan second) with the layer on is >=
+1.3x the no-retry run's, every job terminates, no job exceeds its retry
+budget, every crash-looping job quarantines before burning its full
+budget, and a run with an attached-but-inert injector is bit-identical
+to one with no injector at all (the golden-trace guarantee).
+
 The **recovery** scenario is the durable-control-plane exit criterion as
 a benchmark: a subprocess drives the crash drill's seeded fleet, the
 bench SIGKILLs it mid-run (polling the drill's heartbeat file for the
@@ -53,11 +63,13 @@ import numpy as np
 
 from repro.core.engine.cluster import Cluster
 from repro.core.engine.events import EventBus
+from repro.core.engine.faults import FaultInjector, FaultPlan
 from repro.core.engine.launcher import VirtualRunner
 from repro.core.engine.lifecycle import TERMINAL_STATES, JobState
 from repro.core.engine.monitor import JobMonitor
 from repro.core.engine.placement import Placement, TransferCostModel
-from repro.core.engine.registry import GangSpec, JobRegistry, JobSpec
+from repro.core.engine.registry import (GangSpec, JobRegistry, JobSpec,
+                                        RetryPolicy)
 from repro.core.engine.scheduler import Scheduler
 from repro.core.provision.elastic import ElasticController, PoolPolicy
 from repro.core.provision.pricing import (CPU_PRICING, ChipScaledPricing,
@@ -154,6 +166,25 @@ RECOVERY_SEED = 7
 HERD_JOBS = 10_000          # the fanning user's burst, all at t=0
 HERD_OTHERS = 63            # background users sharing the cluster
 HERD_P95_BOUND = 300.0      # fair-share gate on the others' p95 wait
+
+# -- chaos scenario (fault-tolerance layer under seeded faults) -----------
+CHAOS_JOBS = 600
+CHAOS_SEED = 13
+CHAOS_RATE = 0.04           # arrivals/s on a 32-vCPU cluster: ~50% load,
+                            # so the retry run's extra incarnations fit
+                            # without the backlog dominating makespan
+CHAOS_NODES = 4
+CHAOS_NODE_SHAPE = {"vcpu": 8.0, "mem_mb": 8192.0}
+CHAOS_DOOMED = 5            # crash-looping jobs (quarantine exercise)
+CHAOS_MAX_RETRIES = 3
+CHAOS_QUARANTINE_K = 3      # consecutive fatal failures -> QUARANTINED
+CHAOS_GOODPUT_GATE = 1.3    # hard gate: retry goodput vs no-retry
+# the seeded fault schedule both configurations suffer identically:
+# transient MTBF is set aggressive enough that the no-retry run loses
+# ~1/3 of its work — the layer under test has something real to recover
+CHAOS_PLAN = dict(node_mtbf_s=3000.0, transient_mtbf_s=60.0,
+                  straggler_mtbf_s=400.0, straggler_factor=4.0,
+                  start=60.0, max_node_failures=2)
 
 
 class AuditingCluster(Cluster):
@@ -1322,6 +1353,232 @@ def run_recovery(n_jobs: int = RECOVERY_JOBS, seed: int = RECOVERY_SEED,
     return res
 
 
+# -- chaos scenario: the fault-tolerance layer, measured ------------------
+def make_chaos_params(seed: int, n_jobs: int) -> list[dict]:
+    """One seeded draw of job parameters, shared by every chaos
+    configuration — the A/B difference must be the retry policy, never
+    the fleet."""
+    rng = np.random.default_rng(seed + 77)
+    params = []
+    for i in range(n_jobs):
+        vcpu = float(rng.choice([1.0, 2.0, 4.0]))
+        params.append({
+            "name": f"work-{i}", "user": f"u{int(rng.integers(4))}",
+            "duration": float(rng.uniform(30.0, 300.0)), "vcpu": vcpu,
+            # 1 in 10 carries a generous deadline: enforcement runs, but
+            # only a badly-starved job actually gets killed by it
+            "deadline": bool(rng.random() < 0.1)})
+    for i in range(CHAOS_DOOMED):
+        params.append({"name": f"doomed-{i}", "user": "crashloop",
+                       "duration": 60.0, "vcpu": 1.0, "deadline": False})
+    rng.shuffle(params)
+    return params
+
+
+def make_chaos_fleet(params: list[dict], *, retry: bool,
+                     features: bool = True) -> list[JobSpec]:
+    """``retry`` toggles the policy under test; ``features=False`` strips
+    every fault-tolerance knob (the golden-trace configuration)."""
+    specs = []
+    for p in params:
+        kw = {}
+        if features:
+            kw["timeout_s"] = 2.5 * p["duration"]
+            if p["deadline"]:
+                kw["deadline"] = 6.0 * p["duration"] + 1800.0
+        if retry:
+            kw["retry"] = RetryPolicy(
+                max_retries=CHAOS_MAX_RETRIES, backoff_base=5.0,
+                backoff_cap=60.0,
+                retry_on="any" if p["name"].startswith("doomed")
+                else "transient")
+        specs.append(JobSpec(
+            name=p["name"], project="bench", user=p["user"],
+            duration=p["duration"],
+            resources={"vcpu": p["vcpu"], "mem_mb": 512.0 * p["vcpu"]},
+            **kw))
+    return specs
+
+
+def simulate_chaos(arrivals, *, plan: FaultPlan | None,
+                   quota_k: int = 64) -> dict:
+    """Drive one fleet through the fault-tolerance event loop: advance
+    the virtual clock to ``min(next completion, next scheduler timer,
+    next injected fault)``, apply, tick. Doomed jobs crash fatally at
+    every launch (the harness's crash loop); everything else fails only
+    when the injector says so."""
+    registry = JobRegistry()
+    bus = EventBus()
+    runner = VirtualRunner(registry, bus, pricing=CPU_PRICING)
+    cluster = AuditingCluster(
+        {n: v * CHAOS_NODES for n, v in CHAOS_NODE_SHAPE.items()},
+        {"vcpu": 1.0, "mem_mb": 512.0}, name="chaos",
+        node_shape=dict(CHAOS_NODE_SHAPE))
+    sched = Scheduler(registry, runner, bus, quota_k=quota_k,
+                      cluster=cluster, policy="fair", backfill=True,
+                      quarantine_threshold=CHAOS_QUARANTINE_K,
+                      snapshot_interval=3600.0)
+    # terminal-event handler order matters: the scheduler (already
+    # subscribed) decides retry-or-not before the monitor caches a status
+    monitor = JobMonitor(bus, registry=registry)
+    inj = FaultInjector(plan, sched, runner) if plan is not None else None
+
+    orig_launch = runner.launch
+
+    def launch(job):
+        orig_launch(job)
+        if job.spec.name.startswith("doomed"):
+            # fatal on every incarnation: the crash loop quarantine is
+            # built to cut off (backoff holds the rebirth, so this does
+            # not recurse inside the dispatch that launched it)
+            runner.fail_running(job, error="crash loop: segfault on "
+                                "start", transient=False)
+    runner.launch = launch
+
+    def drain(until=None):
+        guard = 0
+        while True:
+            guard += 1
+            assert guard < 2_000_000, "chaos event loop livelocked"
+            if until is None and all(j.state in TERMINAL_STATES
+                                     for j in registry.all_jobs()):
+                break
+            cands = [runner.next_completion(), sched.next_timer()]
+            if inj is not None:
+                cands.append(inj.next_event())
+            live = [t for t in cands if t is not None]
+            if not live:
+                break
+            t = min(live)
+            if until is not None and t > until:
+                break
+            nc = runner.next_completion()
+            if nc is not None and nc <= t + 1e-9:
+                runner.step()
+            else:
+                runner.advance_to(t)
+            if inj is not None:
+                inj.advance_to(runner.now)
+            sched.tick()
+
+    t0 = time.perf_counter()
+    for t, spec in arrivals:
+        drain(until=t)
+        runner.advance_to(t)
+        if inj is not None:
+            inj.advance_to(runner.now)
+        sched.tick()
+        sched.submit(registry.submit(copy.copy(spec)))
+    drain()
+    wall = time.perf_counter() - t0
+
+    jobs = registry.all_jobs()
+    non_terminal = sum(1 for j in jobs if j.state not in TERMINAL_STATES)
+    finished_work = sum(j.spec.duration or 0.0 for j in jobs
+                        if j.state == JobState.FINISHED)
+    makespan = runner.now
+    states: dict[str, int] = {}
+    for j in jobs:
+        states[j.state.value] = states.get(j.state.value, 0) + 1
+    return {
+        "n_jobs": len(arrivals),
+        "makespan_s": makespan,
+        "goodput_work_s_per_s": finished_work / max(makespan, 1e-9),
+        "finished": states.get("FINISHED", 0),
+        "failed": states.get("FAILED", 0),
+        "killed": states.get("KILLED", 0),
+        "quarantined": states.get("QUARANTINED", 0),
+        "non_terminal": non_terminal,
+        "retried": sched.stats.get("retried", 0),
+        "timeouts": sched.stats.get("timeouts", 0),
+        "deadline_kills": sched.stats.get("deadline_kills", 0),
+        "node_failures": sched.stats.get("node_failures", 0),
+        "retry_wasted_s": sched.stats.get("retry_wasted_s", 0.0),
+        "injected": [e for e in (inj.events if inj else [])
+                     if "skipped" not in e],
+        "oversubscribed": cluster.oversubscribed,
+        "max_retries_seen": max((j.retries for j in jobs), default=0),
+        "doomed_retries": {j.job_id: j.retries for j in jobs
+                           if j.spec.name.startswith("doomed")},
+        "state_trace": sorted((j.spec.name, j.state.value,
+                               round(j.runtime or 0.0, 9))
+                              for j in jobs),
+        "wall_s": wall,
+    }
+
+
+def run_chaos(n_jobs: int = CHAOS_JOBS, seed: int = CHAOS_SEED) -> dict:
+    """The fault-tolerance exit criterion, measured. Two runs over one
+    fleet shape and one seeded fault schedule — retry budgets +
+    quarantine ON vs OFF — plus a golden pair proving the chaos
+    machinery is a bit-identical no-op when disabled. Hard gates:
+
+    - goodput (finished declared work per makespan second) with the
+      layer ON is >= ``CHAOS_GOODPUT_GATE``x the no-retry run's;
+    - every job reaches a terminal state in both runs (nothing sticks);
+    - waste is bounded by the budget: no job exceeds its max_retries,
+      and every crash-looping job is quarantined before burning its full
+      budget;
+    - with features off, an attached-but-inert injector changes nothing:
+      final (state, runtime) per job and makespan are bit-identical."""
+    params = make_chaos_params(seed, n_jobs)
+    plan = FaultPlan(seed=seed, **CHAOS_PLAN)
+    base_arrivals = poisson_arrivals(
+        make_chaos_fleet(params, retry=False), CHAOS_RATE, seed)
+    ft_arrivals = poisson_arrivals(
+        make_chaos_fleet(params, retry=True), CHAOS_RATE, seed)
+
+    base = simulate_chaos(base_arrivals, plan=plan)
+    ft = simulate_chaos(ft_arrivals, plan=plan)
+
+    # golden pair: zero fault-tolerance features, injector attached with
+    # an all-disabled plan vs not attached at all
+    vanilla = poisson_arrivals(
+        make_chaos_fleet(params, retry=False, features=False),
+        CHAOS_RATE, seed)
+    golden = simulate_chaos(vanilla, plan=None)
+    inert = simulate_chaos(vanilla, plan=FaultPlan(seed=seed))
+    golden_match = (golden["state_trace"] == inert["state_trace"]
+                    and golden["makespan_s"] == inert["makespan_s"])
+
+    goodput_ratio = ft["goodput_work_s_per_s"] / \
+        max(base["goodput_work_s_per_s"], 1e-9)
+    res = {
+        "fleet": {"n_jobs": len(base_arrivals), "nodes": CHAOS_NODES,
+                  "arrival_rate": CHAOS_RATE, "doomed": CHAOS_DOOMED,
+                  "plan": dict(CHAOS_PLAN, seed=seed)},
+        "no_retry": base,
+        "retry": ft,
+        "goodput_ratio": goodput_ratio,
+        "golden_match": golden_match,
+        "injected_faults": len(ft["injected"]),
+    }
+    for tag, r in (("no_retry", base), ("retry", ft)):
+        assert r["non_terminal"] == 0, \
+            f"chaos[{tag}]: {r['non_terminal']} jobs stuck non-terminal"
+        assert not r["oversubscribed"], f"chaos[{tag}]: oversubscribed"
+    assert ft["injected"] and base["injected"], \
+        "chaos: the fault plan never fired — raise the rates"
+    assert goodput_ratio >= CHAOS_GOODPUT_GATE, \
+        (f"chaos: retry goodput only {goodput_ratio:.2f}x no-retry "
+         f"(gate {CHAOS_GOODPUT_GATE}x)")
+    assert ft["quarantined"] == CHAOS_DOOMED, \
+        (f"chaos: {ft['quarantined']} quarantined, expected every one of "
+         f"the {CHAOS_DOOMED} crash-looping jobs")
+    assert ft["max_retries_seen"] <= CHAOS_MAX_RETRIES, \
+        "chaos: a job exceeded its retry budget"
+    assert all(r <= CHAOS_QUARANTINE_K - 1
+               for r in ft["doomed_retries"].values()), \
+        (f"chaos: a crash loop burned past the quarantine threshold: "
+         f"{ft['doomed_retries']}")
+    assert golden_match, \
+        "chaos: inert injector perturbed the golden trace"
+    for r in (base, ft):        # audit-log bulk stays out of the JSON
+        r["injected"] = len(r["injected"])
+        del r["state_trace"]
+    return res
+
+
 # -- smoke regression gate -----------------------------------------------
 def check_throughput_regression(measured: dict, path: str,
                                 threshold: float = 0.7) -> list[str]:
@@ -1351,7 +1608,8 @@ def run(n_jobs: int = N_JOBS, seed: int = 0,
         elastic_jobs: int = ELASTIC_JOBS, gang_jobs: int = GANG_JOBS,
         herd_jobs: int = HERD_JOBS,
         recovery_jobs: int = RECOVERY_JOBS,
-        feedback_jobs: int = FEEDBACK_JOBS) -> dict:
+        feedback_jobs: int = FEEDBACK_JOBS,
+        chaos_jobs: int = CHAOS_JOBS) -> dict:
     arrivals = trace_arrivals(trace) if trace else \
         poisson_arrivals(make_fleet(seed, n_jobs), ARRIVAL_RATE, seed)
     fifo = run_policy(arrivals, "fifo", backfill=False,
@@ -1377,6 +1635,8 @@ def run(n_jobs: int = N_JOBS, seed: int = 0,
         out["herd"] = run_herd(herd_jobs, seed)
     if elastic_jobs:
         out["elastic"] = run_elastic(elastic_jobs, seed)
+    if chaos_jobs:
+        out["chaos"] = run_chaos(chaos_jobs)
     if recovery_jobs:
         out["recovery"] = run_recovery(recovery_jobs)
     if scale_jobs:
@@ -1475,6 +1735,23 @@ def report(res: dict, write: bool = True) -> None:
               f"{e['cost_saving_provisioned'] * 100:.1f}%"
               f"_makespan_ratio={e['makespan_ratio']:.3f}"
               f"_int_wait_p95={el['interactive_wait_p95_s']:.0f}s")
+    if "chaos" in res:
+        ch = res["chaos"]
+        for tag in ("no_retry", "retry"):
+            r = ch[tag]
+            print(f"scheduler.chaos.{tag},{r['wall_s'] * 1e6:.0f},"
+                  f"goodput={r['goodput_work_s_per_s']:.2f}"
+                  f"_finished={r['finished']}"
+                  f"_failed={r['failed']}"
+                  f"_retried={r['retried']}"
+                  f"_quarantined={r['quarantined']}"
+                  f"_timeouts={r['timeouts']}"
+                  f"_node_failures={r['node_failures']}"
+                  f"_wasted={r['retry_wasted_s']:.0f}s")
+        print(f"scheduler.chaos.gate,0,"
+              f"goodput_x={ch['goodput_ratio']:.2f}"
+              f"_faults={ch['injected_faults']}"
+              f"_golden_match={str(ch['golden_match']).lower()}")
     if "recovery" in res:
         rc = res["recovery"]
         print(f"scheduler.recovery,{rc['recovery_wall_s'] * 1e6:.0f},"
@@ -1539,7 +1816,7 @@ def main() -> None:
                   trace=args.trace, scale_jobs=args.scale or 0,
                   policy_repeats=5, elastic_jobs=300,
                   gang_jobs=150, herd_jobs=1500, recovery_jobs=800,
-                  feedback_jobs=400)
+                  feedback_jobs=400, chaos_jobs=250)
         report(res, write=False)
         failures = check_throughput_regression(res, "BENCH_scheduler.json")
         if failures:

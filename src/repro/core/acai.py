@@ -96,6 +96,8 @@ class AcaiEngine:
                  usage_halflife: Optional[float] = None,
                  preemption: bool = False,
                  starvation_threshold: float = 300.0,
+                 quarantine_threshold: int = 3,
+                 user_failure_budget: Optional[int] = None,
                  checkpoint_interval: Optional[float] = None,
                  durable: Optional[str | Path] = None,
                  snapshot_every: int = 1000,
@@ -170,7 +172,9 @@ class AcaiEngine:
                                    policy=policy, backfill=backfill,
                                    usage_halflife=usage_halflife,
                                    preemption=preemption,
-                                   starvation_threshold=starvation_threshold)
+                                   starvation_threshold=starvation_threshold,
+                                   quarantine_threshold=quarantine_threshold,
+                                   user_failure_budget=user_failure_budget)
         self.cluster = cluster
         self.monitor = JobMonitor(self.bus, registry=self.registry)
         self.pricing = pricing

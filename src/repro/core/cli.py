@@ -243,7 +243,16 @@ def main(argv=None) -> int:
             h = JobHandle(job, eng)
             state = h.wait(args.timeout) if args.cmd == "wait" \
                 else h.status()
-            print(state.value)
+            line = state.value
+            if args.cmd == "status":
+                # answer "why" without a second lookup: retry count and
+                # last failure reason ride the status line
+                if job.retries:
+                    line += f" retries={job.retries}"
+                if job.error:
+                    why = str(job.error).strip().splitlines()[-1][:120]
+                    line += f" error={why}"
+            print(line)
         else:
             # past invocation: the registry is per-process, read metadata
             doc = proj.metadata.get(args.job_id)
@@ -260,7 +269,13 @@ def main(argv=None) -> int:
                           file=sys.stderr)
                     return 1
                 state = "SUBMITTED"
-            print(state)
+            line = state
+            if args.cmd == "status":
+                if doc.get("retries"):
+                    line += f" retries={doc['retries']}"
+                if doc.get("error"):
+                    line += f" error={doc['error']}"
+            print(line)
     elif args.cmd == "jobs":
         from repro.core.engine.dashboard import job_history
         eng = plat.engine(args.token)

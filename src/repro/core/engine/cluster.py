@@ -68,6 +68,12 @@ class Cluster:
         if self.node_shape:
             self._node_free = [dict(self.node_shape)
                                for _ in range(self._target_nodes())]
+        # node health: indices of down nodes (failed or draining) are
+        # excluded from packing and their shape is subtracted from the
+        # aggregate capacity; residents of a *failed* node are handed to
+        # the caller to kill/retry, residents of a *drained* node finish
+        # naturally (the pool runs over-committed meanwhile)
+        self._down: dict[int, str] = {}   # node_idx -> "failed"|"drained"
         # topology: how many gang pods this pool can host "close" (one
         # interconnect island). None = unconstrained; the placement layer
         # penalizes (not rejects) close-topology gangs that exceed it.
@@ -164,6 +170,8 @@ class Cluster:
         picked: list[int] = []
         for _ in range(n_pods):
             for i, free in enumerate(shadow):
+                if i in self._down:
+                    continue        # dead/draining node: never packable
                 if self._node_fits(free, pod):
                     for n, amt in pod.items():
                         free[n] = free.get(n, 0.0) - amt
@@ -185,6 +193,13 @@ class Cluster:
                 return False
             if self.node_shape is None:
                 return True
+            if n_pods == 1:
+                # hot path (every single job on a node-shaped pool asks
+                # this at dispatch): scan free vectors in place, no
+                # shadow copies
+                return any(self._node_fits(free, pod)
+                           for i, free in enumerate(self._node_free)
+                           if i not in self._down)
             return self._pack_pods(pod, n_pods) is not None
 
     def reserve_gang(self, job_id: str, per_pod: Optional[dict[str, Any]],
@@ -289,6 +304,64 @@ class Cluster:
                         self.used[n] = max(0.0, left)
             return req
 
+    # -- node health ----------------------------------------------------
+    def _mark_down(self, node_idx: int, kind: str) -> list[str]:
+        if self.node_shape is None:
+            raise ValueError(f"{self.name}: node health needs node_shape")
+        with self._lock:
+            if not (0 <= node_idx < len(self._node_free)):
+                raise IndexError(f"{self.name}: no node {node_idx}")
+            residents = []
+            if node_idx not in self._down:
+                self._down[node_idx] = kind
+                # the node's whole shape leaves the aggregate books; live
+                # usage stays until residents release, so the pool may run
+                # over-committed exactly like a shrink under load
+                for dim, amt in self.node_shape.items():
+                    if dim in self.capacity:
+                        self.capacity[dim] = max(
+                            0.0, self.capacity[dim] - amt)
+            else:
+                self._down[node_idx] = kind
+            for jid, holds in self._node_holds.items():
+                if any(i == node_idx for i, _ in holds):
+                    residents.append(jid)
+            return residents
+
+    def fail_node(self, node_idx: int) -> list[str]:
+        """Kill a node: it stops packing, its shape leaves capacity, and
+        the job_ids holding reservations on it are returned for the
+        caller (the scheduler / fault injector) to fail — a gang with any
+        pod on the node fails whole, since its reservation releases
+        atomically. Reservations themselves are NOT touched here: the
+        scheduler's settle path releases them when it fails the jobs."""
+        return self._mark_down(node_idx, "failed")
+
+    def drain_node(self, node_idx: int) -> list[str]:
+        """Cordon a node: no new pods pack onto it, but residents keep
+        running and release naturally. Returns the resident job_ids for
+        observability."""
+        return self._mark_down(node_idx, "drained")
+
+    def node_health(self) -> dict[str, Any]:
+        """{"nodes": total, "up": n, "failed": [...], "drained": [...]}
+        — empty-ish for pools without node accounting."""
+        with self._lock:
+            failed = sorted(i for i, k in self._down.items()
+                            if k == "failed")
+            drained = sorted(i for i, k in self._down.items()
+                             if k == "drained")
+            total = len(self._node_free)
+            return {"nodes": total, "up": total - len(self._down),
+                    "failed": failed, "drained": drained}
+
+    def up_nodes(self) -> list[int]:
+        """Indices of schedulable nodes (for the fault injector's target
+        draw — deterministic given the same history)."""
+        with self._lock:
+            return [i for i in range(len(self._node_free))
+                    if i not in self._down]
+
     # -- elasticity -----------------------------------------------------
     def resize(self, capacity: dict[str, float]) -> dict[str, float]:
         """Set new totals for the given dimensions (others keep theirs).
@@ -319,6 +392,7 @@ class Cluster:
                     if idx in busy:
                         break
                     self._node_free.pop()
+                    self._down.pop(idx, None)
             return {n: self.used[n] - self.capacity[n]
                     for n in capacity
                     if self.used[n] > self.capacity[n] + 1e-9}

@@ -84,6 +84,22 @@ def scheduler_page(scheduler, monitor=None) -> str:
                                  f"| {cl.used[dim]:g} "
                                  f"| {_pct(util[dim])} "
                                  f"| {placed.get(pname, 0)} |")
+            health_lines = []
+            for pname in sorted(pools):
+                health_fn = getattr(pools[pname], "node_health", None)
+                h = health_fn() if callable(health_fn) else {}
+                if not h.get("nodes"):
+                    continue    # no node accounting on this pool
+                note = ""
+                if h["failed"]:
+                    note += f" failed={h['failed']}"
+                if h["drained"]:
+                    note += f" drained={h['drained']}"
+                health_lines.append(
+                    f"  {pname}: {h['up']}/{h['nodes']} nodes up{note}")
+            if health_lines:
+                lines.append("node health:")
+                lines.extend(health_lines)
         else:
             lines.append("(no cluster attached — capacity-unconstrained)")
 
@@ -119,6 +135,14 @@ def scheduler_page(scheduler, monitor=None) -> str:
             lines.append(f"preempted={s['preempted']} "
                          f"spot_reclaimed={s['reclaimed']} "
                          f"shrink_drained={s['drained']}")
+        if (s.get("retried") or s.get("quarantined") or s.get("timeouts")
+                or s.get("deadline_kills") or s.get("node_failures")):
+            lines.append(f"retried={s.get('retried', 0)} "
+                         f"quarantined={s.get('quarantined', 0)} "
+                         f"timeouts={s.get('timeouts', 0)} "
+                         f"deadline_kills={s.get('deadline_kills', 0)} "
+                         f"node_failures={s.get('node_failures', 0)} "
+                         f"retry_wasted_s={s.get('retry_wasted_s', 0.0):.1f}")
         drift = sum(cl.stats.get("release_underflow", 0)
                     for cl in pools.values() if hasattr(cl, "stats"))
         if drift:

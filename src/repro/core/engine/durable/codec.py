@@ -21,7 +21,7 @@ import math
 from typing import Any, Callable, Optional
 
 from repro.core.engine.lifecycle import JobState
-from repro.core.engine.registry import GangSpec, Job, JobSpec
+from repro.core.engine.registry import GangSpec, Job, JobSpec, RetryPolicy
 
 
 # -- fn references -------------------------------------------------------
@@ -93,6 +93,25 @@ def decode_gang(doc: Optional[dict]) -> Optional[GangSpec]:
                     min_pods=int(doc.get("min_pods", 0)))
 
 
+# -- RetryPolicy ---------------------------------------------------------
+def encode_retry(retry: Optional[RetryPolicy]) -> Optional[dict]:
+    if retry is None:
+        return None
+    return {"max_retries": retry.max_retries,
+            "backoff_base": retry.backoff_base,
+            "backoff_cap": retry.backoff_cap,
+            "retry_on": retry.retry_on}
+
+
+def decode_retry(doc: Optional[dict]) -> Optional[RetryPolicy]:
+    if doc is None:
+        return None
+    return RetryPolicy(max_retries=int(doc.get("max_retries", 3)),
+                       backoff_base=float(doc.get("backoff_base", 1.0)),
+                       backoff_cap=float(doc.get("backoff_cap", 60.0)),
+                       retry_on=doc.get("retry_on", "transient"))
+
+
 # -- JobSpec -------------------------------------------------------------
 def encode_spec(spec: JobSpec) -> dict:
     return {
@@ -113,6 +132,9 @@ def encode_spec(spec: JobSpec) -> dict:
         "template": spec.template,
         "gang": encode_gang(spec.gang),
         "input_bytes": spec.input_bytes,
+        "retry": encode_retry(getattr(spec, "retry", None)),
+        "timeout_s": getattr(spec, "timeout_s", None),
+        "deadline": getattr(spec, "deadline", None),
     }
 
 
@@ -136,6 +158,9 @@ def decode_spec(doc: dict) -> JobSpec:
         template=doc.get("template"),
         gang=decode_gang(doc.get("gang")),
         input_bytes=float(doc.get("input_bytes", 0.0)),
+        retry=decode_retry(doc.get("retry")),
+        timeout_s=doc.get("timeout_s"),
+        deadline=doc.get("deadline"),
     )
 
 
@@ -156,6 +181,8 @@ def encode_job(job: Job) -> dict:
         "epoch": job.epoch,
         "preemptions": job.preemptions,
         "gang_pods": job.gang_pods,
+        "retries": job.retries,
+        "failures": job.failures,
     }
 
 
@@ -174,6 +201,8 @@ def decode_job(doc: dict) -> Job:
     job.preemptions = int(doc.get("preemptions", 0))
     gp = doc.get("gang_pods")
     job.gang_pods = int(gp) if gp is not None else None
+    job.retries = int(doc.get("retries", 0))
+    job.failures = int(doc.get("failures", 0))
     return job
 
 

@@ -9,6 +9,9 @@ periodically into a whole-state snapshot key. Event types:
               runtime/cost as known at that instant)
 ``preempt``   an epoch bump (``mark_preempted``): the prior incarnation
               is superseded from this record on
+``retry``     an epoch rebirth (``mark_retrying``): a FAILED incarnation
+              re-queued under its retry budget, with the retry/failure
+              counters that must survive a restart
 ``progress``  checkpointed progress banked by a preemption (fraction of
               the job done — a relaunch resumes from here)
 ``final``     terminal enrichment recorded after the runner finished
@@ -135,6 +138,15 @@ class Journal:
     def job_preempted(self, job) -> None:
         self.record({"t": "preempt", "job": job.job_id, "epoch": job.epoch,
                      "preemptions": job.preemptions})
+
+    def job_retried(self, job) -> None:
+        """Epoch rebirth of a FAILED job under its retry budget: the
+        prior incarnation's terminal records are superseded from here,
+        and the retry/failure counters survive a restart (a recovered
+        engine must not grant a crash-looper a fresh budget)."""
+        self.record({"t": "retry", "job": job.job_id, "epoch": job.epoch,
+                     "retries": job.retries, "failures": job.failures,
+                     "error": job.error})
 
     def job_progress(self, job_id: str, done_frac: float) -> None:
         self.record({"t": "progress", "job": job_id,

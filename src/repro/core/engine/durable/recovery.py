@@ -108,7 +108,13 @@ def fold(snapshot: Optional[dict],
             if int(ev.get("epoch", 0)) < int(rec.get("epoch", 0)):
                 continue        # superseded incarnation's write: stale
             if rec.get("state") in _TERMINAL_VALUES:
-                continue        # duplicate terminal for a settled job
+                # one refinement is legal out of a terminal: FAILED ->
+                # QUARANTINED (the crash-loop verdict lands after the
+                # failure's own terminal record); everything else is a
+                # duplicate terminal for a settled job
+                if not (ev["state"] == JobState.QUARANTINED.value and
+                        rec.get("state") == JobState.FAILED.value):
+                    continue
             rec["state"] = ev["state"]
             rec["epoch"] = int(ev.get("epoch", 0))
             if ev.get("pool") is not None:
@@ -128,6 +134,25 @@ def fold(snapshot: Optional[dict],
             rec["preemptions"] = int(ev.get("preemptions",
                                             rec.get("preemptions", 0)))
             rec["state"] = JobState.PREEMPTED.value
+        elif t == "retry":
+            rec = records.get(ev["job"])
+            if rec is None:
+                continue
+            if int(ev.get("epoch", 0)) <= int(rec.get("epoch", 0)):
+                continue        # replayed rebirth: the epoch already moved
+            # epoch rebirth out of FAILED: unlike every other record this
+            # deliberately overrides a terminal state — the retry budget
+            # resurrected the job, and the counters must survive so a
+            # recovered engine doesn't grant a crash-looper a fresh budget
+            rec["state"] = JobState.QUEUED.value
+            rec["epoch"] = int(ev["epoch"])
+            rec["retries"] = int(ev.get("retries",
+                                        rec.get("retries", 0) + 1))
+            rec["failures"] = int(ev.get("failures",
+                                         rec.get("failures", 0)))
+            rec["finished_at"] = None
+            if ev.get("error") is not None:
+                rec["error"] = ev["error"]
         elif t == "progress":
             progress[ev["job"]] = float(ev.get("done_frac", 0.0))
         elif t == "final":

@@ -183,15 +183,23 @@ class SubprocessRunner(Runner):
                     "workdir": str(self.dir / "jobs" / job.job_id)})
         self._inflight[job.job_id] = epoch
 
-    def _fail_local(self, job: Job, epoch: int, err: str) -> None:
+    def _fail_local(self, job: Job, epoch: int, err: str, *,
+                    transient: bool = False) -> None:
         if self.registry.set_state(job.job_id, JobState.FAILED, error=err,
                                    expect_epoch=epoch) is None:
             return
         job.outputs["log"] = err
         self.registry.persist_state(job.job_id)
-        self.bus.publish(TOPIC_CONTAINER_STATUS,
-                         {"job_id": job.job_id, "epoch": epoch,
-                          "status": "FAILED"})
+        if self.datalake is not None:
+            # no worker log exists for an engine-side failure: persist
+            # the reason as the job log so `acai logs` can answer "why"
+            self.datalake.storage.upload(f"/.logs/{job.job_id}.log",
+                                         err.encode(),
+                                         creator=job.spec.user)
+        msg = {"job_id": job.job_id, "epoch": epoch, "status": "FAILED"}
+        if transient:
+            msg["transient"] = True
+        self.bus.publish(TOPIC_CONTAINER_STATUS, msg)
 
     def pending(self) -> int:
         return len(self._inflight)
@@ -222,8 +230,11 @@ class SubprocessRunner(Runner):
                     job = self.registry.get(jid)
                 except KeyError:
                     continue
+                # the worker died, not the job: a transient failure, so
+                # a retry budget can relaunch on a fresh worker
                 self._fail_local(job, epoch,
-                                 f"{jid}: worker process died mid-run")
+                                 f"{jid}: worker process died mid-run",
+                                 transient=True)
             return None
         msg = json.loads(line)
         if msg.get("op") != "terminal":
@@ -264,13 +275,26 @@ class SubprocessRunner(Runner):
             return False
         job.runtime = msg.get("runtime")
         job.outputs.update(dict(msg.get("outputs") or {}))
-        job.outputs["log"] = msg.get("log", "")
+        log = msg.get("log", "")
+        if state == JobState.FAILED and msg.get("error"):
+            # the worker's traceback belongs in the job log: stdout alone
+            # rarely explains a failure, and the data-lake log is what
+            # `acai logs <job>` reads cross-process
+            log = (log + "\n" if log else "") + str(msg["error"])
+        job.outputs["log"] = log
         if job.runtime:
             _bill_segment(resolve_pricing(self.pricing, job), job,
                           job.runtime)
         if self.datalake is not None:
+            extra = {}
+            if job.error:
+                extra["error"] = \
+                    str(job.error).strip().splitlines()[-1][:200]
+            if job.retries:
+                extra["retries"] = job.retries
             self.datalake.metadata.put(jid, runtime=job.runtime,
-                                       cost=job.cost, state=state.value)
+                                       cost=job.cost, state=state.value,
+                                       **extra)
             self.datalake.storage.upload(f"/.logs/{jid}.log",
                                          job.outputs["log"].encode(),
                                          creator=job.spec.user)
@@ -279,6 +303,10 @@ class SubprocessRunner(Runner):
             out = {"job_id": jid, "status": state.value}
             if epoch is not None:
                 out["epoch"] = epoch
+            if msg.get("transient") and state == JobState.FAILED:
+                out["transient"] = True
+            if msg.get("error"):
+                out["error"] = str(msg["error"])
             self.bus.publish(TOPIC_CONTAINER_STATUS, out)
         return True
 

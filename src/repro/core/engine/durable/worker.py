@@ -117,9 +117,16 @@ class _Worker:
                 result = fn(workdir, shim)
             rec["outputs"] = json_safe(result) \
                 if isinstance(result, dict) else {}
-        except Exception:   # noqa: BLE001 — user code failure => FAILED
+        except Exception as e:  # noqa: BLE001 — user code failure => FAILED
             rec["status"] = "FAILED"
             rec["error"] = traceback.format_exc()
+            # job-classified retryable failures (TransientJobError, by
+            # name — the worker must not import the engine stack just to
+            # isinstance-check) ride the record so the engine's retry
+            # policy can distinguish flaky from fatal across the boundary
+            if any(t.__name__ == "TransientJobError"
+                   for t in type(e).__mro__):
+                rec["transient"] = True
         rec["runtime"] = time.perf_counter() - t0
         rec["log"] = log_buf.getvalue()
         with self._lock:

@@ -60,7 +60,10 @@ class JobHandle:
         return self.job.state
 
     def done(self) -> bool:
-        return self.status() in TERMINAL_STATES
+        # a FAILED job whose retry decision is still pending is not done:
+        # the scheduler may rebirth it as a new epoch a moment later
+        return (self.job.state in TERMINAL_STATES
+                and not self.job.retry_pending)
 
     # -- blocking --------------------------------------------------------
     def wait(self, timeout: Optional[float] = None) -> JobState:
@@ -75,7 +78,7 @@ class JobHandle:
         launcher = self._engine.launcher
         while True:
             state = self.status()
-            if state in TERMINAL_STATES:
+            if state in TERMINAL_STATES and not self.job.retry_pending:
                 return state
             remaining = None
             if deadline is not None:

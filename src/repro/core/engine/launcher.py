@@ -36,7 +36,8 @@ from typing import Callable, Optional
 from repro.core.engine.events import (EventBus, TOPIC_CONTAINER_STATUS,
                                       TOPIC_JOB_PROGRESS)
 from repro.core.engine.lifecycle import (IllegalTransition, JobPreempted,
-                                         JobState, TERMINAL_STATES)
+                                         JobState, TERMINAL_STATES,
+                                         TransientJobError)
 from repro.core.engine.logparse import parse_log
 from repro.core.engine.registry import Job, JobRegistry
 
@@ -218,6 +219,15 @@ class LocalRunner(Runner):
             bus.publish(TOPIC_JOB_PROGRESS,
                         {"job_id": job.job_id, "stage": "preempted",
                          "epoch": epoch})
+        except TransientJobError:
+            # the job classified its own failure as retryable (lost
+            # connection, flaky dependency): FAILED, but stamped transient
+            # so a retry_on="transient" policy has a real signal
+            job.runtime = time.perf_counter() - t0
+            self._finalize(job, log_buf.getvalue()
+                           + "\n" + traceback.format_exc(), JobState.FAILED,
+                           error=traceback.format_exc(), epoch=epoch,
+                           transient=True)
         except Exception:  # noqa: BLE001 — user code failure => FAILED
             job.runtime = time.perf_counter() - t0
             self._finalize(job, log_buf.getvalue()
@@ -262,7 +272,8 @@ class LocalRunner(Runner):
     def _finalize(self, job: Job, log_text: str, state: JobState,
                   error: Optional[str] = None,
                   epoch: Optional[int] = None,
-                  outputs: Optional[dict] = None) -> None:
+                  outputs: Optional[dict] = None,
+                  transient: bool = False) -> None:
         if epoch is not None and job.epoch != epoch:
             # a superseded incarnation must not write the registry, bill,
             # or publish: the job is live again (re-queued or relaunched)
@@ -310,6 +321,10 @@ class LocalRunner(Runner):
                                          creator=job.spec.user)
         job.outputs["log"] = log_text
         msg = {"job_id": job.job_id, "status": state.value}
+        if transient and state == JobState.FAILED:
+            # transient-vs-fatal rides the terminal event: the scheduler's
+            # retry policy reads it without re-parsing the traceback
+            msg["transient"] = True
         if epoch is not None:
             # stamp the incarnation: the scheduler drops terminal events
             # whose epoch predates the job's current one (a worker that
@@ -634,6 +649,93 @@ class VirtualRunner(Runner):
         prev = self._ckpt_mark.get(jid)
         self._ckpt_mark[jid] = max(prev or 0.0, progressed)
         return True
+
+    # -- fault tolerance ------------------------------------------------
+    def fail_running(self, job: Job, error: str = "injected fault", *,
+                     transient: bool = False) -> bool:
+        """Fail a RUNNING job on the virtual clock — the fault injector's
+        node-kill / flaky-job path, and the scheduler's per-incarnation
+        timeout. Checkpointed progress banks exactly like a preemption
+        (a retried incarnation resumes from the last checkpoint), the
+        elapsed segment bills, and the terminal event carries the
+        transient/fatal classification plus the incarnation's epoch.
+        Returns False when the job is not running here."""
+        jid = job.job_id
+        if jid not in self._ends or jid not in self._live_seq:
+            return False
+        epoch = job.epoch
+        full = self._full_dur.get(jid, 0.0)
+        elapsed = max(0.0, self.now - self._launch_t.get(jid, self.now))
+        done0 = self._done_frac.get(jid, 0.0)
+        interval = self.checkpoint_interval
+        if isinstance(job.spec.args, dict):
+            interval = job.spec.args.get("checkpoint_interval", interval)
+        progressed = done0 * full + elapsed
+        if interval and interval > 0:
+            saved = min(int(progressed / interval + 1e-9) * interval,
+                        progressed)
+        else:
+            saved = 0.0     # never checkpointed: a retry restarts at 0
+        mark = self._ckpt_mark.pop(jid, None)
+        if mark is not None:
+            saved = max(saved, min(mark, progressed))
+        self._done_frac[jid] = saved / full if full > 0 else 0.0
+        if self.journal is not None:
+            self.journal.job_progress(jid, self._done_frac[jid])
+        pricing = resolve_pricing(self.pricing, job)
+        if pricing is not None:
+            job.cost = (job.cost or 0.0) + \
+                pricing.job_cost(job.spec.resources, elapsed) * \
+                _gang_width(job)
+        # drop the live entry; the heap row becomes a stale tombstone
+        self._ends.pop(jid, None)
+        self._live_seq.pop(jid, None)
+        self._launch_t.pop(jid, None)
+        self._full_dur.pop(jid, None)
+        if self.registry.set_state(jid, JobState.FAILED, error=error,
+                                   expect_epoch=epoch) is None:
+            return False
+        job.runtime = elapsed
+        msg = {"job_id": jid, "status": "FAILED", "epoch": epoch,
+               "error": error}
+        if transient:
+            msg["transient"] = True
+        self.bus.publish(TOPIC_CONTAINER_STATUS, msg)
+        return True
+
+    def slow_running(self, job: Job, factor: float) -> Optional[float]:
+        """Straggler injection: stretch the *remaining* work of a running
+        job by ``factor`` (progress already made keeps its original
+        pace). Reschedules the completion and returns the new expected
+        end — None when the job is not running here."""
+        jid = job.job_id
+        if jid not in self._ends or jid not in self._live_seq \
+                or factor <= 0:
+            return None
+        full = self._full_dur.get(jid, 0.0)
+        elapsed = max(0.0, self.now - self._launch_t.get(jid, self.now))
+        done = self._done_frac.get(jid, 0.0)
+        if full > 0:
+            done = min(1.0, done + elapsed / full)
+        pricing = resolve_pricing(self.pricing, job)
+        if pricing is not None and elapsed > 0:
+            job.cost = (job.cost or 0.0) + \
+                pricing.job_cost(job.spec.resources, elapsed) * \
+                _gang_width(job)
+        new_full = full * factor if full > 0 else 0.0
+        rem = max(new_full * (1.0 - done), 0.0)
+        self._done_frac[jid] = done
+        self._launch_t[jid] = self.now
+        self._full_dur[jid] = new_full
+        if job.spec.duration is None:
+            # a later preempt/retry of this segment resumes against the
+            # slowed duration, not a fresh full-speed draw
+            self._dur_cache.setdefault(jid, {})[job.pool] = new_full
+        self._seq += 1
+        self._live_seq[jid] = self._seq
+        self._ends[jid] = self.now + rem
+        heapq.heappush(self._heap, (self.now + rem, self._seq, jid, rem))
+        return self._ends[jid]
 
     # -- elastic gang resize --------------------------------------------
     def resize_gang(self, job: Job, k: int) -> Optional[float]:

@@ -17,6 +17,17 @@ checkpoint. This relaxes the original submit-once invariant: the
 job id never changes, but a job may now be *scheduled* more than once —
 each requeue bumps ``Job.epoch`` so terminal events from a superseded
 incarnation are recognizably stale.
+
+Retry rides the same epoch machinery: a FAILED incarnation whose
+``JobSpec.retry`` budget allows it is *reborn* into QUEUED by
+``JobRegistry.mark_retrying`` — like crash recovery's requeue, a rebirth
+is an epoch bump plus direct reassignment, not an edge in the transition
+table, so the table itself stays closed (every edge out of a terminal
+state lands in a terminal state; FAILED -> QUARANTINED is the only such
+edge, refining a crash-looping job's terminal outcome).
+
+QUARANTINED is the crash-loop terminal: K consecutive non-transient
+failures and the scheduler stops burning retry budget on the job.
 """
 from __future__ import annotations
 
@@ -33,6 +44,7 @@ class JobState(str, enum.Enum):
     FAILED = "FAILED"
     KILLED = "KILLED"
     UPSTREAM_FAILED = "UPSTREAM_FAILED"
+    QUARANTINED = "QUARANTINED"
 
 
 _TRANSITIONS = {
@@ -45,14 +57,17 @@ _TRANSITIONS = {
                        JobState.PREEMPTED},
     JobState.PREEMPTED: {JobState.QUEUED, JobState.KILLED},
     JobState.FINISHED: set(),
-    JobState.FAILED: set(),
+    # terminal refinement: a crash-looping FAILED job may be re-labelled
+    # QUARANTINED (still terminal) — the one edge out of a terminal state
+    JobState.FAILED: {JobState.QUARANTINED},
     JobState.KILLED: set(),
     JobState.UPSTREAM_FAILED: set(),
+    JobState.QUARANTINED: set(),
 }
 
 ACTIVE_STATES = {JobState.LAUNCHING, JobState.RUNNING}
 TERMINAL_STATES = {JobState.FINISHED, JobState.FAILED, JobState.KILLED,
-                   JobState.UPSTREAM_FAILED}
+                   JobState.UPSTREAM_FAILED, JobState.QUARANTINED}
 # hoisted for event-path dispatch: publishers put the state *value* on the
 # bus, and handlers must not rebuild this set per event
 TERMINAL_STATUS_VALUES = frozenset(s.value for s in TERMINAL_STATES)
@@ -67,6 +82,18 @@ class JobPreempted(RuntimeError):
     stop. Raised by cooperative job functions (see ``train/fault.py``,
     which re-exports it for ``TrainSupervisor``); the preemption-capable
     runners treat it as a hand-back, not a failure."""
+
+
+class TransientJobError(RuntimeError):
+    """A failure the job itself believes is retryable: a lost connection,
+    a flaky dependency, a revoked spot node. Job functions raise it (or a
+    subclass) instead of a bare exception to tell the runner the failure
+    is *transient*; runners stamp the terminal event accordingly and a
+    ``RetryPolicy(retry_on="transient")`` requeues the job where an
+    arbitrary exception would make it terminally FAILED. Re-exported from
+    ``train/fault.py`` alongside ``JobPreempted`` (it lives here so the
+    engine can classify failures without importing the jax train stack).
+    """
 
 
 def check_transition(old: JobState, new: JobState) -> None:

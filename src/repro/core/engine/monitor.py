@@ -47,9 +47,28 @@ class JobMonitor:
         bus.subscribe(TOPIC_SCHEDULER, self._on_scheduler)
 
     def _on_status(self, msg: dict) -> None:
-        self.status[msg["job_id"]] = msg.get("status", "")
+        status = msg.get("status", "")
+        if status in _TERMINAL_STATUS and self.registry is not None:
+            # handlers run in subscription order: the scheduler (first)
+            # may have already retried this FAILED incarnation — the
+            # registry epoch moved past the message's, so caching the
+            # terminal here would wake waiters on a job that is alive
+            # again. Keep the event for watch(), drop the status.
+            try:
+                job = self.registry.get(msg["job_id"])
+            except KeyError:
+                job = None
+            if job is not None and \
+                    int(msg.get("epoch", job.epoch)) < job.epoch:
+                self.events[msg["job_id"]].append(msg)
+                return
+            if job is not None:
+                # accepted terminal: the retry decision (if any) is made
+                # — backstop for engines with no scheduler subscribed
+                job.retry_pending = False
+        self.status[msg["job_id"]] = status
         self.events[msg["job_id"]].append(msg)
-        if msg.get("status", "") in _TERMINAL_STATUS:
+        if status in _TERMINAL_STATUS:
             with self._terminal_cv:
                 self._terminal_cv.notify_all()
 
@@ -58,10 +77,11 @@ class JobMonitor:
             return True
         if self.registry is not None:
             try:
-                state = self.registry.get(job_id).state.value
+                job = self.registry.get(job_id)
             except KeyError:
                 return False
-            if state in _TERMINAL_STATUS:
+            state = job.state.value
+            if state in _TERMINAL_STATUS and not job.retry_pending:
                 # cache it so the wait predicate stays cheap and watch()
                 # consumers see a consistent status map
                 self.status.setdefault(job_id, state)

@@ -7,8 +7,31 @@ import threading
 import time
 from typing import Any, Callable, Optional
 
-from repro.core.engine.lifecycle import (TERMINAL_STATES, JobState,
-                                         check_transition)
+from repro.core.engine.lifecycle import (TERMINAL_STATES, IllegalTransition,
+                                         JobState, check_transition)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Retry budget for a job that ends FAILED (ACAI robustness layer).
+
+    A retryable failure requeues the job as a new ``Job.epoch`` (the same
+    rebirth machinery preemption uses) after an exponential backoff hold
+    of ``min(backoff_cap, backoff_base * 2**retries)`` seconds.
+    ``retry_on="transient"`` retries only failures the runner classified
+    transient (``TransientJobError``, node loss, worker death);
+    ``"any"`` also retries ordinary exceptions — those count toward the
+    scheduler's crash-loop quarantine threshold, so a deterministic bug
+    ends QUARANTINED instead of burning the whole budget.
+    """
+    max_retries: int = 3
+    backoff_base: float = 1.0
+    backoff_cap: float = 60.0
+    retry_on: str = "transient"                # "transient" | "any"
+
+    def backoff(self, retries: int) -> float:
+        """Hold before retry number ``retries + 1`` (0-based exponent)."""
+        return min(self.backoff_cap, self.backoff_base * (2.0 ** retries))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +98,16 @@ class JobSpec:
     # layer's transfer-cost model prices moving these bytes between
     # accelerator families when a child lands off its parent's pool
     input_bytes: float = 0.0
+    # fault tolerance (None = fail-fast, the pre-retry behaviour):
+    # requeue budget for FAILED incarnations, per-incarnation runtime
+    # limit (a timed-out incarnation fails *transient* — straggler
+    # semantics — so the retry budget can try it elsewhere), and an
+    # end-to-end deadline in seconds after submit (the job is killed at
+    # the deadline, and rejected at admission when its declared duration
+    # already proves the deadline infeasible on every pool)
+    retry: Optional[RetryPolicy] = None
+    timeout_s: Optional[float] = None
+    deadline: Optional[float] = None
 
     @property
     def n_pods(self) -> int:
@@ -107,6 +140,20 @@ class Job:
     # elastic shrink-to-k resize; None for ordinary single-pod jobs. The
     # training stack's gang_resize_hook watches it to re-mesh in place.
     gang_pods: Optional[int] = None
+    # fault-tolerance bookkeeping: retries counts FAILED->QUEUED rebirths
+    # (bounded by spec.retry.max_retries), failures counts *consecutive*
+    # non-transient failures (a transient failure breaks the streak) —
+    # the scheduler quarantines at its crash-loop threshold
+    retries: int = 0
+    failures: int = 0
+    # retry-decision latch: raised (under the registry lock, in the same
+    # commit as the FAILED transition) when the spec carries a retry
+    # policy, lowered once the scheduler decides retry-or-not. Waiters
+    # must not treat FAILED as terminal while it is up — the job may be
+    # reborn as a new epoch a moment later. In-memory only: never
+    # journaled, defaults down on recovery.
+    retry_pending: bool = dataclasses.field(default=False, repr=False,
+                                            compare=False)
 
     @property
     def queue_key(self) -> tuple[str, str]:
@@ -178,6 +225,12 @@ class JobRegistry:
                 return None
             check_transition(job.state, new)
             job.state = new
+            # raise/lower the retry-decision latch atomically with the
+            # transition: a waiter that samples the registry between this
+            # commit and the scheduler's retry decision must not resolve
+            # a FAILED job that is about to be reborn
+            job.retry_pending = (new == JobState.FAILED
+                                 and job.spec.retry is not None)
             if new == JobState.RUNNING:
                 job.started_at = time.time()
             if new in TERMINAL_STATES:
@@ -202,11 +255,51 @@ class JobRegistry:
                 self.journal.job_preempted(job)
             return job
 
+    def note_failure(self, job_id: str, transient: bool) -> int:
+        """Record one failed incarnation under the registry lock and
+        return the job's *consecutive non-transient* failure count — the
+        crash-loop signal the scheduler quarantines on. A transient
+        failure breaks the streak (the job is flaky, not crash-looping).
+        """
+        with self._lock:
+            job = self._jobs[job_id]
+            job.failures = 0 if transient else job.failures + 1
+            return job.failures
+
+    def mark_retrying(self, job_id: str) -> Job:
+        """Atomically rebirth a FAILED job into QUEUED for a retry:
+        epoch bump + retry count under the registry lock, mirroring
+        ``mark_preempted``. Like crash recovery's requeue this is an
+        epoch rebirth, not a transition-table edge — FAILED stays
+        terminal in ``_TRANSITIONS``; only this privileged op (driven by
+        an explicit ``JobSpec.retry`` budget) may resurrect it. The last
+        failure's ``error`` is kept as the job's last-failure reason."""
+        with self._lock:
+            job = self._jobs[job_id]
+            if job.state != JobState.FAILED:
+                raise IllegalTransition(
+                    f"retry of {job_id} in state {job.state.value}")
+            job.state = JobState.QUEUED
+            job.retry_pending = False
+            job.finished_at = None
+            job.epoch += 1
+            job.retries += 1
+            if self.journal is not None:
+                self.journal.job_retried(job)
+            return job
+
     def persist_state(self, job_id: str) -> None:
         """Persist the job's state to the metadata store. The runner's
         finalize does this for jobs it completes; the scheduler calls it
         for terminals that never reach a runner (UPSTREAM_FAILED, queued
         kills, infeasible submits), so cross-process status readers see
-        every outcome."""
+        every outcome. Failure reason (first line) and retry count ride
+        along so a cross-process ``acai status`` can answer "why"."""
         if self.metadata is not None:
-            self.metadata.put(job_id, state=self.get(job_id).state.value)
+            job = self.get(job_id)
+            extra: dict[str, Any] = {}
+            if job.error:
+                extra["error"] = str(job.error).strip().splitlines()[-1][:200]
+            if job.retries:
+                extra["retries"] = job.retries
+            self.metadata.put(job_id, state=job.state.value, **extra)

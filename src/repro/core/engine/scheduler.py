@@ -134,6 +134,23 @@ def validate_spec(spec) -> None:
         if gang.topology not in ("any", "close"):
             raise ValueError(f"job {spec.name!r}: gang.topology must be "
                              f"'any' or 'close', got {gang.topology!r}")
+    retry = getattr(spec, "retry", None)
+    if retry is not None:
+        if retry.max_retries < 0:
+            raise ValueError(f"job {spec.name!r}: retry.max_retries must "
+                             f"be >= 0, got {retry.max_retries}")
+        if retry.backoff_base < 0 or retry.backoff_cap < 0:
+            raise ValueError(f"job {spec.name!r}: retry backoff must be "
+                             f">= 0")
+        if retry.retry_on not in ("transient", "any"):
+            raise ValueError(f"job {spec.name!r}: retry.retry_on must be "
+                             f"'transient' or 'any', got "
+                             f"{retry.retry_on!r}")
+    for knob in ("timeout_s", "deadline"):
+        v = getattr(spec, knob, None)
+        if v is not None and (not isinstance(v, (int, float)) or v <= 0):
+            raise ValueError(f"job {spec.name!r}: {knob} must be a "
+                             f"positive number of seconds, got {v!r}")
 
 
 class QueueConfig:
@@ -199,7 +216,9 @@ class Scheduler:
                  usage_halflife: Optional[float] = None,
                  snapshot_interval: float = 0.0,
                  preemption: bool = False,
-                 starvation_threshold: float = 300.0):
+                 starvation_threshold: float = 300.0,
+                 quarantine_threshold: int = 3,
+                 user_failure_budget: Optional[int] = None):
         if policy not in ("fair", "fifo"):
             raise ValueError(f"unknown policy {policy!r}")
         if cluster is not None and placement is not None:
@@ -217,6 +236,32 @@ class Scheduler:
         # meaningful when the launcher can deliver a checkpoint signal
         self.preemption = preemption
         self.starvation_threshold = starvation_threshold
+        # fault tolerance (all inert unless some spec opts in): a job
+        # whose spec carries a RetryPolicy re-queues FAILED incarnations
+        # (epoch rebirth) after an exponential backoff hold; K
+        # *consecutive* non-transient failures end it QUARANTINED (a
+        # crash loop is a bug, not bad luck); a per-(project, user)
+        # budget of non-transient failures-without-a-success stops a
+        # crash-looping sweep from monopolizing dispatch with retries
+        self.quarantine_threshold = quarantine_threshold
+        self.user_failure_budget = user_failure_budget
+        # backoff holds: job_id -> release time. QUEUED in the registry
+        # but absent from every dispatch queue (like dependency holds),
+        # released into _enqueue by the timer sweep at dispatch entry.
+        self._backoff: dict[str, float] = {}
+        # deadline/timeout enforcement points: a min-heap of
+        # (fire_at, kind 0=timeout|1=deadline, job_id, epoch) — timeout
+        # entries are per-incarnation (stale epochs skipped), deadline
+        # entries absolute from submit (epoch -1, any incarnation)
+        self._timers: list[tuple] = []
+        self._ticking = False
+        # wall-clock alarm for real-clock engines (no launcher.now):
+        # nothing external calls tick() there, so the earliest pending
+        # backoff release / deadline / timeout arms a daemon timer
+        self._wall_alarm: Optional[threading.Timer] = None
+        self._wall_alarm_at = 0.0
+        # non-transient failures per queue key since its last success
+        self._user_fails: dict[tuple, int] = defaultdict(int)
         self._can_preempt = callable(getattr(launcher, "preempt", None))
         self._can_forget = callable(getattr(launcher, "forget", None))
         self._preempting = False
@@ -303,7 +348,9 @@ class Scheduler:
                       "placed_by_pool": defaultdict(int),
                       "snapshots": 0, "snapshots_skipped": 0,
                       "preempted": 0, "reclaimed": 0, "drained": 0,
-                      "gang_shrunk": 0}
+                      "gang_shrunk": 0, "retried": 0, "quarantined": 0,
+                      "timeouts": 0, "deadline_kills": 0,
+                      "node_failures": 0, "retry_wasted_s": 0.0}
         self.placement: Optional[Placement] = None
         if placement is not None:
             self.placement = placement
@@ -636,6 +683,22 @@ class Scheduler:
             if failed_parent is not None:
                 self._upstream_fail(job.job_id, failed_parent)
                 return
+            dl = getattr(job.spec, "deadline", None)
+            if dl is not None:
+                # fail-fast at admission when the deadline is *provably*
+                # infeasible on every pool: the declared duration is a
+                # pool-independent lower bound on wall time (retries and
+                # checkpoint resumes only add to it), so duration >
+                # deadline can never finish in time anywhere
+                if job.spec.duration is not None and job.spec.duration > dl:
+                    self._fail_infeasible(
+                        job, err=(f"deadline {dl}s is infeasible: declared "
+                                  f"duration {job.spec.duration}s exceeds "
+                                  f"it on every pool"))
+                    return
+                heapq.heappush(self._timers,
+                               (self._queued_at[job.job_id] + dl, 1,
+                                job.job_id, -1))
             if self.placement is not None:
                 options = self.placement.eligible(job.spec)
                 if not options:
@@ -975,6 +1038,7 @@ class Scheduler:
             if job_id in self._queued_set:
                 self._remove_queued(key, job_id)
             self._unhold(job_id)
+            self._backoff.pop(job_id, None)
             self._active[key].discard(job_id)
             self.registry.set_state(job_id, JobState.KILLED)
             if launched:
@@ -1157,9 +1221,7 @@ class Scheduler:
         for rec in recs:
             used_d = rec[1]
             if all(used_d.get(n, 0.0) + amt <= thr
-                   for n, amt, thr in rec[2]) and \
-                    (rec[6] is None or self.pools[rec[0]].can_pack(
-                        rec[6][0], rec[6][1])):
+                   for n, amt, thr in rec[2]) and self._packable(jid, rec):
                 return False
         for pname in self._rank_of.get(jid, ()):
             cl = self.pools.get(pname)
@@ -1213,6 +1275,247 @@ class Scheduler:
                 return chosen
         return chosen if partial else None
 
+    # -- fault tolerance -------------------------------------------------
+    def tick(self) -> None:
+        """Advance fault-tolerance time at the current runner clock:
+        fire due deadline/timeout timers, release due backoff holds,
+        then dispatch. Event loops that drive a virtual clock call this
+        after every clock advance (terminal events dispatch anyway; this
+        covers advances where nothing completed)."""
+        with self._lock:
+            self._dispatch()
+
+    def next_timer(self) -> Optional[float]:
+        """The earliest pending fault-tolerance enforcement point
+        (deadline, timeout or backoff release), or None. Virtual-clock
+        loops advance to ``min(next completion, next fault, next timer)``
+        so backoff holds release and deadlines fire even while nothing
+        is completing. May name an already-stale timer entry; firing it
+        is a no-op but still makes progress (the entry pops)."""
+        with self._lock:
+            cands = []
+            if self._timers:
+                cands.append(self._timers[0][0])
+            if self._backoff:
+                cands.append(min(self._backoff.values()))
+            return min(cands) if cands else None
+
+    def _arm_wall_alarm(self) -> None:
+        """Real-clock engines have no event loop calling ``tick()``, so
+        a pending backoff hold or deadline/timeout would only fire when
+        an unrelated event happened to dispatch: arm a daemon wall-clock
+        timer for the earliest enforcement point instead. Virtual-clock
+        runs (``launcher.now`` set) advance time themselves and never
+        arm one — their traces stay bit-identical. Called at dispatch
+        exit (every arming site ends in a dispatch), under the lock."""
+        if getattr(self.launcher, "now", None) is not None:
+            return
+        due = None
+        if self._timers:
+            due = self._timers[0][0]
+        if self._backoff:
+            soonest = min(self._backoff.values())
+            due = soonest if due is None else min(due, soonest)
+        if due is None:
+            return
+        alarm = self._wall_alarm
+        if (alarm is not None and alarm.is_alive()
+                and self._wall_alarm_at <= due + 1e-9):
+            return              # the armed alarm fires at or before due
+        if alarm is not None:
+            alarm.cancel()
+        t = threading.Timer(max(0.0, due - time.time()),
+                            lambda: self._wall_fire(t))
+        t.daemon = True
+        self._wall_alarm = t
+        self._wall_alarm_at = due
+        t.start()
+
+    def _wall_fire(self, alarm: threading.Timer) -> None:
+        with self._lock:
+            if self._wall_alarm is alarm:
+                self._wall_alarm = None
+        self.tick()
+
+    def _release_backoffs(self, now: float) -> None:
+        """Move backoff holds whose release time arrived back into their
+        dispatch queues (wait clock restarts at release — the hold is
+        penance, not queueing)."""
+        due = [jid for jid, t in self._backoff.items() if t <= now + 1e-9]
+        for jid in sorted(due, key=lambda j: self._seq_of.get(j, 0)):
+            del self._backoff[jid]
+            job = self._job_of.get(jid)
+            if job is None or job.state != JobState.QUEUED:
+                continue        # killed while held (kill pops, but stay safe)
+            self._queued_at[jid] = now
+            self._enqueue(job)
+            self._dirty_full = True
+            self._futile_blocked = None
+
+    def _fire_timers(self, now: float) -> None:
+        """Enforce due deadline/timeout entries. A timeout fails the
+        *incarnation* transient (straggler semantics — the retry budget
+        may try it elsewhere); a deadline kills the *job* outright (the
+        result is worthless after it, queued or running)."""
+        while self._timers and self._timers[0][0] <= now + 1e-9:
+            _t, kind, jid, epoch = heapq.heappop(self._timers)
+            job = self._job_of.get(jid)
+            if job is None:
+                try:
+                    job = self.registry.get(jid)
+                except KeyError:
+                    continue
+            if job.state in TERMINAL_STATES:
+                continue
+            if kind == 0:       # per-incarnation timeout
+                if job.state != JobState.RUNNING or job.epoch != epoch:
+                    continue    # stale: that incarnation already ended
+                err = (f"timeout: incarnation exceeded "
+                       f"{job.spec.timeout_s}s")
+                self.stats["timeouts"] += 1
+                fr = getattr(self.launcher, "fail_running", None)
+                if callable(fr) and fr(job, err, transient=True):
+                    continue    # terminal event handler settles/retries
+                self.kill(jid)
+                job.error = err
+            else:               # absolute deadline
+                err = (f"deadline exceeded "
+                       f"({job.spec.deadline}s after submit)")
+                self._backoff.pop(jid, None)
+                self.kill(jid)
+                job.error = err
+                self.stats["deadline_kills"] += 1
+
+    def _maybe_retry(self, job: Job, key: tuple, msg: dict) -> bool:
+        """Decide a FAILED incarnation's fate under the job's retry
+        policy: requeue it as a new epoch (True — the caller skips the
+        terminal settle and dependent cascade), quarantine a crash loop
+        (False, with the registry state refined FAILED -> QUARANTINED so
+        the caller settles it as the terminal it is), or let it stay
+        FAILED (False). Inert unless the spec opted into a RetryPolicy —
+        jobs without one take the exact pre-retry path, so recorded
+        decision traces replay bit-identically."""
+        policy = getattr(job.spec, "retry", None)
+        if policy is None or job.state != JobState.FAILED:
+            return False
+        jid = job.job_id
+        if jid not in self._started_at:
+            return False        # never launched (infeasible submit):
+                                # retrying can never change the outcome
+        transient = bool(msg.get("transient"))
+        streak = self.registry.note_failure(jid, transient)
+        if not transient:
+            self._user_fails[key] += 1
+        if not transient and streak >= self.quarantine_threshold:
+            # crash loop: the same non-transient failure K times in a row
+            # is a bug, not bad luck — park it terminally instead of
+            # burning the rest of the budget (FAILED -> QUARANTINED is
+            # the transition table's one terminal-refinement edge)
+            self.registry.set_state(
+                jid, JobState.QUARANTINED,
+                error=(f"quarantined after {streak} consecutive "
+                       f"failures: {msg.get('error') or job.error}"))
+            self.registry.persist_state(jid)
+            self.stats["quarantined"] += 1
+            return False
+        if not transient and policy.retry_on != "any":
+            return False        # fatal failure, transient-only budget
+        if job.retries >= policy.max_retries:
+            return False        # budget exhausted: stays FAILED
+        if self.user_failure_budget is not None and not transient and \
+                self._user_fails[key] > self.user_failure_budget:
+            return False        # the queue's failure budget is spent:
+                                # stop feeding its crash loops dispatch
+        # requeue as a fresh incarnation: settle the failed segment like
+        # a preemption (release the reservation, charge fair-share for
+        # the wasted runtime), then epoch-rebirth FAILED -> QUEUED
+        now = self._now()
+        started = self._started_at.get(jid)
+        if started is not None:
+            self.stats["retry_wasted_s"] += max(0.0, now - started)
+        self._settle_preempted(jid, key, job)
+        hold = policy.backoff(job.retries)      # pre-bump retry count
+        self.registry.mark_retrying(jid)
+        self.stats["retried"] += 1
+        self._seq += 1
+        self._seq_of[jid] = self._seq
+        self._prio_of[jid] = job.spec.priority
+        if hold > 0:
+            self._backoff[jid] = now + hold
+            self._state_rev += 1
+        else:
+            self._queued_at[jid] = now
+            self._enqueue(job)
+        self._dirty_full = True
+        self._futile_blocked = None
+        return True
+
+    def fail_node(self, pool: str, node_idx: int) -> list[str]:
+        """Kill one node on ``pool`` (the fault injector's actuator; on a
+        real fleet, the health prober's). The node leaves packing and
+        capacity, and every job holding a reservation on it fails
+        atomically — a gang with one pod there fails whole, because the
+        reservation is one unit. Node loss is *transient* (the
+        infrastructure broke, not the job), so retry policies requeue
+        the victims. Returns the job ids that were failed."""
+        with self._lock:
+            cl = self.pools[pool]
+            residents = cl.fail_node(node_idx)
+            self.stats["node_failures"] += 1
+            return self._after_node_down(pool, residents, fail=True,
+                                         node_idx=node_idx)
+
+    def drain_node(self, pool: str, node_idx: int) -> list[str]:
+        """Cordon one node on ``pool``: no new placements land on it,
+        residents finish naturally. Returns the resident job ids."""
+        with self._lock:
+            cl = self.pools[pool]
+            residents = cl.drain_node(node_idx)
+            return self._after_node_down(pool, residents, fail=False,
+                                         node_idx=node_idx)
+
+    def _after_node_down(self, pool: str, residents: list[str], *,
+                         fail: bool, node_idx: int) -> list[str]:
+        """Shared tail of fail_node/drain_node: capacity shrank, so the
+        per-job caches that bake this pool's thresholds are stale (same
+        scoped drop resize_pool's shrink path does); on a hard failure
+        the residents fail through the launcher so the terminal events
+        flow the normal settle/retry path."""
+        stale = [jid for jid, opts in self._opts_of.items() if pool in opts]
+        for jid in stale:
+            self._opts_of.pop(jid, None)
+            self._rank_of.pop(jid, None)
+            self._dinfo.pop(jid, None)
+        for w in self._qwin.values():
+            w.stale = True
+        self._futile_blocked = None
+        self._dirty_full = True
+        self._state_rev += 1
+        out = []
+        if fail:
+            fr = getattr(self.launcher, "fail_running", None)
+            was = self._dispatching
+            self._dispatching = True    # batch: one dispatch at the end
+            try:
+                for jid in residents:
+                    job = self._job_of.get(jid)
+                    if job is None or job.state != JobState.RUNNING:
+                        continue
+                    err = f"node {node_idx} on pool {pool} failed"
+                    if callable(fr):
+                        if fr(job, err, transient=True):
+                            out.append(jid)
+                    else:
+                        self.kill(jid)
+                        job.error = err
+                        out.append(jid)
+            finally:
+                self._dispatching = was
+        else:
+            out = list(residents)
+        self._dispatch()
+        return out
+
     def _unhold(self, job_id: str) -> None:
         """Drop a held job's gating state: O(its parents), using the unmet
         set as the exact index into _dependents."""
@@ -1265,6 +1568,21 @@ class Scheduler:
             self._dispatch()
 
     def _dispatch(self) -> None:
+        if (self._timers or self._backoff) and not self._ticking:
+            # fault-tolerance timers ride the dispatch entry point (every
+            # clock advance ends in a dispatch): release due backoff
+            # holds back into their queues and enforce due deadlines /
+            # incarnation timeouts. Guarded non-reentrant — enforcement
+            # kills/fails publish terminal events whose handlers dispatch.
+            self._ticking = True
+            try:
+                now = self._now()
+                if self._backoff:
+                    self._release_backoffs(now)
+                if self._timers:
+                    self._fire_timers(now)
+            finally:
+                self._ticking = False
         if self._dispatching:
             # re-entered from a terminal event published inside launch();
             # fold into the outer loop instead of recursing.
@@ -1281,10 +1599,12 @@ class Scheduler:
             # there are none to reorder.
             self._maybe_preempt()
             self._publish_snapshot()
+            self._arm_wall_alarm()
             return
         self._dispatch_loop()
         self._maybe_preempt()
         self._publish_snapshot()
+        self._arm_wall_alarm()
 
     def _dispatch_loop(self) -> None:
         self._dispatching = True
@@ -1467,6 +1787,20 @@ class Scheduler:
                 return False    # this pool can still admit its smallest job
         return True
 
+    def _packable(self, jid: str, rec) -> bool:
+        """Node-level feasibility on top of the aggregate fit check:
+        gangs ask the pool's packer for all pods; single jobs on a
+        node-shaped pool ask it for one — aggregate free capacity can be
+        fragmented across nodes, and launching on the aggregate alone
+        would blow up in ``reserve_gang``. Pools without node accounting
+        answer True for single jobs without a cluster call."""
+        cl = self.pools[rec[0]]
+        if rec[6] is not None:
+            return cl.can_pack(rec[6][0], rec[6][1])
+        if getattr(cl, "node_shape", None) is None:
+            return True
+        return cl.can_pack(self._opts_of[jid][rec[0]].resources, 1)
+
     def _visit(self, key: tuple, jid: str, blocked: dict,
                quota_used: dict, now: float, regkey) -> int:
         """Examine one candidate: 0 = rejected without fitting any pool
@@ -1506,9 +1840,8 @@ class Scheduler:
                         break
                 if not fits:
                     continue
-                if rec[6] is not None and not \
-                        self.pools[rec[0]].can_pack(rec[6][0], rec[6][1]):
-                    continue    # gang: aggregate fits, pods don't pack
+                if not self._packable(jid, rec):
+                    continue    # aggregate fits, pods don't node-pack
                 fit_any = True
                 pname = rec[0]
                 blk = blocked.get(pname)
@@ -1775,10 +2108,8 @@ class Scheduler:
                                     break
                             if not fits:
                                 continue
-                            if rec[6] is not None and not \
-                                    self.pools[rec[0]].can_pack(
-                                        rec[6][0], rec[6][1]):
-                                continue    # gang pods don't node-pack
+                            if not self._packable(jid, rec):
+                                continue    # pods don't node-pack
                             fit_any = True
                             pname = rec[0]
                             blk = blocked.get(pname)
@@ -1894,6 +2225,12 @@ class Scheduler:
         if now is None:
             now = self._now()
         self._started_at[jid] = now
+        t_s = getattr(job.spec, "timeout_s", None)
+        if t_s is not None:
+            # per-incarnation runtime limit: stamped with this epoch so a
+            # retry/preempt relaunch gets its own fresh timer and the old
+            # one expires as a no-op
+            heapq.heappush(self._timers, (now + t_s, 0, jid, job.epoch))
         wait = now - self._queued_at.pop(jid, now)
         self.stats["launched"] += 1
         self.stats["wait_count"] += 1
@@ -1919,12 +2256,18 @@ class Scheduler:
                        (end, self._lseq, jid, reserved))
                 self._end_key[jid] = (pool, (end, self._lseq))
 
-    def _fail_infeasible(self, job: Job) -> None:
-        err = (f"resources {job.spec.pool_resources or job.spec.resources} "
-               f"exceed cluster capacity on every pool "
-               f"({self.placement.explain_infeasible(job.spec)})")
+    def _fail_infeasible(self, job: Job,
+                         err: Optional[str] = None) -> None:
+        if err is None:
+            err = (f"resources "
+                   f"{job.spec.pool_resources or job.spec.resources} "
+                   f"exceed cluster capacity on every pool "
+                   f"({self.placement.explain_infeasible(job.spec)})")
         self.registry.set_state(job.job_id, JobState.LAUNCHING)
         self.registry.set_state(job.job_id, JobState.FAILED, error=err)
+        # never reached a runner, so no worker log exists: make the
+        # reason the log, so `acai logs <job>` answers "why did it fail"
+        job.outputs.setdefault("log", err)
         self.registry.persist_state(job.job_id)
         self._state_rev += 1
         self.bus.publish(TOPIC_CONTAINER_STATUS,
@@ -2010,6 +2353,22 @@ class Scheduler:
                 return
             key = job.queue_key
             self._active[key].discard(job_id)
+            if status == JobState.FAILED.value:
+                retried = self._maybe_retry(job, key, msg)
+                # decision made either way: lower the retry latch so
+                # waiters may trust the registry's FAILED again
+                job.retry_pending = False
+                if retried:
+                    # requeued as a new epoch: not terminal — no
+                    # dependent cascade, no terminal settle (the failed
+                    # segment was already settled preemption-style
+                    # inside _maybe_retry)
+                    self._dispatch()
+                    return
+            if status == JobState.FINISHED.value and \
+                    key in self._user_fails:
+                self._user_fails.pop(key)   # a success resets the
+                                            # queue's failure budget
             self._release_dependents(job_id, status)
             self._settle(job_id, key)
             self._dispatch()

@@ -26,7 +26,8 @@ import statistics
 import time
 from typing import Callable, Optional
 
-from repro.core.engine.lifecycle import JobPreempted  # noqa: F401 (re-export)
+from repro.core.engine.lifecycle import (  # noqa: F401 (re-exports)
+    JobPreempted, TransientJobError)
 from repro.train.checkpoints import CheckpointManager
 
 

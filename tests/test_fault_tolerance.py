@@ -1,0 +1,544 @@
+"""Fault-tolerance layer: retry budgets with exponential backoff,
+crash-loop quarantine, per-incarnation timeouts vs absolute deadlines,
+node failure (gang-atomic), deterministic chaos injection, and the
+durability of retry state across a crash-recovery restart."""
+import pytest
+
+from repro.core.acai import AcaiEngine
+from repro.core.engine.cluster import Cluster
+from repro.core.engine.events import EventBus
+from repro.core.engine.faults import FaultInjector, FaultPlan
+from repro.core.engine.lifecycle import (_TRANSITIONS, TERMINAL_STATES,
+                                         IllegalTransition, JobState,
+                                         TransientJobError,
+                                         check_transition)
+from repro.core.engine.launcher import VirtualRunner
+from repro.core.engine.monitor import JobMonitor
+from repro.core.engine.registry import (GangSpec, JobRegistry, JobSpec,
+                                        RetryPolicy)
+from repro.core.engine.scheduler import Scheduler, validate_spec
+from repro.core.provision.pricing import CPU_PRICING
+
+
+def _spec(name="j", duration=10.0, resources=None, user="u", **kw):
+    return JobSpec(name=name, project="p", user=user, duration=duration,
+                   resources=resources or {"vcpu": 4.0}, **kw)
+
+
+def _engine(capacity=None, *, node_shape=None, **kw):
+    registry = JobRegistry()
+    bus = EventBus()
+    runner = VirtualRunner(registry, bus, pricing=CPU_PRICING)
+    cl = Cluster(capacity or {"vcpu": 8.0}, {"vcpu": 0.0},
+                 node_shape=node_shape)
+    sched = Scheduler(registry, runner, bus, quota_k=100, cluster=cl,
+                      **kw)
+    monitor = JobMonitor(bus, registry=registry)  # after the scheduler
+    return registry, bus, runner, sched, monitor
+
+
+def _submit(registry, sched, spec):
+    job = registry.submit(spec)
+    sched.submit(job)
+    return job
+
+
+def _drain(runner, sched, until=None):
+    """Drive completions + fault-tolerance timers on the virtual clock."""
+    while True:
+        cands = [t for t in (runner.next_completion(), sched.next_timer())
+                 if t is not None]
+        if not cands:
+            return
+        t = min(cands)
+        if until is not None and t > until:
+            return
+        if runner.next_completion() == t:
+            runner.step()
+        else:
+            runner.advance_to(t)
+        sched.tick()
+
+
+# -- property: the transition table is closed under retry/quarantine ----
+def test_transition_table_closed():
+    """Every state has a row; terminals have no exits except the one
+    FAILED -> QUARANTINED refinement; QUARANTINED is a dead end."""
+    assert set(_TRANSITIONS) == set(JobState)
+    for s in TERMINAL_STATES:
+        allowed = _TRANSITIONS[s]
+        if s is JobState.FAILED:
+            assert allowed == {JobState.QUARANTINED}
+        else:
+            assert allowed == set()
+    # every declared target is a real state (no dangling edges)
+    for s, targets in _TRANSITIONS.items():
+        assert targets <= set(JobState)
+    check_transition(JobState.FAILED, JobState.QUARANTINED)
+    for target in JobState:
+        with pytest.raises(IllegalTransition):
+            check_transition(JobState.QUARANTINED, target)
+
+
+def test_terminal_stays_terminal_across_epochs():
+    """Epoch rebirth (mark_retrying) is privileged: only FAILED may be
+    resurrected, and a stale incarnation's write can never resurrect a
+    settled job."""
+    registry = JobRegistry()
+    job = registry.submit(_spec())
+    registry.set_state(job.job_id, JobState.QUEUED)
+    for bad in (JobState.QUEUED, JobState.RUNNING):
+        job.state = bad
+        with pytest.raises(IllegalTransition):
+            registry.mark_retrying(job.job_id)
+    job.state = JobState.FAILED
+    reborn = registry.mark_retrying(job.job_id)
+    assert reborn.state is JobState.QUEUED
+    assert reborn.epoch == 1 and reborn.retries == 1
+    # the dead incarnation's late terminal event is recognizably stale
+    assert registry.set_state(job.job_id, JobState.FAILED,
+                              expect_epoch=0) is None
+    assert registry.get(job.job_id).state is JobState.QUEUED
+
+
+def test_note_failure_streak_resets_on_transient():
+    registry = JobRegistry()
+    job = registry.submit(_spec())
+    assert registry.note_failure(job.job_id, transient=False) == 1
+    assert registry.note_failure(job.job_id, transient=False) == 2
+    assert registry.note_failure(job.job_id, transient=True) == 0
+    assert registry.note_failure(job.job_id, transient=False) == 1
+
+
+def test_validate_spec_rejects_bad_fault_knobs():
+    for bad in (dict(retry=RetryPolicy(max_retries=-1)),
+                dict(retry=RetryPolicy(backoff_base=-1.0)),
+                dict(retry=RetryPolicy(retry_on="sometimes")),
+                dict(timeout_s=0.0), dict(deadline=-5.0)):
+        with pytest.raises(ValueError):
+            validate_spec(_spec(**bad))
+
+
+# -- retry with backoff --------------------------------------------------
+def test_transient_failure_retries_after_backoff():
+    registry, bus, runner, sched, _ = _engine()
+    job = _submit(registry, sched, _spec(
+        duration=10.0, retry=RetryPolicy(max_retries=2, backoff_base=5.0)))
+    assert job.state is JobState.RUNNING
+    runner.advance_to(3.0)
+    assert runner.fail_running(job, "nic reset", transient=True)
+    # reborn QUEUED under a backoff hold: not dispatched yet
+    assert job.state is JobState.QUEUED
+    assert job.epoch == 1 and job.retries == 1
+    assert sched.stats["retried"] == 1
+    assert sched.stats["retry_wasted_s"] == pytest.approx(3.0)
+    assert sched.next_timer() == pytest.approx(8.0)     # 3 + base*2^0
+    runner.advance_to(7.0)
+    sched.tick()
+    assert job.state is JobState.QUEUED     # hold not due yet
+    runner.advance_to(8.0)
+    sched.tick()
+    assert job.state is JobState.RUNNING    # released + dispatched
+    _drain(runner, sched)
+    assert job.state is JobState.FINISHED
+    assert sched.next_timer() is None
+
+
+def test_retry_budget_exhausts_to_failed():
+    registry, bus, runner, sched, _ = _engine()
+    job = _submit(registry, sched, _spec(
+        retry=RetryPolicy(max_retries=1, backoff_base=0.0)))
+    assert runner.fail_running(job, "flake", transient=True)
+    assert job.state is JobState.RUNNING        # zero backoff: relaunched
+    assert job.retries == 1
+    assert runner.fail_running(job, "flake again", transient=True)
+    assert job.state is JobState.FAILED         # budget spent: terminal
+    assert sched.stats["retried"] == 1
+    # transient failures never quarantine
+    assert sched.stats["quarantined"] == 0
+
+
+def test_fatal_failure_not_retried_under_transient_policy():
+    registry, bus, runner, sched, _ = _engine()
+    job = _submit(registry, sched, _spec(
+        retry=RetryPolicy(max_retries=3, backoff_base=0.0)))
+    assert runner.fail_running(job, "assertion error", transient=False)
+    assert job.state is JobState.FAILED
+    assert job.retries == 0 and sched.stats["retried"] == 0
+
+
+# -- crash-loop quarantine ----------------------------------------------
+def test_crash_loop_quarantines():
+    registry, bus, runner, sched, monitor = _engine(
+        quarantine_threshold=3)
+    job = _submit(registry, sched, _spec(retry=RetryPolicy(
+        max_retries=10, backoff_base=0.0, retry_on="any")))
+    for i in range(2):
+        assert runner.fail_running(job, f"segfault {i}", transient=False)
+        assert job.state is JobState.RUNNING    # retried: budget remains
+    assert runner.fail_running(job, "segfault 2", transient=False)
+    assert job.state is JobState.QUARANTINED    # 3rd consecutive fatal
+    assert job.retries == 2                     # budget NOT burned dry
+    assert sched.stats["quarantined"] == 1
+    assert "quarantined after 3 consecutive failures" in job.error
+    assert monitor.is_terminal(job.job_id)
+    # terminal means terminal: no further resurrection
+    with pytest.raises(IllegalTransition):
+        registry.mark_retrying(job.job_id)
+
+
+def test_success_resets_quarantine_streak():
+    registry, bus, runner, sched, _ = _engine(quarantine_threshold=2)
+    job = _submit(registry, sched, _spec(retry=RetryPolicy(
+        max_retries=10, backoff_base=0.0, retry_on="any")))
+    assert runner.fail_running(job, "boom", transient=False)
+    assert job.state is JobState.RUNNING
+    _drain(runner, sched)
+    assert job.state is JobState.FINISHED
+    assert job.failures == 1        # streak intact until a success...
+    # ...but the FINISHED reset the *user's* failure budget
+    assert not sched._user_fails
+
+
+def test_user_failure_budget_denies_retry():
+    registry, bus, runner, sched, _ = _engine(
+        quarantine_threshold=100, user_failure_budget=1)
+    job = _submit(registry, sched, _spec(retry=RetryPolicy(
+        max_retries=10, backoff_base=0.0, retry_on="any")))
+    assert runner.fail_running(job, "bug", transient=False)
+    assert job.state is JobState.RUNNING        # fail #1: within budget
+    assert runner.fail_running(job, "bug", transient=False)
+    assert job.state is JobState.FAILED         # fail #2 > budget: denied
+
+
+# -- timeouts vs deadlines ----------------------------------------------
+def test_timeout_is_transient_and_retries():
+    registry, bus, runner, sched, _ = _engine()
+    job = _submit(registry, sched, _spec(
+        duration=100.0, timeout_s=10.0,
+        retry=RetryPolicy(max_retries=1, backoff_base=0.0)))
+    assert sched.next_timer() == pytest.approx(10.0)
+    runner.advance_to(10.0)
+    sched.tick()
+    assert sched.stats["timeouts"] == 1
+    assert job.state is JobState.RUNNING        # retried immediately
+    assert job.epoch == 1
+    runner.advance_to(20.0)                     # second incarnation's
+    sched.tick()                                # timer: 10 + 10
+    assert sched.stats["timeouts"] == 2
+    assert job.state is JobState.FAILED         # budget spent
+    assert "timeout" in job.error
+
+
+def test_timeout_without_retry_kills():
+    registry, bus, runner, sched, _ = _engine()
+    job = _submit(registry, sched, _spec(duration=100.0, timeout_s=5.0))
+    runner.advance_to(5.0)
+    sched.tick()
+    assert job.state is JobState.FAILED         # fail_running, no policy
+    assert sched.stats["timeouts"] == 1
+
+
+def test_deadline_kills_queued_job():
+    registry, bus, runner, sched, _ = _engine()
+    hog = _submit(registry, sched, _spec("hog", duration=100.0,
+                                         resources={"vcpu": 8.0}))
+    late = _submit(registry, sched, _spec(
+        "late", duration=10.0, resources={"vcpu": 8.0}, deadline=20.0,
+        retry=RetryPolicy(backoff_base=0.0)))
+    assert hog.state is JobState.RUNNING
+    assert late.state is JobState.QUEUED
+    assert sched.next_timer() == pytest.approx(20.0)
+    runner.advance_to(25.0)
+    sched.tick()
+    assert late.state is JobState.KILLED        # hard: no retry
+    assert "deadline" in late.error
+    assert sched.stats["deadline_kills"] == 1
+    assert late.retries == 0
+
+
+def test_deadline_infeasible_fails_at_admission():
+    registry, bus, runner, sched, monitor = _engine()
+    job = _submit(registry, sched, _spec(
+        duration=100.0, deadline=50.0,
+        retry=RetryPolicy(backoff_base=0.0, retry_on="any",
+                          max_retries=5)))
+    assert job.state is JobState.FAILED
+    assert "infeasible" in job.error
+    # the reason is readable as the job's log ("acai logs" answers why)
+    assert "infeasible" in job.outputs.get("log", "")
+    # never launched: retrying cannot change the outcome
+    assert job.retries == 0 and sched.stats["retried"] == 0
+
+
+def test_deadline_met_leaves_no_residue():
+    registry, bus, runner, sched, _ = _engine()
+    job = _submit(registry, sched, _spec(duration=10.0, deadline=50.0))
+    _drain(runner, sched)
+    assert job.state is JobState.FINISHED
+    runner.advance_to(60.0)
+    sched.tick()                                # stale timer pops inert
+    assert job.state is JobState.FINISHED
+    assert sched.stats["deadline_kills"] == 0
+
+
+# -- node failure --------------------------------------------------------
+def test_node_failure_fails_residents_and_excludes_node():
+    registry, bus, runner, sched, _ = _engine(
+        {"vcpu": 8.0}, node_shape={"vcpu": 4.0})
+    a = _submit(registry, sched, _spec(
+        "a", duration=50.0, retry=RetryPolicy(backoff_base=0.0)))
+    b = _submit(registry, sched, _spec("b", duration=50.0))
+    assert a.state is JobState.RUNNING and b.state is JobState.RUNNING
+    cl = sched.pools["default"]
+    victims = {jid for jid, holds in cl._node_holds.items()
+               if any(n == 0 for n, _ in holds)}
+    assert len(victims) == 1
+    failed = sched.fail_node("default", 0)
+    assert set(failed) == victims
+    assert sched.stats["node_failures"] == 1
+    assert cl.node_health() == {"nodes": 2, "up": 1, "failed": [0],
+                                "drained": []}
+    survivor = b if a.job_id in victims else a
+    assert survivor.state is JobState.RUNNING   # other node untouched
+    victim = a if a.job_id in victims else b
+    if victim is a:
+        # node loss is transient: the retry policy requeued it, and the
+        # dead node is out of capacity so it waits for the survivor
+        assert victim.state in (JobState.QUEUED, JobState.RUNNING)
+        assert victim.retries == 1
+    else:
+        assert victim.state is JobState.FAILED  # no policy: terminal
+    _drain(runner, sched)
+    assert survivor.state is JobState.FINISHED
+
+
+def test_node_failure_fails_gang_atomically():
+    registry, bus, runner, sched, _ = _engine(
+        {"vcpu": 8.0}, node_shape={"vcpu": 4.0})
+    gang = _submit(registry, sched, _spec(
+        "g", duration=50.0, resources={"vcpu": 4.0},
+        gang=GangSpec(n_pods=2)))
+    assert gang.state is JobState.RUNNING       # one pod per node
+    failed = sched.fail_node("default", 0)
+    assert failed == [gang.job_id]              # whole gang, one unit
+    assert gang.state is JobState.FAILED
+    cl = sched.pools["default"]
+    assert cl.used["vcpu"] == 0.0               # both pods released
+    assert cl.stats["release_underflow"] == 0
+
+
+def test_drain_node_lets_residents_finish():
+    registry, bus, runner, sched, _ = _engine(
+        {"vcpu": 8.0}, node_shape={"vcpu": 4.0})
+    a = _submit(registry, sched, _spec("a", duration=10.0))
+    b = _submit(registry, sched, _spec("b", duration=10.0))
+    residents = sched.drain_node("default", 0)
+    assert len(residents) == 1
+    assert registry.get(residents[0]).state is JobState.RUNNING
+    # no new placements land on the cordoned node
+    c = _submit(registry, sched, _spec("c", duration=10.0))
+    assert c.state is JobState.QUEUED
+    _drain(runner, sched)
+    for j in (a, b, c):
+        assert j.state is JobState.FINISHED
+
+
+# -- deterministic chaos injection --------------------------------------
+def test_fault_injector_is_deterministic():
+    def run(seed):
+        registry, bus, runner, sched, _ = _engine({"vcpu": 8.0})
+        inj = FaultInjector(FaultPlan(seed=seed, transient_mtbf_s=7.0,
+                                      straggler_mtbf_s=11.0),
+                            sched, runner)
+        for i in range(6):
+            _submit(registry, sched, _spec(
+                f"j{i}", duration=20.0, resources={"vcpu": 4.0},
+                retry=RetryPolicy(max_retries=3, backoff_base=1.0)))
+        for _ in range(400):
+            cands = [t for t in (runner.next_completion(),
+                                 sched.next_timer(), inj.next_event())
+                     if t is not None]
+            if not cands or runner.now > 500.0:
+                break
+            t = min(cands)
+            if runner.next_completion() == t:
+                runner.step()
+            else:
+                runner.advance_to(t)
+            inj.advance_to(runner.now)
+            sched.tick()
+        return [(e["t"], e["kind"], e.get("job"), e.get("skipped"))
+                for e in inj.events]
+    a, b = run(42), run(42)
+    assert a == b and len(a) > 0            # same seed: same schedule
+    assert run(7) != a                      # different seed: different
+
+
+def test_fault_injector_node_kill_cap():
+    registry, bus, runner, sched, _ = _engine(
+        {"vcpu": 8.0}, node_shape={"vcpu": 4.0})
+    inj = FaultInjector(FaultPlan(seed=1, node_mtbf_s=5.0,
+                                  max_node_failures=1), sched, runner)
+    _submit(registry, sched, _spec(duration=500.0))
+    for _ in range(50):
+        t = inj.next_event()
+        if t is None or runner.now > 200.0:
+            break
+        runner.advance_to(t)
+        inj.advance_to(runner.now)
+        sched.tick()
+    assert inj.node_failures == 1           # cap held
+    assert sched.pools["default"].node_health()["up"] == 1
+
+
+# -- feature-off safety --------------------------------------------------
+def test_no_policy_fleet_leaves_fault_state_untouched():
+    """A fleet with no retry/timeout/deadline specs must not create any
+    fault-tolerance state — the golden decision traces depend on it."""
+    registry, bus, runner, sched, _ = _engine()
+    jobs = [_submit(registry, sched, _spec(f"j{i}", duration=5.0 + i,
+                                           resources={"vcpu": 4.0}))
+            for i in range(4)]
+    while runner.next_completion() is not None:
+        runner.step()
+    assert all(j.state is JobState.FINISHED for j in jobs)
+    assert sched.next_timer() is None
+    assert not sched._timers and not sched._backoff
+    for k in ("retried", "quarantined", "timeouts", "deadline_kills",
+              "node_failures"):
+        assert sched.stats[k] == 0
+    assert sched.stats["retry_wasted_s"] == 0.0
+
+
+# -- monitor staleness ---------------------------------------------------
+def test_monitor_drops_stale_terminal_of_retried_job():
+    registry, bus, runner, sched, monitor = _engine()
+    job = _submit(registry, sched, _spec(
+        retry=RetryPolicy(max_retries=2, backoff_base=5.0)))
+    runner.advance_to(2.0)
+    assert runner.fail_running(job, "flake", transient=True)
+    # the scheduler retried before the monitor saw the FAILED event:
+    # the stale terminal must not be cached as the job's status
+    assert job.state is JobState.QUEUED
+    assert monitor.status.get(job.job_id) != "FAILED"
+    assert not monitor.is_terminal(job.job_id)
+    # the event itself stays visible for watch()/debugging
+    assert any(e.get("status") == "FAILED"
+               for e in monitor.watch(job.job_id))
+    runner.advance_to(7.0)
+    sched.tick()
+    _drain(runner, sched)
+    assert monitor.is_terminal(job.job_id)
+    assert monitor.status[job.job_id] == "FINISHED"
+
+
+# -- transient classification across runners -----------------------------
+def test_thread_runner_classifies_transient_and_retries(tmp_path):
+    flaky_calls = {"n": 0}
+
+    def flaky(workdir, job):
+        flaky_calls["n"] += 1
+        if flaky_calls["n"] == 1:
+            raise TransientJobError("shard unreachable")
+        return {"ok": True}
+
+    def fatal(workdir, job):
+        raise ValueError("real bug")
+
+    eng = AcaiEngine(runner="thread", workroot=str(tmp_path),
+                     quota_k=100)
+    h1 = eng.submit(JobSpec(name="flaky", project="p", user="u", fn=flaky,
+                            retry=RetryPolicy(max_retries=2,
+                                              backoff_base=0.0)))
+    h2 = eng.submit(JobSpec(name="fatal", project="p", user="u", fn=fatal,
+                            retry=RetryPolicy(max_retries=2,
+                                              backoff_base=0.0)))
+    assert h1.wait(timeout=30.0) is JobState.FINISHED
+    assert h2.wait(timeout=30.0) is JobState.FAILED
+    assert eng.registry.get(h1.job_id).retries == 1
+    assert flaky_calls["n"] == 2
+    assert eng.registry.get(h2.job_id).retries == 0     # fatal: no retry
+    assert "real bug" in eng.registry.get(h2.job_id).error
+
+
+def test_worker_marks_transient_by_class_name(tmp_path):
+    """The subprocess worker classifies by MRO class name (it must not
+    import the engine stack): a TransientJobError subclass raised by job
+    code stamps ``transient`` on the durable result record."""
+    from repro.core.engine.durable.worker import _Worker
+    w = _Worker(tmp_path / "w")
+    w._run_job({"job": "job-t", "epoch": 0,
+                "fn": f"{__name__}:_raise_transient",
+                "name": "t", "args": {},
+                "workdir": str(tmp_path / "jobs" / "t")})
+    w._run_job({"job": "job-f", "epoch": 0,
+                "fn": f"{__name__}:_raise_fatal",
+                "name": "f", "args": {},
+                "workdir": str(tmp_path / "jobs" / "f")})
+    assert w._done["job-t"]["status"] == "FAILED"
+    assert w._done["job-t"].get("transient") is True
+    assert w._done["job-f"]["status"] == "FAILED"
+    assert "transient" not in w._done["job-f"]
+
+
+def _raise_transient(workdir, job):
+    raise TransientJobError("flaky shard")
+
+
+def _raise_fatal(workdir, job):
+    raise RuntimeError("deterministic bug")
+
+
+# -- durability: retry state survives a restart --------------------------
+def test_retry_counters_survive_recovery(tmp_path):
+    eng = AcaiEngine(durable=tmp_path / "s", virtual=True,
+                     pricing=CPU_PRICING, cluster_nodes=1, quota_k=100)
+    h = eng.submit(JobSpec(name="r", project="p", user="u", duration=20.0,
+                           resources={"vcpu": 4.0, "mem_mb": 512.0},
+                           retry=RetryPolicy(max_retries=3,
+                                             backoff_base=500.0)))
+    job = eng.registry.get(h.job_id)
+    assert job.state is JobState.RUNNING
+    eng.scheduler.launcher.advance_to(5.0)
+    assert eng.scheduler.launcher.fail_running(job, "node blip",
+                                               transient=True)
+    assert job.state is JobState.QUEUED and job.retries == 1
+    eng.store.close()       # crash while held in backoff
+
+    eng2 = AcaiEngine(durable=tmp_path / "s", virtual=True,
+                      pricing=CPU_PRICING, cluster_nodes=1, quota_k=100)
+    job2 = eng2.registry.get(h.job_id)
+    # the journaled retry record survived: no fresh budget post-crash
+    assert job2.retries == 1
+    assert job2.spec.retry.max_retries == 3     # spec round-trips
+    launcher = eng2.scheduler.launcher
+    while launcher.pending():       # backoff holds are forgiven across
+        launcher.step()             # restart: it re-queued immediately
+    assert eng2.registry.get(h.job_id).state is JobState.FINISHED
+
+
+def test_quarantine_survives_recovery(tmp_path):
+    eng = AcaiEngine(durable=tmp_path / "s", virtual=True,
+                     pricing=CPU_PRICING, cluster_nodes=1, quota_k=100,
+                     quarantine_threshold=2)
+    h = eng.submit(JobSpec(name="loop", project="p", user="u",
+                           duration=20.0,
+                           resources={"vcpu": 4.0, "mem_mb": 512.0},
+                           retry=RetryPolicy(max_retries=10,
+                                             backoff_base=0.0,
+                                             retry_on="any")))
+    job = eng.registry.get(h.job_id)
+    assert eng.scheduler.launcher.fail_running(job, "bug", transient=False)
+    assert job.state is JobState.RUNNING        # one retry granted
+    assert eng.scheduler.launcher.fail_running(job, "bug", transient=False)
+    assert job.state is JobState.QUARANTINED
+    eng.store.close()
+
+    eng2 = AcaiEngine(durable=tmp_path / "s", virtual=True,
+                      pricing=CPU_PRICING, cluster_nodes=1, quota_k=100,
+                      quarantine_threshold=2)
+    job2 = eng2.registry.get(h.job_id)
+    assert job2.state is JobState.QUARANTINED   # adopted as terminal,
+    assert eng2.recovery.requeued == 0          # never re-run
+    assert "quarantined" in job2.error
