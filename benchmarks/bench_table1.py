@@ -42,7 +42,7 @@ def _mlp_job(epochs: int, hidden: int, batch: int, *, steps_per_epoch=30,
     w1, w2 = step(w1, w2, x[:batch], y[:batch])
     jax.block_until_ready(w1)
     t0 = time.perf_counter()
-    for e in range(epochs):
+    for _ in range(epochs):
         for s in range(steps_per_epoch):
             lo = s * batch
             w1, w2 = step(w1, w2, x[lo:lo + batch], y[lo:lo + batch])

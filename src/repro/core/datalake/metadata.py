@@ -120,14 +120,14 @@ class MetadataStore:
     def find_max(self, key: str, **conditions: Any) -> Optional[str]:
         ids = set(self.find(**conditions))
         idx = self._index.get(key, [])
-        for value, aid in reversed(idx):
+        for _value, aid in reversed(idx):
             if aid in ids:
                 return aid
         return None
 
     def find_min(self, key: str, **conditions: Any) -> Optional[str]:
         ids = set(self.find(**conditions))
-        for value, aid in self._index.get(key, []):
+        for _value, aid in self._index.get(key, []):
             if aid in ids:
                 return aid
         return None

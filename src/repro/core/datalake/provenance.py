@@ -116,7 +116,7 @@ class ProvenanceGraph:
         anc = set(self.ancestors(fileset_ref)) | {fileset_ref}
         sub = self.g.subgraph(anc)
         jobs = []
-        for u, v, d in sub.edges(data=True):
+        for _u, _v, d in sub.edges(data=True):
             if d.get("action") == "job":
                 jobs.append(d["job_id"])
         return jobs

@@ -51,20 +51,24 @@ class Cluster:
         self.reclaim_rate = reclaim_rate
         self.capacity = {k: float(v) for k, v in capacity.items()}
         self.defaults = dict(defaults or {})
+        # ``used``/``capacity`` are read lock-free by scheduler hot paths
+        # (dashboards, snapshots) — a torn read there is a stale gauge,
+        # not a correctness bug — so they deliberately carry no
+        # guarded-by annotation; every *write* still happens under _lock
         self.used: dict[str, float] = {k: 0.0 for k in self.capacity}
-        self._held: dict[str, dict[str, float]] = {}   # job_id -> resources
+        self._held: dict[str, dict[str, float]] = {}  # guarded-by: _lock
         # gang holds: job_id -> (per-pod charge, pod count). The aggregate
         # (n_pods x per-pod) also lives in ``_held`` so release/settle paths
         # need no gang awareness; this record is what makes a shrink-to-k
         # resize and partial-hold audits possible.
-        self._gangs: dict[str, tuple[dict[str, float], int]] = {}
+        self._gangs: dict[str, tuple[dict[str, float], int]] = {}  # guarded-by: _lock
         # node-granular accounting (opt in): a pool built from whole nodes
         # of ``node_shape`` tracks per-node free vectors so a gang's pods
         # must each pack onto SOME node, not merely fit the pool aggregate.
         # job_id -> [(node_idx, per-pod charge), ...]
         self.node_shape = dict(node_shape) if node_shape else None
-        self._node_free: list[dict[str, float]] = []
-        self._node_holds: dict[str, list[tuple[int, dict[str, float]]]] = {}
+        self._node_free: list[dict[str, float]] = []  # guarded-by: _lock
+        self._node_holds: dict[str, list[tuple[int, dict[str, float]]]] = {}  # guarded-by: _lock
         if self.node_shape:
             self._node_free = [dict(self.node_shape)
                                for _ in range(self._target_nodes())]
@@ -72,8 +76,9 @@ class Cluster:
         # excluded from packing and their shape is subtracted from the
         # aggregate capacity; residents of a *failed* node are handed to
         # the caller to kill/retry, residents of a *drained* node finish
-        # naturally (the pool runs over-committed meanwhile)
-        self._down: dict[int, str] = {}   # node_idx -> "failed"|"drained"
+        # naturally (the pool runs over-committed meanwhile).
+        # node_idx -> "failed" | "drained"
+        self._down: dict[int, str] = {}  # guarded-by: _lock
         # topology: how many gang pods this pool can host "close" (one
         # interconnect island). None = unconstrained; the placement layer
         # penalizes (not rejects) close-topology gangs that exceed it.
@@ -165,21 +170,24 @@ class Cluster:
                    n_pods: int) -> Optional[list[int]]:
         """First-fit node indices for ``n_pods`` pods of shape ``pod``
         against the current free vectors — or None if they cannot all be
-        placed. Pure planning: mutates nothing. Caller holds the lock."""
-        shadow = [dict(f) for f in self._node_free]
-        picked: list[int] = []
-        for _ in range(n_pods):
-            for i, free in enumerate(shadow):
-                if i in self._down:
-                    continue        # dead/draining node: never packable
-                if self._node_fits(free, pod):
-                    for n, amt in pod.items():
-                        free[n] = free.get(n, 0.0) - amt
-                    picked.append(i)
-                    break
-            else:
-                return None
-        return picked
+        placed. Pure planning: mutates nothing. Callers already hold the
+        lock; re-entering the RLock here keeps the free-vector read
+        atomic even for a future caller that does not."""
+        with self._lock:
+            shadow = [dict(f) for f in self._node_free]
+            picked: list[int] = []
+            for _ in range(n_pods):
+                for i, free in enumerate(shadow):
+                    if i in self._down:
+                        continue    # dead/draining node: never packable
+                    if self._node_fits(free, pod):
+                        for n, amt in pod.items():
+                            free[n] = free.get(n, 0.0) - amt
+                        picked.append(i)
+                        break
+                else:
+                    return None
+            return picked
 
     def can_pack(self, per_pod: Optional[dict[str, Any]],
                  n_pods: int) -> bool:

@@ -152,12 +152,15 @@ def scheduler_page(scheduler, monitor=None) -> str:
             lines.append(f"snapshots={s['snapshots']} "
                          f"coalesced={s['snapshots_skipped']} "
                          f"(interval={scheduler.snapshot_interval:g}s)")
-    if monitor is not None and monitor.cluster_samples:
-        peak = monitor.peak_utilization()
-        mean = monitor.mean_utilization()
-        for dim in peak:
-            lines.append(f"utilization.{dim}: mean={_pct(mean[dim])} "
-                         f"peak={_pct(peak[dim])}")
+    if monitor is not None:
+        # one locked snapshot: peak and mean must come from the same
+        # ingest point, not interleave with a concurrent sample
+        has_samples, peak, mean = monitor.utilization_summary()
+        if has_samples:
+            for dim in peak:
+                lines.append(f"utilization.{dim}: "
+                             f"mean={_pct(mean.get(dim, 0.0))} "
+                             f"peak={_pct(peak[dim])}")
     return "\n".join(lines)
 
 

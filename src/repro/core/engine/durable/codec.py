@@ -206,6 +206,34 @@ def decode_job(doc: dict) -> Job:
     return job
 
 
+# -- FaultPlan -----------------------------------------------------------
+def encode_fault_plan(plan) -> Optional[dict]:
+    if plan is None:
+        return None
+    return {"seed": plan.seed,
+            "node_mtbf_s": plan.node_mtbf_s,
+            "transient_mtbf_s": plan.transient_mtbf_s,
+            "straggler_mtbf_s": plan.straggler_mtbf_s,
+            "straggler_factor": plan.straggler_factor,
+            "start": plan.start,
+            "max_node_failures": plan.max_node_failures}
+
+
+def decode_fault_plan(doc: Optional[dict]):
+    if doc is None:
+        return None
+    from repro.core.engine.faults import FaultPlan
+    mnf = doc.get("max_node_failures")
+    return FaultPlan(
+        seed=int(doc.get("seed", 0)),
+        node_mtbf_s=doc.get("node_mtbf_s"),
+        transient_mtbf_s=doc.get("transient_mtbf_s"),
+        straggler_mtbf_s=doc.get("straggler_mtbf_s"),
+        straggler_factor=float(doc.get("straggler_factor", 4.0)),
+        start=float(doc.get("start", 0.0)),
+        max_node_failures=int(mnf) if mnf is not None else None)
+
+
 # -- TransferCostModel ---------------------------------------------------
 def encode_transfer_costs(model) -> dict:
     """Flatten a ``TransferCostModel``: the pair table is keyed by

@@ -227,14 +227,14 @@ def recover(engine) -> RecoveryReport:
                 job.state = JobState.RUNNING
             if apply_fn(job, msg, publish=False):
                 report.worker_results += 1
-                engine.monitor.status[job.job_id] = job.state.value
+                engine.monitor.record_status(job.job_id, job.state.value)
         restore = getattr(launcher, "restore_progress", None)
         for doc in order:
             job = registry.get(doc["job_id"])
             if job.state in TERMINAL_STATES:
                 report.terminal += 1
-                engine.monitor.status.setdefault(job.job_id,
-                                                 job.state.value)
+                engine.monitor.record_status(job.job_id, job.state.value,
+                                             overwrite=False)
                 continue
             if inflight.get(job.job_id) == job.epoch and \
                     job.state in (JobState.RUNNING, JobState.LAUNCHING):

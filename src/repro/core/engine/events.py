@@ -39,11 +39,14 @@ class EventBus:
         message to ``stream`` — the Redis-stream half of the paper's bus:
         a fresh process (CLI ``status``/``logs``) reads the stream
         instead of needing to have been subscribed when events fired."""
-        self._subs: dict[str, list[Callable[[dict], None]]] = defaultdict(list)
+        self._subs: dict[str, list[Callable[[dict], None]]] = defaultdict(list)  # guarded-by: _lock
         self.history: deque[tuple[str, dict]] = deque(maxlen=history_limit)
         self._store = store
         self._stream = stream
-        self._lock = threading.RLock()
+        # handlers are invoked OUTSIDE this lock (they take their own —
+        # holding it across them inverts lock order), hence no bare
+        # calls and no nested publish under it
+        self._lock = threading.RLock()  # acailint: lock(forbid: bare-calls, publish)
 
     def subscribe(self, topic: str, fn: Callable[[dict], None]) -> None:
         with self._lock:

@@ -116,7 +116,7 @@ class Runner:
         estimate must therefore be available synchronously at launch (the
         virtual runner schedules the completion inside ``launch``) and
         stay fixed for the life of the job."""
-        return None
+        return
 
     # Runners that can deliver a checkpoint signal to a RUNNING job
     # implement ``preempt(job) -> bool`` (True = signal delivered, the
@@ -564,12 +564,14 @@ class VirtualRunner(Runner):
             self._done_frac.pop(job_id, None)
             self._ckpt_mark.pop(job_id, None)
             job = self.registry.get(job_id)
-            # no epoch stamp needed here: stale incarnations were already
-            # filtered by the seq check above, so every published event
-            # is for the job's current epoch
+            # the seq check already filtered stale incarnations, but the
+            # published events still carry the epoch stamp: handlers
+            # (and replayed histories) must be able to judge staleness
+            # without knowing this runner's private seq bookkeeping
             if job.state == JobState.KILLED:
                 self.bus.publish(TOPIC_CONTAINER_STATUS,
-                                 {"job_id": job_id, "status": "KILLED"})
+                                 {"job_id": job_id, "status": "KILLED",
+                                  "epoch": job.epoch})
                 return job_id
             job.runtime = dur
             pricing = resolve_pricing(self.pricing, job)
@@ -578,9 +580,11 @@ class VirtualRunner(Runner):
                 job.cost = (job.cost or 0.0) + \
                     pricing.job_cost(job.spec.resources, dur) * \
                     _gang_width(job)
-            self.registry.set_state(job_id, JobState.FINISHED)
+            self.registry.set_state(job_id, JobState.FINISHED,
+                                    expect_epoch=job.epoch)
             self.bus.publish(TOPIC_CONTAINER_STATUS,
-                             {"job_id": job_id, "status": "FINISHED"})
+                             {"job_id": job_id, "status": "FINISHED",
+                              "epoch": job.epoch})
             return job_id
         return None
 

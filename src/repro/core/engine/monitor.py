@@ -23,10 +23,10 @@ class JobMonitor:
         # monitor subscribed (recovered engine, cross-process handle)
         # still resolves instead of hanging its waiters
         self.registry = registry
-        self.status: dict[str, str] = {}
-        self.stage: dict[str, str] = {}
-        self.events: dict[str, list[dict]] = defaultdict(list)
-        self.cluster_samples: list[dict] = []
+        self.status: dict[str, str] = {}  # guarded-by: _lock
+        self.stage: dict[str, str] = {}  # guarded-by: _lock
+        self.events: dict[str, list[dict]] = defaultdict(list)  # guarded-by: _lock
+        self.cluster_samples: list[dict] = []  # guarded-by: _lock
         self.max_samples = max_samples
         # running aggregates at ingest: the sample buffer is trimmed, so
         # peak/mean must not be recomputed from it. samples_seen counts
@@ -34,13 +34,21 @@ class JobMonitor:
         # behind a change gate + snapshot_interval, so cadence is a
         # deployment knob worth observing), and last_sample_at is the
         # runner-clock time of the freshest one
-        self._peak: dict[str, float] = {}
-        self._util_sum: dict[str, float] = defaultdict(float)
-        self._util_n = 0
-        self.samples_seen = 0
-        self.last_sample_at: Optional[float] = None
+        self._peak: dict[str, float] = {}  # guarded-by: _lock
+        self._util_sum: dict[str, float] = defaultdict(float)  # guarded-by: _lock
+        self._util_n = 0  # guarded-by: _lock
+        self.samples_seen = 0  # guarded-by: _lock
+        self.last_sample_at: Optional[float] = None  # guarded-by: _lock
+        # handlers run on whichever thread publishes (worker finalize,
+        # virtual-clock step, scheduler snapshot), so every mutable map
+        # and aggregate above is guarded; never publish from under it —
+        # the bus is synchronous and would re-enter the handlers
+        self._lock = threading.RLock()  # acailint: lock(forbid: publish)
         # JobHandle.wait blocks on this instead of polling: any terminal
-        # container_status wakes every waiter, each re-checks its own job
+        # container_status wakes every waiter, each re-checks its own
+        # job. Lock order: _lock may be taken under the cv (the wait
+        # predicate), so notifiers must NEVER hold _lock when taking the
+        # cv — release first, then notify
         self._terminal_cv = threading.Condition()
         bus.subscribe(TOPIC_CONTAINER_STATUS, self._on_status)
         bus.subscribe(TOPIC_JOB_PROGRESS, self._on_progress)
@@ -48,33 +56,52 @@ class JobMonitor:
 
     def _on_status(self, msg: dict) -> None:
         status = msg.get("status", "")
-        if status in _TERMINAL_STATUS and self.registry is not None:
-            # handlers run in subscription order: the scheduler (first)
-            # may have already retried this FAILED incarnation — the
-            # registry epoch moved past the message's, so caching the
-            # terminal here would wake waiters on a job that is alive
-            # again. Keep the event for watch(), drop the status.
-            try:
-                job = self.registry.get(msg["job_id"])
-            except KeyError:
-                job = None
-            if job is not None and \
-                    int(msg.get("epoch", job.epoch)) < job.epoch:
-                self.events[msg["job_id"]].append(msg)
-                return
-            if job is not None:
-                # accepted terminal: the retry decision (if any) is made
-                # — backstop for engines with no scheduler subscribed
-                job.retry_pending = False
-        self.status[msg["job_id"]] = status
-        self.events[msg["job_id"]].append(msg)
-        if status in _TERMINAL_STATUS:
+        terminal = status in _TERMINAL_STATUS
+        with self._lock:
+            if terminal and self.registry is not None:
+                # handlers run in subscription order: the scheduler
+                # (first) may have already retried this FAILED
+                # incarnation — the registry epoch moved past the
+                # message's, so caching the terminal here would wake
+                # waiters on a job that is alive again. Keep the event
+                # for watch(), drop the status.
+                try:
+                    job = self.registry.get(msg["job_id"])
+                except KeyError:
+                    job = None
+                if job is not None and \
+                        int(msg.get("epoch", job.epoch)) < job.epoch:
+                    self.events[msg["job_id"]].append(msg)
+                    return
+                if job is not None:
+                    # accepted terminal: the retry decision (if any) is
+                    # made — backstop for engines with no scheduler
+                    # subscribed
+                    job.retry_pending = False
+            self.status[msg["job_id"]] = status
+            self.events[msg["job_id"]].append(msg)
+        # notify with _lock released: the wait predicate takes _lock
+        # under the cv, so notifying while holding _lock would deadlock
+        if terminal:
             with self._terminal_cv:
                 self._terminal_cv.notify_all()
 
+    def record_status(self, job_id: str, status: str,
+                      overwrite: bool = True) -> None:
+        """Seed the cached status map directly (crash recovery replays
+        terminal outcomes before any bus traffic exists). With
+        ``overwrite=False`` an already-cached status wins — the replay
+        of older records must not clobber a fresher worker result."""
+        with self._lock:
+            if overwrite:
+                self.status[job_id] = status
+            else:
+                self.status.setdefault(job_id, status)
+
     def is_terminal(self, job_id: str) -> bool:
-        if self.status.get(job_id, "") in _TERMINAL_STATUS:
-            return True
+        with self._lock:
+            if self.status.get(job_id, "") in _TERMINAL_STATUS:
+                return True
         if self.registry is not None:
             try:
                 job = self.registry.get(job_id)
@@ -84,7 +111,8 @@ class JobMonitor:
             if state in _TERMINAL_STATUS and not job.retry_pending:
                 # cache it so the wait predicate stays cheap and watch()
                 # consumers see a consistent status map
-                self.status.setdefault(job_id, state)
+                with self._lock:
+                    self.status.setdefault(job_id, state)
                 return True
         return False
 
@@ -98,42 +126,62 @@ class JobMonitor:
                 lambda: self.is_terminal(job_id), timeout)
 
     def _on_progress(self, msg: dict) -> None:
-        self.stage[msg["job_id"]] = msg.get("stage", "")
-        self.events[msg["job_id"]].append(msg)
+        with self._lock:
+            self.stage[msg["job_id"]] = msg.get("stage", "")
+            self.events[msg["job_id"]].append(msg)
 
     def _on_scheduler(self, msg: dict) -> None:
-        self.cluster_samples.append(msg)
-        self.samples_seen += 1
-        self.last_sample_at = msg.get("now", self.last_sample_at)
-        util = msg.get("utilization", {})
-        if util:
-            self._util_n += 1
-            for dim, u in util.items():
-                self._peak[dim] = max(self._peak.get(dim, 0.0), u)
-                self._util_sum[dim] += u
-        if len(self.cluster_samples) > self.max_samples:
-            del self.cluster_samples[:len(self.cluster_samples) // 2]
+        with self._lock:
+            self.cluster_samples.append(msg)
+            self.samples_seen += 1
+            self.last_sample_at = msg.get("now", self.last_sample_at)
+            util = msg.get("utilization", {})
+            if util:
+                self._util_n += 1
+                for dim, u in util.items():
+                    self._peak[dim] = max(self._peak.get(dim, 0.0), u)
+                    self._util_sum[dim] += u
+            if len(self.cluster_samples) > self.max_samples:
+                del self.cluster_samples[:len(self.cluster_samples) // 2]
 
     def watch(self, job_id: str) -> list[dict]:
-        return list(self.events[job_id])
+        with self._lock:
+            return list(self.events[job_id])
 
     # -- utilization over (virtual) time --------------------------------
     def peak_utilization(self) -> dict[str, float]:
-        return dict(self._peak)
+        with self._lock:
+            return dict(self._peak)
 
     def mean_utilization(self) -> dict[str, float]:
-        if not self._util_n:
-            return {}
-        return {d: v / self._util_n for d, v in self._util_sum.items()}
+        with self._lock:
+            if not self._util_n:
+                return {}
+            return {d: v / self._util_n
+                    for d, v in self._util_sum.items()}
+
+    def utilization_summary(self) -> tuple[bool, dict[str, float],
+                                           dict[str, float]]:
+        """``(has samples, peak, mean)`` in one lock hold, so both
+        aggregates come from the same ingest point — the dashboard must
+        not interleave its reads with a concurrent ``_on_scheduler``."""
+        with self._lock:
+            has = bool(self.cluster_samples)
+            peak = dict(self._peak)
+            mean = {} if not self._util_n else \
+                {d: v / self._util_n for d, v in self._util_sum.items()}
+        return has, peak, mean
 
     def utilization_by_pool(self) -> dict[str, dict[str, dict[str, float]]]:
         """``{pool: {dim: {"mean": m, "peak": p}}}`` — multi-pool
         snapshots namespace utilization keys as ``"<pool>/<dim>"``; flat
         keys (single default pool) land under ``"default"``."""
-        mean = self.mean_utilization()
-        out: dict[str, dict[str, dict[str, float]]] = {}
-        for key, peak in self._peak.items():
-            pool, _, dim = key.rpartition("/")
-            out.setdefault(pool or "default", {})[dim or key] = {
-                "mean": mean.get(key, 0.0), "peak": peak}
-        return out
+        with self._lock:
+            mean = {} if not self._util_n else \
+                {d: v / self._util_n for d, v in self._util_sum.items()}
+            out: dict[str, dict[str, dict[str, float]]] = {}
+            for key, peak in self._peak.items():
+                pool, _, dim = key.rpartition("/")
+                out.setdefault(pool or "default", {})[dim or key] = {
+                    "mean": mean.get(key, 0.0), "peak": peak}
+            return out

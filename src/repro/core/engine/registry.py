@@ -134,7 +134,7 @@ class Job:
     # polls it and raises JobPreempted to yield at a checkpoint)
     epoch: int = 0
     preemptions: int = 0
-    preempt_flag: Any = dataclasses.field(default=None, repr=False,
+    preempt_flag: Any = dataclasses.field(default=None, repr=False,  # acailint: runtime-only
                                           compare=False)
     # live gang width: set at launch (spec.gang.n_pods) and lowered by an
     # elastic shrink-to-k resize; None for ordinary single-pod jobs. The
@@ -152,7 +152,7 @@ class Job:
     # must not treat FAILED as terminal while it is up — the job may be
     # reborn as a new epoch a moment later. In-memory only: never
     # journaled, defaults down on recovery.
-    retry_pending: bool = dataclasses.field(default=False, repr=False,
+    retry_pending: bool = dataclasses.field(default=False, repr=False,  # acailint: runtime-only
                                             compare=False)
 
     @property
@@ -162,14 +162,17 @@ class Job:
 
 class JobRegistry:
     def __init__(self, metadata=None, journal=None):
-        self._jobs: dict[str, Job] = {}
-        self._ctr = 0
+        self._jobs: dict[str, Job] = {}  # guarded-by: _lock
+        self._ctr = 0  # guarded-by: _lock
         self.metadata = metadata
         # optional write-ahead journal (durable control plane): every
         # state-changing commit records through it while still holding
         # the registry lock, so journal order matches commit order
         self.journal = journal
-        self._lock = threading.RLock()
+        # journaling happens inside this lock (order == commit order),
+        # but bus publishes, metadata-store writes and runner launches
+        # must not — they nest foreign locks/IO under the registry lock
+        self._lock = threading.RLock()  # acailint: lock(forbid: publish, metadata, launch)
         if metadata is not None:
             # resume the id counter past persisted jobs so a restarted
             # engine (e.g. a new CLI invocation over the same root) never
@@ -202,14 +205,36 @@ class JobRegistry:
 
     def adopt(self, job: Job) -> None:
         """Install a job rebuilt from the durable store (crash recovery):
-        no transition checks, no journaling, no metadata registration —
-        the job is already history, not a new submission. The id counter
-        advances past it so post-recovery submits never reuse its id."""
+        no transition checks, no metadata registration — the job is
+        already history, not a new submission. The id counter advances
+        past it so post-recovery submits never reuse its id. The install
+        is journaled like any other durable mutation; recovery wraps the
+        rebuild in ``journal.paused()``, so replay never double-records,
+        while an adoption outside recovery survives the next crash."""
         with self._lock:
             self._jobs[job.job_id] = job
             m = re.fullmatch(r"job-(\d+)", job.job_id)
             if m:
                 self._ctr = max(self._ctr, int(m.group(1)))
+            if self.journal is not None:
+                self.journal.job_submitted(job)
+                self.journal.job_state(job)
+
+    def force_state(self, job_id: str, new: JobState) -> Job:
+        """Privileged reassignment: install ``new`` without consulting
+        the transition table. Reserved for reattachment paths (e.g. the
+        scheduler adopting an already-RUNNING job after recovery) where
+        the job's true state is externally known rather than derived by
+        an edge. Journaled like any transition so the durable story
+        stays complete."""
+        with self._lock:
+            job = self._jobs[job_id]
+            job.state = new
+            if new == JobState.RUNNING and job.started_at is None:
+                job.started_at = time.time()
+            if self.journal is not None:
+                self.journal.job_state(job)
+            return job
 
     def set_state(self, job_id: str, new: JobState,
                   error: Optional[str] = None,

@@ -733,6 +733,11 @@ class Scheduler:
             self._prio_of[jid] = job.spec.priority
             self._job_of[jid] = job
             self._active[key].add(jid)
+            self._started_at[jid] = self._now()
+            # privileged reassignment: the job's true state is externally
+            # known (its worker is still executing), not derived by an
+            # edge — the registry journals it like any transition
+            self.registry.force_state(jid, JobState.RUNNING)
             if job.pool is not None:
                 cl = self.pools.get(job.pool)
                 if cl is None:
@@ -746,13 +751,13 @@ class Scheduler:
                         # (pool=None, so settle releases nothing) rather
                         # than kill work that is already executing
                         job.pool = None
-            now = self._now()
-            self._started_at[jid] = now
+                    except Exception:
+                        cl.release(jid)
+                        raise
             if job.pool is not None:
                 self._unknown_ends[job.pool] = \
                     self._unknown_ends.get(job.pool, 0) + 1
                 self._end_key[jid] = (job.pool, None)
-            job.state = JobState.RUNNING
             self._dirty_full = True
             self._state_rev += 1
 
@@ -1040,7 +1045,11 @@ class Scheduler:
             self._unhold(job_id)
             self._backoff.pop(job_id, None)
             self._active[key].discard(job_id)
-            self.registry.set_state(job_id, JobState.KILLED)
+            # epoch read + terminal write both happen under this lock
+            # (every epoch bump is lock-ordered behind it), so the guard
+            # pins "kill this incarnation" even against a racing retry
+            self.registry.set_state(job_id, JobState.KILLED,
+                                    expect_epoch=job.epoch)
             if launched:
                 # the runner publishes the terminal event when the job
                 # actually stops (virtual-clock pop / worker finalize);
@@ -1053,7 +1062,8 @@ class Scheduler:
                 # observe the kill (the handler settles + dispatches)
                 self.registry.persist_state(job_id)
                 self.bus.publish(TOPIC_CONTAINER_STATUS,
-                                 {"job_id": job_id, "status": "KILLED"})
+                                 {"job_id": job_id, "status": "KILLED",
+                                  "epoch": job.epoch})
 
     # -- checkpoint-aware preemption ------------------------------------
     def preempt(self, job_id: str) -> bool:
@@ -1414,7 +1424,8 @@ class Scheduler:
             self.registry.set_state(
                 jid, JobState.QUARANTINED,
                 error=(f"quarantined after {streak} consecutive "
-                       f"failures: {msg.get('error') or job.error}"))
+                       f"failures: {msg.get('error') or job.error}"),
+                expect_epoch=job.epoch)
             self.registry.persist_state(jid)
             self.stats["quarantined"] += 1
             return False
@@ -1528,14 +1539,16 @@ class Scheduler:
     def _upstream_fail(self, job_id: str, parent_id: str) -> None:
         """Cascade-cancel a never-launched job whose parent did not
         finish; the published event propagates the cascade transitively."""
+        job = self.registry.get(job_id)
         self.registry.set_state(
             job_id, JobState.UPSTREAM_FAILED,
-            error=f"upstream job {parent_id} did not finish")
+            error=f"upstream job {parent_id} did not finish",
+            expect_epoch=job.epoch)
         self.registry.persist_state(job_id)
         self._state_rev += 1
         self.bus.publish(TOPIC_CONTAINER_STATUS,
                          {"job_id": job_id, "status": "UPSTREAM_FAILED",
-                          "upstream": parent_id})
+                          "upstream": parent_id, "epoch": job.epoch})
 
     def _release_dependents(self, parent_id: str, status: str) -> None:
         """On a parent's terminal event: enqueue held children whose last
@@ -2074,16 +2087,18 @@ class Scheduler:
                                   (row[0], share, row[1]))
                         if r == 1:
                             launched = True
-                        elif r == 4:
+                            continue
+                        if r == 4:
                             fit_rejects += 1
-                        elif r == -1:
+                            continue
+                        if r == -1:
                             launched = True
                             stop = True
                             break
-                        elif r == -2:
+                        if r == -2:
                             stop = True
                             break
-                        elif quota_used.get(key, 0) >= quota_k:
+                        if quota_used.get(key, 0) >= quota_k:
                             break
                         continue
                     # inlined _visit hot path (same decisions, no call /
@@ -2186,12 +2201,14 @@ class Scheduler:
                       None if fifo else (row[0], share, row[1]))
             if r == 1:
                 launched = True
-            elif r == 4:
+                continue
+            if r == 4:
                 fit_rejects += 1
-            elif r == -1:
+                continue
+            if r == -1:
                 launched = True
                 break
-            elif r == -2:
+            if r == -2:
                 break           # convoy: strict order blocks the rest
         if not launched:
             # record the futile certificate: which pools got blocked
@@ -2206,55 +2223,100 @@ class Scheduler:
         self._remove_queued(key, jid)
         self._active[key].add(jid)
         reserved = None
+        try:
+            if pool is not None:
+                opt = self._opts_of[jid][pool]
+                cl = self.pools[pool]
+                if opt.pods > 1 or \
+                        getattr(cl, "node_shape", None) is not None:
+                    # gangs reserve atomically (all pods or none); on a
+                    # node-shaped pool even single jobs go through the
+                    # node packer so the per-node books stay consistent
+                    reserved = cl.reserve_gang(jid, opt.resources,
+                                               opt.pods)
+                    job.gang_pods = opt.pods if opt.pods > 1 else None
+                else:
+                    reserved = cl.reserve(jid, opt.resources)
+                job.pool = pool
+                # pin the concrete shape the job got (a per-pool menu
+                # entry), so runner billing and observers see what was
+                # allocated
+                job.spec.resources = dict(opt.resources)
+                self.stats["placed_by_pool"][pool] += 1
+            if now is None:
+                now = self._now()
+            self._started_at[jid] = now
+            t_s = getattr(job.spec, "timeout_s", None)
+            if t_s is not None:
+                # per-incarnation runtime limit: stamped with this epoch
+                # so a retry/preempt relaunch gets its own fresh timer
+                # and the old one expires as a no-op
+                heapq.heappush(self._timers,
+                               (now + t_s, 0, jid, job.epoch))
+            wait = now - self._queued_at.pop(jid, now)
+            self.stats["launched"] += 1
+            self.stats["wait_count"] += 1
+            self.stats["wait_sum"] += wait
+            by_key = self.stats["wait_by_key"][key]
+            by_key[0] += 1
+            by_key[1] += wait
+            self.registry.set_state(jid, JobState.LAUNCHING)
+            self.launcher.launch(job)
+            # feed the pool's incremental shadow state with the runner's
+            # expected completion — available only after launch. A runner
+            # that completed the job synchronously already settled it
+            # (the nested event popped _started_at), so there is nothing
+            # to track.
+            if pool is not None and jid in self._started_at:
+                end = self.launcher.expected_end(jid) \
+                    if self._has_end else None
+                if end is None:
+                    self._unknown_ends[pool] = \
+                        self._unknown_ends.get(pool, 0) + 1
+                    self._end_key[jid] = (pool, None)
+                else:
+                    self._lseq += 1
+                    insort(self._pool_ends.setdefault(pool, []),
+                           (end, self._lseq, jid, reserved))
+                    self._end_key[jid] = (pool, (end, self._lseq))
+        except Exception as exc:
+            self._abort_launch(key, jid, job, pool, exc)
+            raise
+
+    def _abort_launch(self, key: tuple, job_id: str, job: Job,
+                      pool: Optional[str], exc: BaseException) -> None:
+        """Unwind a launch that raised partway: hand back the
+        reservation (idempotent — a no-op when reserve itself was what
+        raised), drop the half-made bookkeeping, and terminal-ize the
+        job as FAILED so it cannot strand in LAUNCHING while holding
+        nothing. The caller re-raises; this only restores the books."""
         if pool is not None:
-            opt = self._opts_of[jid][pool]
-            cl = self.pools[pool]
-            if opt.pods > 1 or getattr(cl, "node_shape", None) is not None:
-                # gangs reserve atomically (all pods or none); on a
-                # node-shaped pool even single jobs go through the node
-                # packer so the per-node books stay consistent
-                reserved = cl.reserve_gang(jid, opt.resources, opt.pods)
-                job.gang_pods = opt.pods if opt.pods > 1 else None
-            else:
-                reserved = cl.reserve(jid, opt.resources)
-            job.pool = pool
-            # pin the concrete shape the job got (a per-pool menu entry),
-            # so runner billing and observers see what was allocated
-            job.spec.resources = dict(opt.resources)
-            self.stats["placed_by_pool"][pool] += 1
-        if now is None:
-            now = self._now()
-        self._started_at[jid] = now
-        t_s = getattr(job.spec, "timeout_s", None)
-        if t_s is not None:
-            # per-incarnation runtime limit: stamped with this epoch so a
-            # retry/preempt relaunch gets its own fresh timer and the old
-            # one expires as a no-op
-            heapq.heappush(self._timers, (now + t_s, 0, jid, job.epoch))
-        wait = now - self._queued_at.pop(jid, now)
-        self.stats["launched"] += 1
-        self.stats["wait_count"] += 1
-        self.stats["wait_sum"] += wait
-        by_key = self.stats["wait_by_key"][key]
-        by_key[0] += 1
-        by_key[1] += wait
-        self.registry.set_state(jid, JobState.LAUNCHING)
-        self.launcher.launch(job)
-        # feed the pool's incremental shadow state with the runner's
-        # expected completion — available only after launch. A runner that
-        # completed the job synchronously already settled it (the nested
-        # event popped _started_at), so there is nothing to track.
-        if pool is not None and jid in self._started_at:
-            end = self.launcher.expected_end(jid) if self._has_end else None
-            if end is None:
-                self._unknown_ends[pool] = \
-                    self._unknown_ends.get(pool, 0) + 1
-                self._end_key[jid] = (pool, None)
-            else:
-                self._lseq += 1
-                insort(self._pool_ends.setdefault(pool, []),
-                       (end, self._lseq, jid, reserved))
-                self._end_key[jid] = (pool, (end, self._lseq))
+            cl = self.pools.get(pool)
+            if cl is not None:
+                cl.release(job_id)
+        job.pool = None
+        job.gang_pods = None
+        self._active[key].discard(job_id)
+        self._started_at.pop(job_id, None)
+        self._drop_shadow(job_id)
+        failed = None
+        if job.state not in TERMINAL_STATES:
+            try:
+                if job.state != JobState.LAUNCHING:
+                    self.registry.set_state(job_id, JobState.LAUNCHING)
+                failed = self.registry.set_state(
+                    job_id, JobState.FAILED,
+                    error=f"launch aborted: {exc}",
+                    expect_epoch=job.epoch)
+            except IllegalTransition:
+                pass    # a racing transition won; leave its state alone
+        self._state_rev += 1
+        self._dirty_full = True
+        if failed is not None:
+            self.registry.persist_state(job_id)
+            self.bus.publish(TOPIC_CONTAINER_STATUS,
+                             {"job_id": job_id, "status": "FAILED",
+                              "epoch": job.epoch})
 
     def _fail_infeasible(self, job: Job,
                          err: Optional[str] = None) -> None:
@@ -2264,14 +2326,16 @@ class Scheduler:
                    f"exceed cluster capacity on every pool "
                    f"({self.placement.explain_infeasible(job.spec)})")
         self.registry.set_state(job.job_id, JobState.LAUNCHING)
-        self.registry.set_state(job.job_id, JobState.FAILED, error=err)
+        self.registry.set_state(job.job_id, JobState.FAILED, error=err,
+                                expect_epoch=job.epoch)
         # never reached a runner, so no worker log exists: make the
         # reason the log, so `acai logs <job>` answers "why did it fail"
         job.outputs.setdefault("log", err)
         self.registry.persist_state(job.job_id)
         self._state_rev += 1
         self.bus.publish(TOPIC_CONTAINER_STATUS,
-                         {"job_id": job.job_id, "status": "FAILED"})
+                         {"job_id": job.job_id, "status": "FAILED",
+                          "epoch": job.epoch})
 
     # -- EASY backfill ---------------------------------------------------
     def _shadow_time(self, pool: str,

@@ -118,7 +118,7 @@ class ElasticController:
         controller construction to ``until`` — what the deployment
         actually paid for, idle or not."""
         out: dict[str, float] = {}
-        for pool, pol in self.policies.items():
+        for pool in self.policies:
             t = self._t0
             # reconstruct the initial count from the decision log (the
             # first decision's nodes_before), falling back to current

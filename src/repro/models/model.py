@@ -51,11 +51,10 @@ def make_ctx(cfg: ArchConfig, seq_len: int, mode: str, *,
 def embed_tokens(params, tokens, cfg: ArchConfig, compute_dtype):
     if cfg.n_codebooks:
         # tokens (B, S, K) -> sum_k embed[k][tokens[..., k]]
-        embs = jnp.einsum("bskv,kvd->bsd",
+        return jnp.einsum("bskv,kvd->bsd",
                           jax.nn.one_hot(tokens, cfg.vocab_size,
                                          dtype=compute_dtype),
                           params["embed"].astype(compute_dtype))
-        return embs
     return jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
 
 

@@ -24,7 +24,7 @@ def init_rwkv_layer(cfg: ArchConfig, key):
     d = cfg.d_model
     ks = jax.random.split(key, 16)
     # 5 token-shift mixing coefficients (r,k,v,w,g) + base mix for lora input
-    p = {
+    return {
         "mu": 0.5 * jnp.ones((6, d), jnp.float32),   # x-base + r,k,v,w,g
         "shift_lora_a": _dense_init(ks[0], (5, d, r.lora_shift)),
         "shift_lora_b": jnp.zeros((5, r.lora_shift, d), jnp.float32),
@@ -44,7 +44,6 @@ def init_rwkv_layer(cfg: ArchConfig, key):
         "cm_wv": _dense_init(ks[8], (cfg.d_ff, d), fan_in=cfg.d_ff),
         "cm_wr": _dense_init(ks[9], (d, d)),
     }
-    return p
 
 
 def _token_shift(x, last=None):
@@ -76,9 +75,9 @@ def _decay(p, xw):
     """per-token decay w_t in (0,1)^D (log-space).  Returns log(w_t) <= 0."""
     lora = jnp.tanh(xw @ p["decay_lora_a"].astype(xw.dtype)) \
         @ p["decay_lora_b"].astype(xw.dtype)
-    logw = -jnp.exp((p["decay_base"].astype(jnp.float32)
+    # (B, S, D), <= 0
+    return -jnp.exp((p["decay_base"].astype(jnp.float32)
                      + lora.astype(jnp.float32)))
-    return logw  # (B, S, D), <= 0
 
 
 def _group_norm_heads(x, scale, n_heads, eps=1e-5):

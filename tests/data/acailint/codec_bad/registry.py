@@ -1,0 +1,22 @@
+"""Fixture: a journaled dataclass + registry with coverage holes
+(never imported)."""
+import dataclasses
+
+
+@dataclasses.dataclass
+class Job:
+    job_id: str
+    state: str = "SUBMITTED"
+    epoch: int = 0
+    cursor: int = 0  # acailint: runtime-only
+
+
+class JobRegistry:
+    def __init__(self, journal=None):
+        self.journal = journal
+        self._jobs = {}
+
+    def kill(self, job_id):
+        job = self._jobs[job_id]
+        job.state = "KILLED"            # ACAI302: no journal hook
+        return job

@@ -1,0 +1,14 @@
+"""Fixture: codec covering every non-runtime-only field
+(never imported)."""
+
+
+def encode_job(job):
+    return {"job_id": job.job_id,
+            "state": job.state,
+            "epoch": job.epoch}
+
+
+def decode_job(doc):
+    return Job(job_id=doc["job_id"],
+               state=doc.get("state", "SUBMITTED"),
+               epoch=int(doc.get("epoch", 0)))

@@ -1,0 +1,24 @@
+"""Fixture: fully-covered dataclass + journaled registry
+(never imported)."""
+import dataclasses
+
+
+@dataclasses.dataclass
+class Job:
+    job_id: str
+    state: str = "SUBMITTED"
+    epoch: int = 0
+    cursor: int = 0  # acailint: runtime-only
+
+
+class JobRegistry:
+    def __init__(self, journal=None):
+        self.journal = journal
+        self._jobs = {}
+
+    def kill(self, job_id):
+        job = self._jobs[job_id]
+        job.state = "KILLED"
+        if self.journal is not None:
+            self.journal.job_state(job)
+        return job

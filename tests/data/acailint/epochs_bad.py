@@ -1,0 +1,19 @@
+"""Fixture: unguarded terminal transitions and unstamped terminal
+events (never imported)."""
+TOPIC_CONTAINER_STATUS = "container_status"
+
+
+class Runner:
+    def finish(self, registry, bus, job_id):
+        registry.set_state(job_id, JobState.FINISHED)           # ACAI201
+        bus.publish(TOPIC_CONTAINER_STATUS,
+                    {"job_id": job_id, "status": "FINISHED"})   # ACAI202
+
+    def kill_via_local_dict(self, bus, job_id):
+        msg = {"job_id": job_id, "status": "KILLED"}
+        bus.publish(TOPIC_CONTAINER_STATUS, msg)                # ACAI202
+
+    def kill_via_member(self, bus, job_id):
+        bus.publish("container_status",
+                    {"job_id": job_id,
+                     "status": JobState.KILLED.value})          # ACAI202

@@ -1,0 +1,22 @@
+"""Fixture: epoch-guarded terminal transitions and stamped terminal
+events (never imported)."""
+TOPIC_CONTAINER_STATUS = "container_status"
+
+
+class Runner:
+    def finish(self, registry, bus, job, job_id):
+        registry.set_state(job_id, JobState.FINISHED,
+                           expect_epoch=job.epoch)
+        bus.publish(TOPIC_CONTAINER_STATUS,
+                    {"job_id": job_id, "status": "FINISHED",
+                     "epoch": job.epoch})
+
+    def kill_via_local_dict(self, bus, job, job_id):
+        msg = {"job_id": job_id, "status": "KILLED"}
+        msg["epoch"] = job.epoch
+        bus.publish(TOPIC_CONTAINER_STATUS, msg)
+
+    def progress_is_not_terminal(self, registry, bus, job_id):
+        registry.set_state(job_id, JobState.RUNNING)    # non-terminal: fine
+        bus.publish(TOPIC_CONTAINER_STATUS,
+                    {"job_id": job_id, "status": "RUNNING"})

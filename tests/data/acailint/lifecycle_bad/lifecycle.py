@@ -1,0 +1,22 @@
+"""Fixture: a lifecycle table failing every closure property
+(never imported)."""
+import enum
+
+
+class JobState(str, enum.Enum):
+    SUBMITTED = "SUBMITTED"
+    QUEUED = "QUEUED"
+    RUNNING = "RUNNING"
+    FINISHED = "FINISHED"
+    FAILED = "FAILED"
+
+
+_TRANSITIONS = {
+    JobState.SUBMITTED: {JobState.QUEUED},
+    JobState.QUEUED: set(),                             # non-terminal dead end
+    JobState.RUNNING: {JobState.FINISHED, JobState.KILLED},  # undeclared target
+    JobState.FINISHED: {JobState.QUEUED},               # terminal escape
+    # FAILED: missing row
+}
+
+TERMINAL_STATES = frozenset({JobState.FINISHED, JobState.FAILED})

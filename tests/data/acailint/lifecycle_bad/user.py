@@ -1,0 +1,9 @@
+"""Fixture: edges the declared table does not grant (never imported)."""
+
+
+class Engine:
+    def finish(self, job):
+        job.state = JobState.FINISHED                   # ACAI501 (direct)
+
+    def resubmit(self, registry, job_id):
+        registry.set_state(job_id, JobState.SUBMITTED)  # ACAI501 (no edge)

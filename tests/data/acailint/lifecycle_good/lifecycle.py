@@ -1,0 +1,21 @@
+"""Fixture: a closed lifecycle table (never imported)."""
+import enum
+
+
+class JobState(str, enum.Enum):
+    SUBMITTED = "SUBMITTED"
+    QUEUED = "QUEUED"
+    RUNNING = "RUNNING"
+    FINISHED = "FINISHED"
+    FAILED = "FAILED"
+
+
+_TRANSITIONS = {
+    JobState.SUBMITTED: {JobState.QUEUED, JobState.FAILED},
+    JobState.QUEUED: {JobState.RUNNING, JobState.FAILED},
+    JobState.RUNNING: {JobState.FINISHED, JobState.FAILED},
+    JobState.FINISHED: set(),
+    JobState.FAILED: set(),
+}
+
+TERMINAL_STATES = frozenset({JobState.FINISHED, JobState.FAILED})

@@ -1,0 +1,10 @@
+"""Fixture: only table-granted edges (never imported)."""
+
+
+class Engine:
+    def finish(self, registry, job, job_id):
+        registry.set_state(job_id, JobState.FINISHED,
+                           expect_epoch=job.epoch)
+
+    def enqueue(self, registry, job_id):
+        registry.set_state(job_id, JobState.QUEUED)

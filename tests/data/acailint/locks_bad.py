@@ -1,0 +1,31 @@
+"""Fixture: every lock-discipline violation class (never imported)."""
+import threading
+
+
+class Registry:
+    def __init__(self):
+        self.jobs = {}  # guarded-by: _lock
+        self._lock = threading.RLock()  # acailint: lock(forbid: publish, metadata)
+        self.bus = None
+        self.metadata = None
+
+    def get(self, job_id):
+        return self.jobs[job_id]                        # ACAI101
+
+    def put(self, job_id, job):
+        with self._lock:
+            self.jobs[job_id] = job
+            self.bus.publish("container_status",        # ACAI102
+                             {"job_id": job_id})
+            self.metadata.register(job_id)              # ACAI102
+
+
+class Bus:
+    def __init__(self):
+        self._subs = []  # guarded-by: _lock
+        self._lock = threading.RLock()  # acailint: lock(forbid: bare-calls)
+
+    def publish(self, msg):
+        with self._lock:
+            for fn in list(self._subs):
+                fn(msg)                                 # ACAI102 (bare call)

@@ -1,0 +1,33 @@
+"""Fixture: the same shapes as locks_bad, done right (never imported)."""
+import threading
+
+
+class Registry:
+    def __init__(self):
+        self.jobs = {}  # guarded-by: _lock
+        self._lock = threading.RLock()  # acailint: lock(forbid: publish, metadata)
+        self.bus = None
+        self.metadata = None
+
+    def get(self, job_id):
+        with self._lock:
+            return self.jobs[job_id]
+
+    def put(self, job_id, job):
+        with self._lock:
+            self.jobs[job_id] = job
+        # side effects happen after the lock is released
+        self.bus.publish("container_status", {"job_id": job_id})
+        self.metadata.register(job_id)
+
+
+class Bus:
+    def __init__(self):
+        self._subs = []  # guarded-by: _lock
+        self._lock = threading.RLock()  # acailint: lock(forbid: bare-calls)
+
+    def publish(self, msg):
+        with self._lock:
+            subs = list(self._subs)
+        for fn in subs:         # handlers run outside the bus lock
+            fn(msg)

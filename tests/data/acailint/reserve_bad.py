@@ -1,0 +1,12 @@
+"""Fixture: reservations whose exception paths leak (never imported)."""
+
+
+class Scheduler:
+    def launch(self, cl, job):
+        cl.reserve(job.job_id, job.resources)           # ACAI401
+        self.launcher.launch(job)       # raising here leaks the hold
+
+    def launch_gang(self, cl, job, pods):
+        cl.reserve_gang(job.job_id, job.resources, pods)  # ACAI401
+        if not job.ready:
+            raise RuntimeError("not ready")

@@ -1,0 +1,38 @@
+"""Fixture: release-protected (or raise-free) reservations
+(never imported)."""
+
+
+class Scheduler:
+    def launch(self, cl, job):
+        try:
+            cl.reserve(job.job_id, job.resources)
+            self.launcher.launch(job)
+        except Exception:
+            cl.release(job.job_id)      # exception path hands it back
+            raise
+
+    def launch_with_finally(self, cl, job):
+        ok = False
+        try:
+            cl.reserve(job.job_id, job.resources)
+            self.launcher.launch(job)
+            ok = True
+        finally:
+            if not ok:
+                cl.release(job.job_id)
+
+    def launch_via_unwind_helper(self, cl, job):
+        try:
+            cl.reserve_gang(job.job_id, job.resources, 4)
+            self.launcher.launch(job)
+        except Exception:
+            self._abort(cl, job)        # helper releases transitively
+            raise
+
+    def _abort(self, cl, job):
+        cl.release(job.job_id)
+        job.pool = None
+
+    def reserve_last(self, cl, job):
+        # nothing after the reserve can raise: no leak path to protect
+        cl.reserve(job.job_id, job.resources)

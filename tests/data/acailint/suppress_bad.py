@@ -1,0 +1,8 @@
+"""Fixture: an unjustified suppression is itself an error and does not
+silence anything (never imported)."""
+
+
+class Runner:
+    def finish(self, registry, job_id):
+        # acailint: disable=ACAI201
+        registry.set_state(job_id, JobState.FINISHED)

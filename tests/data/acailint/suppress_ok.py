@@ -1,0 +1,8 @@
+"""Fixture: a justified suppression silences the violation
+(never imported)."""
+
+
+class Runner:
+    def finish(self, registry, job_id):
+        # acailint: disable=ACAI201 -- fixture: single-incarnation runner, no epoch ever bumps
+        registry.set_state(job_id, JobState.FINISHED)

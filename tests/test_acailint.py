@@ -1,0 +1,138 @@
+"""acailint fixture suite: every checker fires on its bad fixture and
+passes its good one, the suppression/baseline mechanics behave, and the
+real engine tree lints clean end-to-end (the CI hard gate)."""
+import subprocess
+import sys
+from collections import Counter
+from pathlib import Path
+
+from tools.acailint import DEFAULT_BASELINE, run_files, run_paths
+from tools.acailint.core import SourceFile, load_baseline
+from tools.acailint.explain import EXPLANATIONS, explain
+
+DATA = Path(__file__).parent / "data" / "acailint"
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _codes(*names, baseline=None):
+    files = [SourceFile.load(DATA / n) for n in names]
+    return Counter(v.code for v in run_files(files, baseline))
+
+
+def _dir_codes(dirname):
+    return Counter(v.code for v in
+                   run_paths([DATA / dirname], baseline_path=None,
+                             scoped=False))
+
+
+# -- per-checker: bad fires, good passes -------------------------------
+def test_locks_bad_fixture_fires():
+    codes = _codes("locks_bad.py")
+    assert codes["ACAI101"] == 1      # unguarded read of a guarded field
+    assert codes["ACAI102"] == 3      # publish + metadata + bare handler
+
+
+def test_locks_good_fixture_passes():
+    assert not _codes("locks_good.py")
+
+
+def test_epochs_bad_fixture_fires():
+    codes = _codes("epochs_bad.py")
+    assert codes["ACAI201"] == 1      # terminal set_state, no expect_epoch
+    assert codes["ACAI202"] == 3      # literal, local dict, .value member
+
+
+def test_epochs_good_fixture_passes():
+    assert not _codes("epochs_good.py")
+
+
+def test_reserve_bad_fixture_fires():
+    assert _codes("reserve_bad.py")["ACAI401"] == 2
+
+
+def test_reserve_good_fixture_passes():
+    # includes the unwind-helper indirection: a handler that releases
+    # through a same-file helper counts as protected
+    assert not _codes("reserve_good.py")
+
+
+def test_codec_bad_fixture_fires():
+    codes = _dir_codes("codec_bad")
+    assert codes["ACAI301"] == 1      # epoch missing from encode_job
+    assert codes["ACAI302"] == 1      # mutation without a journal hook
+
+
+def test_codec_good_fixture_passes():
+    assert not _dir_codes("codec_good")
+
+
+def test_lifecycle_bad_fixture_fires():
+    codes = _dir_codes("lifecycle_bad")
+    # missing row, undeclared edge target, terminal escape, dead end
+    assert codes["ACAI502"] == 4
+    # direct .state assignment + set_state to an unreachable state
+    assert codes["ACAI501"] == 2
+
+
+def test_lifecycle_good_fixture_passes():
+    assert not _dir_codes("lifecycle_good")
+
+
+# -- suppression mechanics ---------------------------------------------
+def test_justified_suppression_silences():
+    assert not _codes("suppress_ok.py")
+
+
+def test_unjustified_suppression_is_an_error_and_does_not_silence():
+    codes = _codes("suppress_bad.py")
+    assert codes["ACAI001"] == 1
+    assert codes["ACAI201"] == 1
+
+
+def test_baseline_suppresses_by_suffix_and_code():
+    baseline = {("epochs_bad.py", "ACAI201"), ("epochs_bad.py", "ACAI202")}
+    assert not _codes("epochs_bad.py", baseline=baseline)
+
+
+def test_engine_baseline_ships_empty():
+    # the checked-in core/engine baseline must stay empty: violations
+    # get fixed, not recorded
+    assert load_baseline(DEFAULT_BASELINE) == set()
+
+
+# -- explain ------------------------------------------------------------
+def test_every_code_has_an_explanation():
+    emitted = {"ACAI001", "ACAI101", "ACAI102", "ACAI201", "ACAI202",
+               "ACAI301", "ACAI302", "ACAI401", "ACAI501", "ACAI502"}
+    assert emitted == set(EXPLANATIONS)
+    for code in emitted:
+        assert code in explain(code)
+    assert "unknown code" in explain("ACAI999")
+
+
+# -- end-to-end: the CI hard gate --------------------------------------
+def test_engine_tree_lints_clean():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.acailint", "src"],
+        cwd=REPO, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_explain_exits_zero():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.acailint", "--explain", "ACAI401"],
+        cwd=REPO, capture_output=True, text=True, timeout=60)
+    assert proc.returncode == 0
+    assert "phantom capacity" in proc.stdout
+
+
+def test_cli_reports_violations_with_exit_one(tmp_path):
+    target = tmp_path / "repro" / "core" / "engine"
+    target.mkdir(parents=True)
+    bad = (DATA / "epochs_bad.py").read_text()
+    (target / "runner.py").write_text(bad)
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.acailint", str(tmp_path)],
+        cwd=REPO, capture_output=True, text=True, timeout=60)
+    assert proc.returncode == 1
+    assert "ACAI201" in proc.stdout

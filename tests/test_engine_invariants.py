@@ -1,0 +1,261 @@
+"""Runtime counterparts of the acailint invariants: codec completeness
+by dataclass introspection, monitor thread-safety, launch-abort
+reservation unwinding, epoch-stamped terminal events, and journaled
+adoption — regression tests for the violations the linter surfaced."""
+import dataclasses
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro.core.engine.cluster import Cluster
+from repro.core.engine.durable import codec
+from repro.core.engine.durable.jobs import echo_job
+from repro.core.engine.durable.journal import JOURNAL_STREAM, Journal
+from repro.core.engine.durable.store import MemoryStore
+from repro.core.engine.events import (EventBus, TOPIC_CONTAINER_STATUS,
+                                      TOPIC_SCHEDULER)
+from repro.core.engine.faults import FaultPlan
+from repro.core.engine.launcher import VirtualRunner
+from repro.core.engine.lifecycle import JobState
+from repro.core.engine.monitor import JobMonitor
+from repro.core.engine.registry import (GangSpec, Job, JobRegistry,
+                                        JobSpec, RetryPolicy)
+from repro.core.engine.scheduler import Scheduler
+from tools.acailint.checks.codec import runtime_only_fields
+from tools.acailint.core import SourceFile
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _spec(name="j", user="u", duration=1.0, resources=None, **kw):
+    return JobSpec(name=name, project="p", user=user, duration=duration,
+                   resources=resources or {}, **kw)
+
+
+def _engine(cluster=None, quota_k=100):
+    registry = JobRegistry()
+    bus = EventBus()
+    runner = VirtualRunner(registry, bus)
+    sched = Scheduler(registry, runner, bus, quota_k=quota_k,
+                      cluster=cluster)
+    return registry, bus, runner, sched
+
+
+# -- codec completeness (runtime half of ACAI301) ----------------------
+def _runtime_only(class_name, filename="src/repro/core/engine/registry.py"):
+    return runtime_only_fields(SourceFile.load(REPO / filename), class_name)
+
+
+def _full_spec():
+    return JobSpec(
+        name="train", project="proj", user="alice", fn=echo_job,
+        argv=["--lr", "0.1"], input_fileset="fs-in", output_fileset="fs-out",
+        resources={"vcpu": 2.0}, args={"k": "v"}, duration=3.5, priority=7,
+        depends_on=["job-9"], pool="gpu",
+        pool_resources={"gpu": {"vcpu": 4.0}}, template="tmpl",
+        gang=GangSpec(n_pods=4, per_pod_resources={"vcpu": 1.0},
+                      topology="close", min_pods=2),
+        input_bytes=2048.0,
+        retry=RetryPolicy(max_retries=2, backoff_base=0.5,
+                          backoff_cap=9.0, retry_on="any"),
+        timeout_s=60.0, deadline=99.0)
+
+
+def _full_job():
+    job = Job(job_id="job-7", spec=_full_spec(), state=JobState.PREEMPTED)
+    job.started_at = 10.0
+    job.finished_at = 20.0
+    job.runtime = 1.5
+    job.cost = 2.25
+    job.pool = "gpu"
+    job.error = "boom"
+    job.outputs = {"log": "l"}
+    job.epoch = 3
+    job.preemptions = 2
+    job.gang_pods = 4
+    job.retries = 1
+    job.failures = 2
+    return job
+
+
+@pytest.mark.parametrize("cls,encode,decode,sample,src", [
+    (JobSpec, codec.encode_spec, codec.decode_spec, _full_spec,
+     "src/repro/core/engine/registry.py"),
+    (Job, codec.encode_job, codec.decode_job, _full_job,
+     "src/repro/core/engine/registry.py"),
+    (GangSpec, codec.encode_gang, codec.decode_gang,
+     lambda: GangSpec(n_pods=4, per_pod_resources={"vcpu": 1.0},
+                      topology="close", min_pods=2),
+     "src/repro/core/engine/registry.py"),
+    (RetryPolicy, codec.encode_retry, codec.decode_retry,
+     lambda: RetryPolicy(max_retries=2, backoff_base=0.5,
+                         backoff_cap=9.0, retry_on="any"),
+     "src/repro/core/engine/registry.py"),
+    (FaultPlan, codec.encode_fault_plan, codec.decode_fault_plan,
+     lambda: FaultPlan(seed=3, node_mtbf_s=100.0, transient_mtbf_s=50.0,
+                       straggler_mtbf_s=25.0, straggler_factor=2.0,
+                       start=5.0, max_node_failures=4),
+     "src/repro/core/engine/faults.py"),
+])
+def test_every_dataclass_field_round_trips(cls, encode, decode, sample,
+                                           src):
+    """Introspect ``dataclasses.fields``: every field that is not marked
+    runtime-only must appear in the encoded doc and survive the round
+    trip — a field added to the dataclass but not the codec fails here
+    (and in acailint) instead of silently vanishing across a crash."""
+    runtime_only = _runtime_only(cls.__name__, src)
+    persisted = {f.name for f in dataclasses.fields(cls)} - runtime_only
+    obj = sample()
+    doc = encode(obj)
+    assert set(doc) == persisted
+    back = decode(doc)
+    for name in sorted(persisted):
+        assert getattr(back, name) == getattr(obj, name), name
+
+
+def test_runtime_only_markers_match_expectations():
+    # the marker is the single source of truth shared by linter and
+    # tests; pin the current set so accidental marker drift is loud
+    assert _runtime_only("Job") == {"preempt_flag", "retry_pending"}
+    assert _runtime_only("JobSpec") == set()
+
+
+# -- monitor thread-safety (ACAI101 fixes) -----------------------------
+def test_monitor_aggregates_exact_under_concurrent_ingest():
+    bus = EventBus()
+    mon = JobMonitor(bus, max_samples=100)
+    n, threads = 200, 8
+
+    def feed():
+        for i in range(n):
+            bus.publish(TOPIC_SCHEDULER,
+                        {"now": float(i), "utilization": {"vcpu": 0.5}})
+
+    workers = [threading.Thread(target=feed) for _ in range(threads)]
+    for w in workers:
+        w.start()
+    for w in workers:
+        w.join()
+    # ingest counters are exact, not approximately-right: a torn
+    # unguarded update would drop increments under contention
+    assert mon.samples_seen == n * threads
+    has, peak, mean = mon.utilization_summary()
+    assert has
+    assert peak == {"vcpu": 0.5}
+    assert abs(mean["vcpu"] - 0.5) < 1e-9
+    assert mon.peak_utilization() == peak
+    assert mon.mean_utilization() == mean
+
+
+def test_monitor_record_status_semantics():
+    bus = EventBus()
+    mon = JobMonitor(bus)
+    mon.record_status("job-1", "FAILED")
+    mon.record_status("job-1", "FINISHED", overwrite=False)
+    assert mon.status["job-1"] == "FAILED"      # replay never clobbers
+    mon.record_status("job-1", "FINISHED")
+    assert mon.status["job-1"] == "FINISHED"
+    assert mon.is_terminal("job-1")
+
+
+def test_monitor_drops_stale_epoch_terminal():
+    registry, bus, _, _ = _engine()
+    mon = JobMonitor(bus, registry=registry)
+    job = registry.submit(_spec())
+    for state in (JobState.QUEUED, JobState.LAUNCHING, JobState.RUNNING):
+        registry.set_state(job.job_id, state)
+    registry.mark_preempted(job.job_id)         # epoch 0 -> 1
+    bus.publish(TOPIC_CONTAINER_STATUS,
+                {"job_id": job.job_id, "status": "FAILED", "epoch": 0})
+    # the zombie incarnation's terminal is kept as history but never
+    # cached as the job's status
+    assert mon.status.get(job.job_id) != "FAILED"
+    assert any(e.get("status") == "FAILED" for e in mon.watch(job.job_id))
+
+
+# -- launch-abort unwinding (ACAI401 fix) ------------------------------
+class _ExplodingRunner(VirtualRunner):
+    def launch(self, job):
+        raise RuntimeError("launcher exploded")
+
+
+def test_aborted_launch_releases_reservation_and_fails_job():
+    cl = Cluster({"vcpu": 8.0}, {"vcpu": 1.0})
+    registry = JobRegistry()
+    bus = EventBus()
+    runner = _ExplodingRunner(registry, bus)
+    sched = Scheduler(registry, runner, bus, quota_k=10, cluster=cl)
+    job = registry.submit(_spec(resources={"vcpu": 2.0}))
+    with pytest.raises(RuntimeError, match="launcher exploded"):
+        sched.submit(job)
+    # the reservation taken just before launch was handed back...
+    assert cl.reservations() == {}
+    assert all(v == 0.0 for v in cl.used.values())
+    # ...and the job terminal-ized instead of stranding in LAUNCHING
+    assert job.state == JobState.FAILED
+    assert "launch aborted" in (job.error or "")
+    assert sched.active_count("p", "u") == 0
+    msg = {"job_id": job.job_id, "status": "FAILED", "epoch": 0}
+    assert (TOPIC_CONTAINER_STATUS, msg) in bus.history
+
+
+# -- epoch-stamped terminal publishes (ACAI202 fixes) ------------------
+def test_queued_kill_event_carries_epoch_stamp():
+    registry, bus, _, sched = _engine()
+    parent = registry.submit(_spec("parent", duration=100.0))
+    sched.submit(parent)
+    child = registry.submit(_spec("child", depends_on=[parent.job_id]))
+    sched.submit(child)
+    sched.kill(child.job_id)            # held on its parent: never launched
+    assert (TOPIC_CONTAINER_STATUS,
+            {"job_id": child.job_id, "status": "KILLED",
+             "epoch": 0}) in bus.history
+
+
+def test_upstream_failure_event_carries_epoch_stamp():
+    registry, bus, _, sched = _engine()
+    parent = registry.submit(_spec("parent", duration=100.0))
+    sched.submit(parent)
+    child = registry.submit(_spec("child", depends_on=[parent.job_id]))
+    sched.submit(child)
+    sched.kill(parent.job_id)
+    sched.run_to_completion()
+    assert child.state == JobState.UPSTREAM_FAILED
+    assert any(t == TOPIC_CONTAINER_STATUS
+               and m.get("job_id") == child.job_id
+               and m.get("status") == "UPSTREAM_FAILED"
+               and m.get("epoch") == 0
+               for t, m in bus.history)
+
+
+# -- journaled adoption (ACAI302 fix) ----------------------------------
+def test_adopt_journals_outside_recovery_and_not_inside():
+    store = MemoryStore()
+    journal = Journal(store)
+    registry = JobRegistry(journal=journal)
+    job = Job(job_id="job-5", spec=_spec(), state=JobState.RUNNING)
+
+    with journal.paused():              # recovery replay: no re-records
+        registry.adopt(job)
+    assert store.read(JOURNAL_STREAM) == []
+
+    other = Job(job_id="job-6", spec=_spec(), state=JobState.RUNNING)
+    registry.adopt(other)               # live adoption: fully journaled
+    kinds = [r["t"] for r in store.read(JOURNAL_STREAM)]
+    assert kinds == ["submit", "state"]
+    # the id counter advanced past both, journaled or not
+    assert registry.submit(_spec()).job_id == "job-7"
+
+
+def test_force_state_journals_and_stamps_started_at():
+    store = MemoryStore()
+    journal = Journal(store)
+    registry = JobRegistry(journal=journal)
+    job = registry.submit(_spec())
+    assert job.started_at is None
+    registry.force_state(job.job_id, JobState.RUNNING)
+    assert job.state == JobState.RUNNING
+    assert job.started_at is not None
+    states = [r for r in store.read(JOURNAL_STREAM) if r["t"] == "state"]
+    assert states and states[-1]["state"] == "RUNNING"

@@ -72,7 +72,7 @@ def test_transition_table_closed():
         else:
             assert allowed == set()
     # every declared target is a real state (no dangling edges)
-    for s, targets in _TRANSITIONS.items():
+    for targets in _TRANSITIONS.values():
         assert targets <= set(JobState)
     check_transition(JobState.FAILED, JobState.QUARANTINED)
     for target in JobState:

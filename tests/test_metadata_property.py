@@ -41,7 +41,7 @@ def test_random_ops_match_bruteforce(tmp_path, seed):
     docs = {}
     keys = ["loss", "acc", "epoch"]
     models = ["bert", "gpt", "t5"]
-    for i in range(rng.integers(20, 60)):
+    for _ in range(rng.integers(20, 60)):
         aid = f"a{rng.integers(0, 30)}"
         attrs = {}
         if rng.random() < 0.8:

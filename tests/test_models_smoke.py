@@ -79,7 +79,7 @@ def test_decode_step(arch):
         tok = jnp.ones((b, 1, cfg.n_codebooks), jnp.int32)
     else:
         tok = jnp.ones((b, 1), jnp.int32)
-    for step in range(3):
+    for _ in range(3):
         ctx = M.make_ctx(cfg, buf, "decode", vision=vision,
                          cache_len=cache_len)
         logits, states = M.decode_step(params, tok, states, cache_len, cfg,

@@ -334,8 +334,11 @@ def test_virtual_runner_publishes_killed_status():
     sched.kill(j.job_id)
     sched.run_to_completion()
     assert monitor.status[j.job_id] == "KILLED"
+    # terminal events carry the incarnation's epoch stamp so handlers
+    # can drop stale ones (the job never retried, so epoch is 0)
     assert (TOPIC_CONTAINER_STATUS,
-            {"job_id": j.job_id, "status": "KILLED"}) in bus.history
+            {"job_id": j.job_id, "status": "KILLED",
+             "epoch": 0}) in bus.history
 
 
 def test_scheduler_metrics_surface_through_monitor_and_dashboard():

@@ -86,7 +86,7 @@ def test_microbatch_equals_fullbatch_grads():
         lambda a: a.reshape((k, a.shape[0] // k) + a.shape[1:]), batch)
     accum = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     for i in range(k):
-        mb = jax.tree.map(lambda a: a[i], micro)
+        mb = jax.tree.map(lambda a, i=i: a[i], micro)
         (_, _), g = jax.value_and_grad(lf4, has_aux=True)(params, mb)
         accum = jax.tree.map(jnp.add, accum, g)
     g_micro = jax.tree.map(lambda g: g / k, accum)
@@ -103,7 +103,7 @@ def test_compression_error_feedback():
     # accumulated compressed updates track accumulated true gradient
     total_true = np.zeros((64, 64), np.float32)
     total_sent = np.zeros((64, 64), np.float32)
-    for i in range(20):
+    for _ in range(20):
         gi = {"w": jnp.asarray(rng.normal(0, 1, (64, 64)), jnp.float32)}
         sent, res = C.compress_grads_with_feedback(gi, res, "int8")
         total_true += np.asarray(gi["w"])

@@ -1,0 +1,58 @@
+"""acailint — engine-invariant static analysis for the ACAI control
+plane.
+
+Run as ``python -m tools.acailint src``. The checkers are AST-based and
+pin the concurrency/durability contracts of ``src/repro/core/engine``:
+lock discipline (ACAI1xx), epoch guards (ACAI2xx), journal/codec
+coverage (ACAI3xx), reserve/release pairing (ACAI4xx) and lifecycle
+transition closure (ACAI5xx). See ``docs/invariants.md`` for the full
+catalogue and ``--explain CODE`` for any one of them.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Iterable, Optional
+
+from tools.acailint.checks import FILE_CHECKS, PROJECT_CHECKS
+from tools.acailint.core import (SourceFile, Violation, apply_suppressions,
+                                 load_baseline)
+
+#: only files under this marker are engine code; everything else scanned
+#: from a directory argument is skipped unless --all-files is given
+ENGINE_MARKER = "repro/core/engine"
+
+DEFAULT_BASELINE = Path(__file__).with_name("baseline.txt")
+
+
+def collect_files(paths: Iterable[str | Path],
+                  scoped: bool = True) -> list[SourceFile]:
+    out: list[SourceFile] = []
+    for path in paths:
+        p = Path(path)
+        candidates = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for c in candidates:
+            sf = SourceFile.load(c)
+            if scoped and ENGINE_MARKER not in sf.path:
+                continue
+            out.append(sf)
+    return out
+
+
+def run_files(files: list[SourceFile],
+              baseline: Optional[set[tuple[str, str]]] = None
+              ) -> list[Violation]:
+    raw: set[Violation] = set()    # nested functions are walked twice;
+    for sf in files:               # the set collapses the duplicates
+        for check in FILE_CHECKS:
+            raw.update(check(sf))
+    for check in PROJECT_CHECKS:
+        raw.update(check(files))
+    return apply_suppressions(files, list(raw), baseline)
+
+
+def run_paths(paths: Iterable[str | Path],
+              baseline_path: Optional[str | Path] = DEFAULT_BASELINE,
+              scoped: bool = True) -> list[Violation]:
+    files = collect_files(paths, scoped=scoped)
+    baseline = load_baseline(baseline_path) if baseline_path else None
+    return run_files(files, baseline)

@@ -1,0 +1,58 @@
+"""CLI: ``python -m tools.acailint src [--baseline F] [--all-files]``.
+
+Exit codes: 0 clean, 1 violations found, 2 usage/IO error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.acailint import DEFAULT_BASELINE, run_paths
+from tools.acailint.explain import EXPLANATIONS, explain
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.acailint",
+        description="engine-invariant static analysis for the ACAI "
+                    "control plane")
+    parser.add_argument("paths", nargs="*",
+                        help="files or directories to scan (default: src)")
+    parser.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                        help="baseline suppression file "
+                             "(path-suffix:CODE per line)")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="ignore the baseline file")
+    parser.add_argument("--all-files", action="store_true",
+                        help="scan every .py under the given paths, not "
+                             "just repro/core/engine")
+    parser.add_argument("--explain", metavar="CODE",
+                        help="print the rationale for a code and exit")
+    args = parser.parse_args(argv)
+
+    if args.explain:
+        print(explain(args.explain))
+        return 0 if args.explain.upper() in EXPLANATIONS else 2
+
+    paths = args.paths or ["src"]
+    try:
+        violations = run_paths(
+            paths,
+            baseline_path=None if args.no_baseline else args.baseline,
+            scoped=not args.all_files)
+    except (OSError, SyntaxError) as exc:
+        print(f"acailint: {exc}", file=sys.stderr)
+        return 2
+    for v in violations:
+        print(v.render())
+    if violations:
+        print(f"acailint: {len(violations)} violation(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except BrokenPipeError:            # e.g. `... --explain X | head`
+        sys.exit(0)

@@ -1,0 +1,10 @@
+"""Checker registry.
+
+``FILE_CHECKS`` run per file; ``PROJECT_CHECKS`` see the whole scanned
+set at once (they correlate dataclasses with the codec, and every
+module with the lifecycle table).
+"""
+from tools.acailint.checks import codec, epochs, lifecycle, locks, reserve
+
+FILE_CHECKS = (locks.check, epochs.check, reserve.check)
+PROJECT_CHECKS = (codec.check_project, lifecycle.check_project)

@@ -1,0 +1,181 @@
+"""ACAI3xx — journal/codec coverage.
+
+ACAI301: every dataclass field of the journaled engine records
+(``JobSpec``/``Job``/``GangSpec``/``RetryPolicy`` in ``registry.py``,
+``FaultPlan`` in ``faults.py``) must appear — as a string key — in BOTH
+the encode and decode half of ``durable/codec.py``. A field added to the
+dataclass but not the codec is silent data loss across a crash (the
+class PR 9 had to handle by hand when ``RetryPolicy`` landed). Fields
+that are deliberately in-memory-only carry an
+``# acailint: runtime-only`` marker on their declaration line.
+
+ACAI302: every ``JobRegistry`` method that mutates durable state
+(assigns ``.state``/``.epoch`` on a job, or stores into ``self._jobs``)
+must reference ``self.journal`` — the write-ahead hook is what makes the
+mutation survive a crash.
+
+This is a project-level check: it needs ``registry.py``, ``faults.py``
+and ``codec.py`` together, located by path suffix among the scanned
+files, and runs only when at least one of them is present.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from tools.acailint.core import SourceFile, Violation
+
+CODE_CODEC = "ACAI301"
+CODE_JOURNAL = "ACAI302"
+
+RUNTIME_ONLY_MARKER = "acailint: runtime-only"
+
+#: dataclass -> (defining file suffix, encode fn, decode fn)
+CODEC_MAP = {
+    "JobSpec": ("registry.py", "encode_spec", "decode_spec"),
+    "Job": ("registry.py", "encode_job", "decode_job"),
+    "GangSpec": ("registry.py", "encode_gang", "decode_gang"),
+    "RetryPolicy": ("registry.py", "encode_retry", "decode_retry"),
+    "FaultPlan": ("faults.py", "encode_fault_plan", "decode_fault_plan"),
+}
+
+#: JobRegistry methods exempt from ACAI302 would be listed here; the
+#: registry currently has none — ``adopt`` journals too (recovery runs
+#: it under ``journal.paused()``, so the rebuild never double-records).
+JOURNAL_EXEMPT: frozenset[str] = frozenset()
+
+
+def _is_dataclass(cls: ast.ClassDef) -> bool:
+    for dec in cls.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if isinstance(target, ast.Attribute) and target.attr == "dataclass":
+            return True
+        if isinstance(target, ast.Name) and target.id == "dataclass":
+            return True
+    return False
+
+
+def dataclass_fields(sf: SourceFile, class_name: str) -> Optional[list[str]]:
+    """Declared field names of a dataclass, excluding runtime-only ones;
+    None when the class is not in this file."""
+    for cls in ast.walk(sf.tree):
+        if not isinstance(cls, ast.ClassDef) or cls.name != class_name:
+            continue
+        if not _is_dataclass(cls):
+            return None
+        fields = []
+        for node in cls.body:
+            if not isinstance(node, ast.AnnAssign) \
+                    or not isinstance(node.target, ast.Name):
+                continue
+            if RUNTIME_ONLY_MARKER in sf.comment(node.lineno):
+                continue
+            fields.append(node.target.id)
+        return fields
+    return None
+
+
+def runtime_only_fields(sf: SourceFile, class_name: str) -> set[str]:
+    """Fields carrying the runtime-only marker (for the runtime
+    round-trip test to share one source of truth with the linter)."""
+    for cls in ast.walk(sf.tree):
+        if isinstance(cls, ast.ClassDef) and cls.name == class_name:
+            return {node.target.id for node in cls.body
+                    if isinstance(node, ast.AnnAssign)
+                    and isinstance(node.target, ast.Name)
+                    and RUNTIME_ONLY_MARKER in sf.comment(node.lineno)}
+    return set()
+
+
+def _function_strings(sf: SourceFile, fn_name: str) -> Optional[set[str]]:
+    for node in ast.walk(sf.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name == fn_name:
+            return {n.value for n in ast.walk(node)
+                    if isinstance(n, ast.Constant)
+                    and isinstance(n.value, str)}
+    return None
+
+
+def _find(files: Iterable[SourceFile], suffix: str) -> Optional[SourceFile]:
+    return next((f for f in files if f.endswith(suffix)), None)
+
+
+def _check_codec(files: list[SourceFile], out: list[Violation]) -> None:
+    codec = _find(files, "codec.py")
+    if codec is None:
+        return
+    for cls_name, (suffix, enc_name, dec_name) in CODEC_MAP.items():
+        src = _find(files, suffix)
+        if src is None:
+            continue
+        fields = dataclass_fields(src, cls_name)
+        if fields is None:
+            continue
+        for fn_name in (enc_name, dec_name):
+            strings = _function_strings(codec, fn_name)
+            if strings is None:
+                out.append(Violation(
+                    codec.path, 1, CODE_CODEC,
+                    f"no {fn_name}() in codec: {cls_name} cannot "
+                    f"round-trip the durable store"))
+                continue
+            for field in fields:
+                if field not in strings:
+                    out.append(Violation(
+                        codec.path, 1, CODE_CODEC,
+                        f"{cls_name}.{field} is not covered by "
+                        f"{fn_name}(): the field is silently lost "
+                        f"across a crash/recovery"))
+
+
+def _mutates_durable_state(method: ast.FunctionDef) -> bool:
+    for node in ast.walk(method):
+        targets: list[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            targets = list(node.targets)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            targets = [node.target]
+        for t in targets:
+            if isinstance(t, ast.Attribute) and t.attr in ("state", "epoch"):
+                return True
+            if isinstance(t, ast.Subscript) \
+                    and isinstance(t.value, ast.Attribute) \
+                    and t.value.attr == "_jobs":
+                return True
+    return False
+
+
+def _references_journal(method: ast.FunctionDef) -> bool:
+    for node in ast.walk(method):
+        if isinstance(node, ast.Attribute) and node.attr == "journal":
+            return True
+    return False
+
+
+def _check_registry_journal(files: list[SourceFile],
+                            out: list[Violation]) -> None:
+    for sf in files:
+        for cls in ast.walk(sf.tree):
+            if not isinstance(cls, ast.ClassDef) \
+                    or cls.name != "JobRegistry":
+                continue
+            for method in cls.body:
+                if not isinstance(method, ast.FunctionDef) \
+                        or method.name == "__init__" \
+                        or method.name in JOURNAL_EXEMPT:
+                    continue
+                if _mutates_durable_state(method) \
+                        and not _references_journal(method):
+                    out.append(Violation(
+                        sf.path, method.lineno, CODE_JOURNAL,
+                        f"JobRegistry.{method.name} mutates durable job "
+                        f"state without a journal hook: the mutation "
+                        f"does not survive a crash"))
+
+
+def check_project(files: list[SourceFile]) -> list[Violation]:
+    out: list[Violation] = []
+    _check_codec(files, out)
+    _check_registry_journal(files, out)
+    return out

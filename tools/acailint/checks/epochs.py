@@ -1,0 +1,140 @@
+"""ACAI2xx — epoch guards on terminal transitions and events.
+
+ACAI201: every ``set_state(..., JobState.<terminal>)`` call must pass
+``expect_epoch=`` so the write commits only for the incarnation it
+belongs to. The check-and-write share the registry lock; an unguarded
+terminal write lets a superseded worker (the PR-5 zombie-incarnation
+class) terminal-ize a job that was preempted/retried after the worker's
+last epoch read.
+
+ACAI202: every ``publish(TOPIC_CONTAINER_STATUS, {...})`` whose message
+carries a terminal ``"status"`` literal must stamp an ``"epoch"`` key
+(in the dict literal, or via ``msg["epoch"] = ...`` on a locally-built
+dict in the same function). Handlers drop events stamped older than the
+registry epoch; an unstamped terminal event can never be recognized as
+stale. Messages whose status is computed dynamically are skipped — the
+publisher of a dynamic status is expected to thread the epoch through
+the same record (the runtime tests cover that path).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from tools.acailint.core import (SourceFile, Violation, call_name,
+                                 const_str, functions_of, jobstate_member)
+
+CODE_SET_STATE = "ACAI201"
+CODE_PUBLISH = "ACAI202"
+
+TERMINAL_MEMBERS = frozenset({"FINISHED", "FAILED", "KILLED",
+                              "UPSTREAM_FAILED", "QUARANTINED"})
+
+
+def _state_arg(call: ast.Call) -> Optional[ast.AST]:
+    """The state argument of a ``set_state`` call: second positional
+    (after job_id) or the ``new``/``state`` keyword."""
+    if len(call.args) >= 2:
+        return call.args[1]
+    for kw in call.keywords:
+        if kw.arg in ("new", "state"):
+            return kw.value
+    return None
+
+
+def _check_set_state(sf: SourceFile, out: list[Violation]) -> None:
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call) or call_name(node) != "set_state":
+            continue
+        state = _state_arg(node)
+        member = jobstate_member(state) if state is not None else None
+        if member not in TERMINAL_MEMBERS:
+            continue
+        if not any(kw.arg == "expect_epoch" for kw in node.keywords):
+            out.append(Violation(
+                sf.path, node.lineno, CODE_SET_STATE,
+                f"terminal set_state(JobState.{member}) without "
+                f"expect_epoch=: a superseded incarnation could "
+                f"terminal-ize the live one"))
+
+
+def _dict_keys(d: ast.Dict) -> set[str]:
+    return {k for k in (const_str(key) for key in d.keys if key is not None)
+            if k is not None}
+
+
+def _dict_value(d: ast.Dict, key: str) -> Optional[ast.AST]:
+    for k, v in zip(d.keys, d.values):
+        if k is not None and const_str(k) == key:
+            return v
+    return None
+
+
+def _local_dicts(fn: ast.AST) -> tuple[dict[str, ast.Dict], set[str]]:
+    """Name -> dict literal assigned to it in ``fn``, plus the set of
+    names that ever receive an ``name["epoch"] = ...`` subscript store."""
+    dicts: dict[str, ast.Dict] = {}
+    stamped: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Dict):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    dicts[t.id] = node.value
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Subscript) and \
+                        isinstance(t.value, ast.Name) and \
+                        const_str(t.slice) == "epoch":
+                    stamped.add(t.value.id)
+    return dicts, stamped
+
+
+def _is_container_topic(arg: ast.AST) -> bool:
+    if isinstance(arg, ast.Name):
+        return arg.id == "TOPIC_CONTAINER_STATUS"
+    return const_str(arg) == "container_status"
+
+
+def _check_publish(sf: SourceFile, out: list[Violation]) -> None:
+    for fn in functions_of(sf.tree):
+        dicts, stamped = _local_dicts(fn)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call) \
+                    or call_name(node) != "publish" or len(node.args) < 2:
+                continue
+            if not _is_container_topic(node.args[0]):
+                continue
+            msg = node.args[1]
+            has_epoch = False
+            if isinstance(msg, ast.Name):
+                has_epoch = msg.id in stamped
+                msg = dicts.get(msg.id)
+            if not isinstance(msg, ast.Dict):
+                continue            # not statically resolvable
+            status = _dict_value(msg, "status")
+            if status is None:
+                continue
+            literal = const_str(status)
+            member = jobstate_member(status)
+            # JobState.X.value resolves through the .value attribute
+            if member is None and isinstance(status, ast.Attribute) \
+                    and status.attr == "value":
+                member = jobstate_member(status.value)
+            terminal = (literal in TERMINAL_MEMBERS
+                        or member in TERMINAL_MEMBERS)
+            if not terminal:
+                continue
+            if "epoch" in _dict_keys(msg) or has_epoch:
+                continue
+            out.append(Violation(
+                sf.path, node.lineno, CODE_PUBLISH,
+                f"terminal container_status "
+                f"({literal or member}) published without an "
+                f"'epoch' stamp: handlers cannot drop it as stale"))
+
+
+def check(sf: SourceFile) -> list[Violation]:
+    out: list[Violation] = []
+    _check_set_state(sf, out)
+    _check_publish(sf, out)
+    return out

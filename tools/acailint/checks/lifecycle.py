@@ -1,0 +1,159 @@
+"""ACAI5xx — lifecycle transition closure.
+
+ACAI501: state-machine edges used anywhere in the engine must be edges
+the declared table in ``lifecycle.py`` (or a privileged reassignment
+site) actually grants:
+
+- a direct ``<obj>.state = JobState.X`` assignment is allowed only in
+  ``registry.py`` (the implementation: every write goes through
+  ``check_transition`` or a documented privileged method) and
+  ``durable/recovery.py`` (the rebuild replays history, and the
+  epoch-rebirth requeue is a privileged reassignment by design —
+  see the lifecycle module docstring). Anywhere else it bypasses
+  ``check_transition`` entirely.
+- a ``set_state(..., JobState.X)`` target must be reachable — i.e. ``X``
+  appears as a destination of some edge in ``_TRANSITIONS``.
+
+ACAI502: the declared table itself must be closed: every ``JobState``
+member has a row, every edge endpoint is a member, every edge out of a
+``TERMINAL_STATES`` state lands in ``TERMINAL_STATES`` (terminal
+refinement only — FAILED -> QUARANTINED), every non-terminal state has a
+way forward, and ``TERMINAL_STATES`` only names members.
+
+This is a project-level check: the table is parsed from the scanned
+``lifecycle.py``; the edge checks run over every scanned file.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from tools.acailint.core import (SourceFile, Violation, call_name,
+                                 jobstate_member)
+from tools.acailint.checks.epochs import _state_arg
+
+CODE_EDGE = "ACAI501"
+CODE_TABLE = "ACAI502"
+
+#: modules whose direct ``.state =`` writes are the privileged
+#: implementation (see module docstring)
+PRIVILEGED_SUFFIXES = ("registry.py", "durable/recovery.py")
+
+
+def _parse_members(tree: ast.AST) -> set[str]:
+    for cls in ast.walk(tree):
+        if isinstance(cls, ast.ClassDef) and cls.name == "JobState":
+            return {n.targets[0].id for n in cls.body
+                    if isinstance(n, ast.Assign)
+                    and isinstance(n.targets[0], ast.Name)}
+    return set()
+
+
+def _parse_table(tree: ast.AST) -> Optional[dict[str, set[str]]]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) \
+                and any(isinstance(t, ast.Name) and t.id == "_TRANSITIONS"
+                        for t in node.targets) \
+                and isinstance(node.value, ast.Dict):
+            table: dict[str, set[str]] = {}
+            for k, v in zip(node.value.keys, node.value.values):
+                src = jobstate_member(k) if k is not None else None
+                if src is None:
+                    continue
+                dsts = set()
+                if isinstance(v, (ast.Set, ast.Tuple, ast.List)):
+                    dsts = {m for m in map(jobstate_member, v.elts)
+                            if m is not None}
+                table[src] = dsts
+            return table
+    return None
+
+
+def _parse_terminal(tree: ast.AST) -> set[str]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) \
+                and any(isinstance(t, ast.Name) and t.id == "TERMINAL_STATES"
+                        for t in node.targets):
+            value = node.value
+            if isinstance(value, ast.Call):     # frozenset({...})
+                value = value.args[0] if value.args else None
+            if isinstance(value, (ast.Set, ast.Tuple, ast.List)):
+                return {m for m in map(jobstate_member, value.elts)
+                        if m is not None}
+    return set()
+
+
+def _check_table(sf: SourceFile, out: list[Violation]) -> None:
+    members = _parse_members(sf.tree)
+    table = _parse_table(sf.tree)
+    terminal = _parse_terminal(sf.tree)
+    if table is None or not members:
+        return
+    line = next((n.lineno for n in ast.walk(sf.tree)
+                 if isinstance(n, ast.Assign)
+                 and any(isinstance(t, ast.Name) and t.id == "_TRANSITIONS"
+                         for t in n.targets)), 1)
+    for m in sorted(members - set(table)):
+        out.append(Violation(sf.path, line, CODE_TABLE,
+                             f"JobState.{m} has no _TRANSITIONS row"))
+    for src, dsts in table.items():
+        for d in sorted(dsts - members):
+            out.append(Violation(sf.path, line, CODE_TABLE,
+                                 f"edge {src} -> {d} targets an "
+                                 f"undeclared state"))
+        if src in terminal:
+            for d in sorted(dsts - terminal):
+                out.append(Violation(
+                    sf.path, line, CODE_TABLE,
+                    f"edge {src} -> {d} leaves a terminal state for a "
+                    f"non-terminal one: terminal refinement only"))
+        elif src in members and not dsts:
+            out.append(Violation(
+                sf.path, line, CODE_TABLE,
+                f"non-terminal state {src} has no outgoing edge: jobs "
+                f"strand there forever"))
+    for m in sorted(terminal - members):
+        out.append(Violation(sf.path, line, CODE_TABLE,
+                             f"TERMINAL_STATES names undeclared "
+                             f"state {m}"))
+
+
+def _check_edges(sf: SourceFile, targets: Optional[set[str]],
+                 out: list[Violation]) -> None:
+    privileged = any(sf.endswith(s) for s in PRIVILEGED_SUFFIXES)
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Assign) and not privileged:
+            for t in node.targets:
+                if isinstance(t, ast.Attribute) and t.attr == "state" \
+                        and jobstate_member(node.value) is not None:
+                    out.append(Violation(
+                        sf.path, node.lineno, CODE_EDGE,
+                        f"direct .state = JobState."
+                        f"{jobstate_member(node.value)} assignment "
+                        f"bypasses check_transition; go through the "
+                        f"registry"))
+        if isinstance(node, ast.Call) and call_name(node) == "set_state" \
+                and targets is not None:
+            state = _state_arg(node)
+            member = jobstate_member(state) if state is not None else None
+            if member is not None and member not in targets:
+                out.append(Violation(
+                    sf.path, node.lineno, CODE_EDGE,
+                    f"set_state(JobState.{member}): no edge in "
+                    f"_TRANSITIONS reaches {member}"))
+
+
+def check_project(files: list[SourceFile]) -> list[Violation]:
+    out: list[Violation] = []
+    lifecycle = next((f for f in files if f.endswith("lifecycle.py")), None)
+    targets: Optional[set[str]] = None
+    if lifecycle is not None:
+        _check_table(lifecycle, out)
+        table = _parse_table(lifecycle.tree)
+        if table:
+            targets = set().union(*table.values()) if table else set()
+    for sf in files:
+        if sf is lifecycle:
+            continue
+        _check_edges(sf, targets, out)
+    return out

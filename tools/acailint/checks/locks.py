@@ -1,0 +1,158 @@
+"""ACAI1xx — lock discipline.
+
+ACAI101: a field declared guarded (``self.x = ...  # guarded-by: _lock``
+in ``__init__``) may only be read or written inside a matching
+``with self._lock:`` scope within its class. ``__init__`` itself is
+exempt: construction happens-before publication.
+
+ACAI102: a lock declared with forbidden work
+(``self._lock = RLock()  # acailint: lock(forbid: publish, bare-calls)``)
+must never lexically hold that work inside its ``with`` scope. Tokens:
+
+- ``bare-calls`` — calling a plain name that is not a python builtin
+  (subscriber/handler invocation: the EventBus must call handlers
+  outside its lock or handler-held locks invert order);
+- any other token ``t`` — no call whose attribute chain contains ``t``
+  (``publish`` forbids ``bus.publish(...)`` under the registry lock,
+  ``metadata``/``launch`` forbid store and runner callouts there).
+
+The scheduler's own lock carries no annotation by design: the engine's
+bus is synchronous and re-entrant, so the scheduler deliberately
+publishes under its lock; the ordering contract it must keep is "never
+while holding the *registry* or *bus* lock", which is exactly what the
+annotations on those classes pin.
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+import re
+
+from tools.acailint.core import SourceFile, Violation, attr_chain
+
+CODE_GUARDED = "ACAI101"
+CODE_FORBIDDEN = "ACAI102"
+
+_GUARDED_RE = re.compile(r"guarded-by:\s*([A-Za-z_][A-Za-z0-9_]*)")
+_LOCK_RE = re.compile(r"acailint:\s*lock\(forbid:\s*([^)]*)\)")
+_BUILTINS = frozenset(dir(builtins))
+
+
+def _self_attr_target(node: ast.stmt) -> str | None:
+    """``self.x = ...`` / ``self.x: T = ...`` -> "x"."""
+    target = None
+    if isinstance(node, ast.Assign) and len(node.targets) == 1:
+        target = node.targets[0]
+    elif isinstance(node, ast.AnnAssign):
+        target = node.target
+    if isinstance(target, ast.Attribute) and \
+            isinstance(target.value, ast.Name) and target.value.id == "self":
+        return target.attr
+    return None
+
+
+def _declarations(sf: SourceFile,
+                  cls: ast.ClassDef) -> tuple[dict[str, str],
+                                              dict[str, set[str]]]:
+    """(guarded fields {field: lock}, lock rules {lock: forbid tokens})
+    from the class ``__init__``'s annotated assignments."""
+    guarded: dict[str, str] = {}
+    rules: dict[str, set[str]] = {}
+    init = next((n for n in cls.body
+                 if isinstance(n, ast.FunctionDef) and n.name == "__init__"),
+                None)
+    if init is None:
+        return guarded, rules
+    for node in ast.walk(init):
+        if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+            continue
+        field = _self_attr_target(node)
+        if field is None:
+            continue
+        comment = sf.comment(node.lineno)
+        m = _GUARDED_RE.search(comment)
+        if m:
+            guarded[field] = m.group(1)
+        m = _LOCK_RE.search(comment)
+        if m:
+            rules[field] = {t.strip() for t in m.group(1).split(",")
+                            if t.strip()}
+    return guarded, rules
+
+
+def _with_locks(node: ast.With) -> set[str]:
+    """Lock names acquired by ``with self.<name>:`` items."""
+    out = set()
+    for item in node.items:
+        chain = attr_chain(item.context_expr)
+        if len(chain) == 2 and chain[0] == "self":
+            out.add(chain[1])
+    return out
+
+
+class _MethodScan(ast.NodeVisitor):
+    def __init__(self, sf: SourceFile, guarded: dict[str, str],
+                 rules: dict[str, set[str]], out: list[Violation]):
+        self.sf = sf
+        self.guarded = guarded
+        self.rules = rules
+        self.out = out
+        self.held: set[str] = set()
+
+    def visit_With(self, node: ast.With) -> None:
+        acquired = _with_locks(node) - self.held
+        self.held |= acquired
+        for item in node.items:       # the acquire expression itself runs
+            self.generic_visit(item)  # before the lock is held? no — but
+        for stmt in node.body:        # guarded fields in it are fine to
+            self.visit(stmt)          # treat as held (RLock idiom)
+        self.held -= acquired
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if isinstance(node.value, ast.Name) and node.value.id == "self":
+            lock = self.guarded.get(node.attr)
+            if lock is not None and lock not in self.held:
+                self.out.append(Violation(
+                    self.sf.path, node.lineno, CODE_GUARDED,
+                    f"self.{node.attr} is declared guarded-by {lock} but "
+                    f"is accessed outside 'with self.{lock}:'"))
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        for lock in self.held:
+            tokens = self.rules.get(lock)
+            if not tokens:
+                continue
+            chain = attr_chain(node.func)
+            if isinstance(node.func, ast.Name) and "bare-calls" in tokens \
+                    and node.func.id not in _BUILTINS:
+                self.out.append(Violation(
+                    self.sf.path, node.lineno, CODE_FORBIDDEN,
+                    f"call to {node.func.id}() while holding self.{lock} "
+                    f"(declared no-bare-calls: handlers/callbacks must "
+                    f"run outside this lock)"))
+                continue
+            hit = next((t for t in tokens
+                        if t != "bare-calls" and t in chain), None)
+            if hit is not None:
+                self.out.append(Violation(
+                    self.sf.path, node.lineno, CODE_FORBIDDEN,
+                    f"call through '{hit}' while holding self.{lock} "
+                    f"(declared forbidden under this lock)"))
+        self.generic_visit(node)
+
+
+def check(sf: SourceFile) -> list[Violation]:
+    out: list[Violation] = []
+    for cls in [n for n in ast.walk(sf.tree) if isinstance(n, ast.ClassDef)]:
+        guarded, rules = _declarations(sf, cls)
+        if not guarded and not rules:
+            continue
+        for method in cls.body:
+            if not isinstance(method, ast.FunctionDef) \
+                    or method.name == "__init__":
+                continue
+            scan = _MethodScan(sf, guarded, rules, out)
+            for stmt in method.body:
+                scan.visit(stmt)
+    return out

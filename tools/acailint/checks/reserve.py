@@ -1,0 +1,129 @@
+"""ACAI401 — reserve/release pairing.
+
+Every ``cluster.reserve(...)`` / ``reserve_gang(...)`` call site must
+dominate a release on its exception paths: either
+
+- the call sits inside a ``try`` whose handlers or ``finally`` contain a
+  release-family call — anything whose name contains "release", or a
+  same-file helper that transitively calls one (an unwind helper like
+  ``_abort_launch`` counts through its body) — so a raise after the
+  reservation is taken hands the capacity back; or
+- nothing that can raise (no call, no ``raise``, no ``assert``) follows
+  the reserve in the enclosing function, so there is no exception path
+  to leak on.
+
+An ``except CapacityError`` around a bare reserve is the atomic-failure
+pattern (reserve raised, nothing held, nothing to release) and is fine —
+but only when no later raising statement can strand a *successful*
+reservation, which the second clause checks.
+
+Leaked reservations are permanent phantom capacity: ``used`` never
+drains, admission starves, and the drift only surfaces as the
+``release_underflow`` counters much later — the class PR 7/8's settle
+paths were built to prevent.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.acailint.core import SourceFile, Violation, call_name, functions_of
+
+CODE = "ACAI401"
+
+RESERVE_NAMES = frozenset({"reserve", "reserve_gang"})
+
+
+def _releasing_names(tree: ast.AST) -> frozenset[str]:
+    """Names of functions in this file that transitively reach a
+    release call — an unwind helper counts as release-family at its
+    call sites (fixpoint over same-file call edges)."""
+    bodies = {fn.name: fn for fn in functions_of(tree)}
+    releasing = set()
+    changed = True
+    while changed:
+        changed = False
+        for name, fn in bodies.items():
+            if name in releasing:
+                continue
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call) and \
+                        ("release" in call_name(node)
+                         or call_name(node) in releasing):
+                    releasing.add(name)
+                    changed = True
+                    break
+    return frozenset(releasing)
+
+
+def _is_release_call(node: ast.AST, releasing: frozenset[str]) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    name = call_name(node)
+    return "release" in name or name in releasing
+
+
+def _protecting_try(fn: ast.AST, call: ast.Call,
+                    releasing: frozenset[str]) -> ast.Try | None:
+    """Innermost ``try`` whose *body* lexically contains ``call`` and
+    whose handlers/finally contain a release-family call."""
+    best: ast.Try | None = None
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Try):
+            continue
+        span = (node.body[0].lineno, node.body[-1].end_lineno or 0)
+        if not (span[0] <= call.lineno <= span[1]):
+            continue
+        protected = any(_is_release_call(n, releasing)
+                        for h in node.handlers for n in ast.walk(h))
+        protected = protected or any(_is_release_call(n, releasing)
+                                     for s in node.finalbody
+                                     for n in ast.walk(s))
+        if protected:
+            best = node
+    return best
+
+
+def _raising_after(fn: ast.AST, call: ast.Call) -> int | None:
+    """Line of the first statement after ``call`` (lexically, in the
+    same function) that can raise — a Call, ``raise`` or ``assert``
+    outside the handlers of the try containing the reserve."""
+    handler_spans = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Try) and node.body and \
+                node.body[0].lineno <= call.lineno \
+                <= (node.body[-1].end_lineno or 0):
+            for h in node.handlers:
+                if h.body:
+                    handler_spans.append((h.body[0].lineno,
+                                          h.body[-1].end_lineno or 0))
+    end = call.end_lineno or call.lineno
+    for node in ast.walk(fn):
+        if not isinstance(node, (ast.Call, ast.Raise, ast.Assert)):
+            continue
+        if node.lineno <= end:
+            continue
+        if any(a <= node.lineno <= b for a, b in handler_spans):
+            continue        # the reserve's own failure handler: nothing
+        return node.lineno  # is held when it runs
+    return None
+
+
+def check(sf: SourceFile) -> list[Violation]:
+    out: list[Violation] = []
+    releasing = _releasing_names(sf.tree)
+    for fn in functions_of(sf.tree):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call) \
+                    or call_name(node) not in RESERVE_NAMES:
+                continue
+            if _protecting_try(fn, node, releasing) is not None:
+                continue
+            after = _raising_after(fn, node)
+            if after is not None:
+                out.append(Violation(
+                    sf.path, node.lineno, CODE,
+                    f"{call_name(node)}() is not covered by a "
+                    f"try/except-or-finally that releases: the raising "
+                    f"statement at line {after} would leak the "
+                    f"reservation as phantom capacity"))
+    return out

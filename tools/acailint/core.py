@@ -1,0 +1,186 @@
+"""Shared infrastructure for the acailint checkers.
+
+Every checker consumes :class:`SourceFile` objects (parsed AST + the
+comment map the annotation conventions live in) and yields
+:class:`Violation` records. Suppression happens in one place
+(:func:`apply_suppressions`):
+
+- inline: ``# acailint: disable=ACAI101 -- <justification>`` on the
+  violating line (or on its own line immediately above). A disable
+  without a justification is itself an error (ACAI001) — the point of
+  the suite is that every exception to an invariant is argued for.
+- baseline: a file of ``<path-suffix>:<CODE>`` lines
+  (:func:`load_baseline`); matching violations are dropped. The
+  checked-in baseline for ``core/engine`` must stay empty — new
+  violations get fixed, not recorded.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import tokenize
+from pathlib import Path
+from typing import Iterable, Optional
+
+#: codes emitted by the infrastructure itself (not a checker)
+BAD_SUPPRESSION = "ACAI001"
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+class SourceFile:
+    """One parsed python file: AST, raw lines, and per-line comments."""
+
+    def __init__(self, path: str, text: str):
+        self.path = str(Path(path).as_posix())
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=self.path)
+        self.comments: dict[int, str] = {}
+        try:
+            for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+                if tok.type == tokenize.COMMENT:
+                    self.comments[tok.start[0]] = tok.string
+        except tokenize.TokenError:        # torn file: AST parsed, so the
+            pass                           # comment map is merely partial
+
+    @classmethod
+    def load(cls, path: str | Path) -> "SourceFile":
+        return cls(str(path), Path(path).read_text())
+
+    def comment(self, lineno: int) -> str:
+        return self.comments.get(lineno, "")
+
+    def endswith(self, suffix: str) -> bool:
+        return self.path.endswith(suffix)
+
+
+def parse_disables(sf: SourceFile) -> tuple[dict[int, set[str]],
+                                            list[Violation]]:
+    """Per-line disabled codes from ``# acailint: disable=...`` comments.
+
+    A comment on its own line applies to the next source line as well
+    (so multi-line statements can carry their suppression above). Returns
+    the map plus ACAI001 violations for disables missing a justification.
+    """
+    disabled: dict[int, set[str]] = {}
+    errors: list[Violation] = []
+    for lineno, comment in sf.comments.items():
+        marker = "acailint: disable="
+        if marker not in comment:
+            continue
+        rest = comment.split(marker, 1)[1]
+        codes_part, sep, why = rest.partition("--")
+        codes = {c.strip() for c in codes_part.split(",") if c.strip()}
+        if not sep or not why.strip():
+            errors.append(Violation(
+                sf.path, lineno, BAD_SUPPRESSION,
+                "acailint disable without a justification: write "
+                "'# acailint: disable=CODE -- why this is safe'"))
+            continue
+        own_line = sf.lines[lineno - 1].lstrip().startswith("#") \
+            if lineno <= len(sf.lines) else False
+        targets = [lineno, lineno + 1] if own_line else [lineno]
+        for ln in targets:
+            disabled.setdefault(ln, set()).update(codes)
+    return disabled, errors
+
+
+def apply_suppressions(files: Iterable[SourceFile],
+                       violations: list[Violation],
+                       baseline: Optional[set[tuple[str, str]]] = None
+                       ) -> list[Violation]:
+    """Filter inline-disabled and baselined violations; surface malformed
+    suppression comments as ACAI001."""
+    by_path: dict[str, dict[int, set[str]]] = {}
+    out: list[Violation] = []
+    for sf in files:
+        disabled, errors = parse_disables(sf)
+        by_path[sf.path] = disabled
+        out.extend(errors)
+    for v in violations:
+        codes = by_path.get(v.path, {}).get(v.line, set())
+        if v.code in codes:
+            continue
+        if baseline and any(v.path.endswith(suffix) and v.code == code
+                            for suffix, code in baseline):
+            continue
+        out.append(v)
+    out.sort(key=lambda v: (v.path, v.line, v.code))
+    return out
+
+
+def load_baseline(path: str | Path) -> set[tuple[str, str]]:
+    """Baseline entries: one ``<path-suffix>:<CODE>`` per line; blank
+    lines and ``#`` comments ignored."""
+    entries: set[tuple[str, str]] = set()
+    p = Path(path)
+    if not p.exists():
+        return entries
+    for raw in p.read_text().splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        suffix, _, code = line.rpartition(":")
+        if suffix and code:
+            entries.add((suffix, code))
+    return entries
+
+
+# -- small AST helpers shared by checkers --------------------------------
+def attr_chain(node: ast.AST) -> list[str]:
+    """``self.registry.set_state`` -> ["self", "registry", "set_state"];
+    empty when the expression is not a plain name/attribute chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return list(reversed(parts))
+    return []
+
+
+def call_name(call: ast.Call) -> str:
+    """Trailing name of the called expression (``x.y.publish`` ->
+    ``publish``; bare ``publish(...)`` -> ``publish``)."""
+    func = call.func
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def const_str(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def jobstate_member(node: ast.AST) -> Optional[str]:
+    """``JobState.FINISHED`` (or ``lifecycle.JobState.FINISHED``) -> the
+    member name; None for anything else."""
+    chain = attr_chain(node)
+    if len(chain) >= 2 and chain[-2] == "JobState":
+        return chain[-1]
+    return None
+
+
+def functions_of(tree: ast.AST) -> list[ast.FunctionDef]:
+    return [n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+
+def classes_of(tree: ast.AST) -> list[ast.ClassDef]:
+    return [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]

@@ -1,0 +1,113 @@
+"""``--explain CODE``: the long-form rationale behind each invariant.
+
+The one-line lint message says *what*; this says *why* — which bug
+class the invariant pins and what the approved fix shapes are. The
+full catalogue with historical context lives in ``docs/invariants.md``.
+"""
+from __future__ import annotations
+
+EXPLANATIONS = {
+    "ACAI001": """\
+Malformed suppression.
+
+Every '# acailint: disable=CODE' must carry ' -- <justification>'.
+Suppressions are exceptions to engine invariants; an exception nobody
+argued for is indistinguishable from a bug someone silenced. Write
+    # acailint: disable=ACAI101 -- snapshot read, staleness is benign
+or fix the violation instead.""",
+    "ACAI101": """\
+Guarded field accessed outside its lock.
+
+Fields annotated '# guarded-by: <lock>' on their __init__ assignment
+may only be touched inside 'with self.<lock>:' in that class. The
+engine's monitor aggregates (utilization sums, peak, samples) are
+written by bus handler threads; an unguarded read can observe a torn
+update (sum bumped, count not) and report impossible utilization.
+Fix: take the lock, or expose a locked accessor for cross-module
+readers. __init__ is exempt (construction happens-before publication).""",
+    "ACAI102": """\
+Forbidden work under an annotated lock.
+
+A lock annotated '# acailint: lock(forbid: ...)' must never lexically
+contain the listed work in its 'with' scope:
+  - 'bare-calls': no plain-name calls (handler/callback invocation) —
+    the EventBus must invoke subscribers outside its lock, or a handler
+    that takes the scheduler lock inverts the lock order and deadlocks;
+  - 'publish' / 'metadata' / 'launch': no call through that attribute —
+    publishing or hitting the store/runner under the registry lock
+    nests foreign locks under it.
+Fix: snapshot under the lock, do the work after releasing.""",
+    "ACAI201": """\
+Terminal set_state without expect_epoch.
+
+Every set_state(..., JobState.<terminal>) must pass expect_epoch= so
+the write commits only for the incarnation it belongs to. Preemption
+and retry bump Job.epoch; a worker from the previous incarnation that
+reports late would otherwise terminal-ize the live rebirth (the
+zombie-incarnation bug). expect_epoch=job.epoch read under the same
+lock that bumps epochs is always safe — it pins 'this incarnation'.""",
+    "ACAI202": """\
+Terminal container_status event without an epoch stamp.
+
+Monitor handlers drop container_status events whose 'epoch' is older
+than the registry's current epoch. A terminal message published
+without the stamp can never be recognized as stale: a KILLED event
+from epoch 0 would mark the epoch-1 rebirth terminal and wake
+wait_terminal() on a job that is actually running. Stamp the message
+('"epoch": job.epoch' in the literal, or msg["epoch"] = ... before
+publish).""",
+    "ACAI301": """\
+Dataclass field missing from the durable codec.
+
+Every field of JobSpec/Job/GangSpec/RetryPolicy/FaultPlan must appear
+as a key in both the encode_* and decode_* half of durable/codec.py.
+A field added to the dataclass but not the codec is silent data loss:
+the engine runs fine until the first crash, then recovery rebuilds
+jobs without it. In-memory-only fields are declared with
+'# acailint: runtime-only' on their declaration line — which also
+excludes them from the runtime round-trip test.""",
+    "ACAI302": """\
+Registry mutation without a journal hook.
+
+Every JobRegistry method that mutates durable job state (state/epoch
+assignment, self._jobs stores) must go through a self.journal hook —
+the write-ahead record is what makes the mutation survive a crash.
+Recovery wraps its rebuild in journal.paused(), so journaling inside
+adopt/force_state is a no-op there and never double-records.""",
+    "ACAI401": """\
+Reservation not release-protected on exception paths.
+
+A cluster.reserve()/reserve_gang() call followed by anything that can
+raise must sit inside a try whose handlers or finally release the
+hold. reserve raising is safe (atomic: nothing held); reserve
+*succeeding* and a later launch step raising leaks the hold as
+phantom capacity — 'used' never drains, admission starves, and the
+drift only surfaces as release_underflow counters much later.""",
+    "ACAI501": """\
+State-machine edge outside the declared table.
+
+Direct '.state = JobState.X' assignment is allowed only in registry.py
+(the implementation) and durable/recovery.py (replay + privileged
+epoch-rebirth requeue); anywhere else it bypasses check_transition and
+the journal. And a set_state() target must be reachable: some edge in
+lifecycle._TRANSITIONS must point at it (SUBMITTED, for example, is an
+origin only — no edge re-enters it).""",
+    "ACAI502": """\
+Lifecycle table not closed.
+
+The declared _TRANSITIONS table must satisfy: every JobState member
+has a row; every edge endpoint is a declared member; edges out of
+TERMINAL_STATES stay inside TERMINAL_STATES (terminal refinement only,
+e.g. FAILED -> QUARANTINED); every non-terminal state has at least one
+outgoing edge (no strand states); TERMINAL_STATES only names members.
+These keep the table the single source of truth the rest of the engine
+(and ACAI501) checks against.""",
+}
+
+
+def explain(code: str) -> str:
+    text = EXPLANATIONS.get(code.upper())
+    if text is None:
+        known = ", ".join(sorted(EXPLANATIONS))
+        return f"unknown code {code!r}; known codes: {known}"
+    return f"{code.upper()}\n\n{text}"
